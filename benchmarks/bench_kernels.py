@@ -1,0 +1,103 @@
+"""Fig. 11 / Fig. 12 analogue: kernel-level sensitivity sweeps.
+
+The paper varies #IUs (saturates at 4) and S-Cache bandwidth (saturates
+~8 elem/cycle). The TPU analogues:
+  batch sweep  — batched-kernel width == number of concurrent IUs
+  tile sweep   — VMEM tile footprint == S-Cache slot/bandwidth provisioning
+  skip stats   — tile-overlap schedule efficiency (the S-Cache prefetcher):
+                 fraction of B-tiles the schedule avoids touching
+plus the merge-vs-bitmap crossover of the beyond-paper dense path.
+
+Wall-clock uses the XLA paths (interpret-mode Pallas is a correctness
+vehicle, not a perf one); schedule stats are structural (exact tile counts).
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.batch import batch_inter_count
+from repro.core.stream import SENTINEL
+from repro.kernels.bitmap import bitmap_and_count_ref, keys_to_bitmap
+from repro.kernels.intersect import TB, tile_schedule
+
+RNG = np.random.default_rng(3)
+
+
+def _rows(batch, cap, hi, density=None):
+    out = np.full((batch, cap), SENTINEL, np.int32)
+    for i in range(batch):
+        n = int(RNG.integers(cap // 2, cap)) if density is None else \
+            min(cap, max(1, int(hi * density)))
+        out[i, :n] = np.sort(RNG.choice(hi, size=n, replace=False))
+    return jnp.asarray(out)
+
+
+def _bench(fn, *args, iters=20):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.time()
+    for _ in range(iters):
+        r = fn(*args)
+    (r[0] if isinstance(r, tuple) else r).block_until_ready()
+    return (time.time() - t0) / iters
+
+
+def batch_sweep():
+    """IU-count analogue: throughput vs batched width."""
+    rows = []
+    cap, hi = 512, 100_000
+    for batch in (1, 2, 4, 8, 16, 64, 256):
+        a, b = _rows(batch, cap, hi), _rows(batch, cap, hi)
+        dt = _bench(batch_inter_count, a, b)
+        rows.append(dict(batch=batch, us_per_pair=1e6 * dt / batch))
+        print(f"[kernels] batch={batch:4d}  {1e6*dt/batch:9.2f} us/pair",
+              flush=True)
+    return rows
+
+
+def tile_skip_stats():
+    """S-Cache-prefetch analogue: % of B tiles the overlap schedule skips."""
+    rows = []
+    for hi, label in ((4_000, "dense keys"), (400_000, "sparse keys")):
+        a, b = _rows(64, 512, hi), _rows(64, 2048, hi)
+        bounds = jnp.full((64,), SENTINEL, jnp.int32)
+        lo, nv = tile_schedule(a, b, bounds)
+        total = 64 * (512 // 128) * (2048 // TB)   # naive all-pairs visits
+        visited = int(np.asarray(nv).sum())
+        frac = visited / total
+        rows.append(dict(keyspace=label, visited_frac=round(frac, 4)))
+        print(f"[kernels] schedule {label:12s}: visits {frac*100:5.1f}% of "
+              f"naive tile pairs", flush=True)
+    return rows
+
+
+def bitmap_crossover():
+    """merge vs bitmap: crossover density of the beyond-paper path."""
+    rows = []
+    for density in (0.01, 0.05, 0.1, 0.2, 0.4):
+        hi = 8192
+        a = _rows(128, 1024, hi, density=density * hi / 1024)
+        b = _rows(128, 1024, hi, density=density * hi / 1024)
+        t_merge = _bench(batch_inter_count, a, b)
+        wa, wb = keys_to_bitmap(a, hi), keys_to_bitmap(b, hi)
+        t_bitmap = _bench(bitmap_and_count_ref, wa, wb)
+        rows.append(dict(density=density, merge_us=1e6 * t_merge,
+                         bitmap_us=1e6 * t_bitmap,
+                         winner="bitmap" if t_bitmap < t_merge else "merge"))
+        print(f"[kernels] density={density:4.2f} merge={1e6*t_merge:8.1f}us "
+              f"bitmap={1e6*t_bitmap:8.1f}us -> "
+              f"{'bitmap' if t_bitmap < t_merge else 'merge'}", flush=True)
+    return rows
+
+
+def run(quick: bool = True):
+    return {"batch_sweep": batch_sweep(),
+            "tile_skip": tile_skip_stats(),
+            "bitmap_crossover": bitmap_crossover()}
+
+
+if __name__ == "__main__":
+    run()

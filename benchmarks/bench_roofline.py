@@ -1,0 +1,66 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json and prints the per-cell three-term roofline
++ dominant bottleneck + useful-flops ratio. Run the sweep first:
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load(dirname=DRYRUN_DIR):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def table(rows, mesh="single"):
+    out = []
+    hdr = (f"{'arch':24s} {'shape':11s} {'comp_s':>9} {'mem_s':>9} "
+           f"{'coll_s':>9} {'dominant':>10} {'roofl%':>7} {'useful%':>8} "
+           f"{'peakGB':>7} fit")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("status") == "skipped":
+            print(f"{r['arch']:24s} {r['shape']:11s} "
+                  f"{'skipped (' + r['reason'][:40] + '...)'}")
+            continue
+        if r.get("status") != "ok":
+            print(f"{r['arch']:24s} {r['shape']:11s} ERROR {r.get('error','')[:60]}")
+            continue
+        roof = r["roofline"]
+        mem = r["scan_measure"]["memory"]
+        print(f"{r['arch']:24s} {r['shape']:11s} "
+              f"{roof['compute_s']:9.4f} {roof['memory_s']:9.4f} "
+              f"{roof['collective_s']:9.4f} {roof['dominant'][:-2]:>10} "
+              f"{100*roof['roofline_fraction']:6.1f}% "
+              f"{100*roof['useful_flops_ratio']:7.1f}% "
+              f"{mem['peak_bytes']/1e9:7.2f} {r['fits_hbm']}")
+        out.append(r)
+    return out
+
+
+def run(quick: bool = True):
+    rows = load()
+    if not rows:
+        print("[roofline] no dry-run artifacts yet — run the sweep first")
+        return []
+    print("\n== single pod (16x16 = 256 chips) ==")
+    table(rows, "single")
+    print("\n== multi pod (2x16x16 = 512 chips) ==")
+    table(rows, "multi")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Scenario: mine all seven paper applications over a paper-twin dataset,
+comparing the stream engine against both baselines, plus FSM with the
+correct (MNI) vs GRAMER's broken (count) support.
+
+  PYTHONPATH=src python examples/mine_patterns.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import time
+
+from repro.graph import get_dataset
+from repro.graph.datasets import dataset_stats
+from repro.mining import apps, baseline, exhaustive
+from repro.mining.fsm import fsm, random_labels, sfsm
+
+g = get_dataset("email-eu-core")
+print("[mine] email-eu-core twin:", dataset_stats(g))
+
+for name, eng, base in [
+    ("triangle", lambda: apps.triangle_count(g), lambda: baseline.triangle_count(g)),
+    ("3-chain(ind)", lambda: apps.three_chain_count(g, induced=True),
+     lambda: baseline.three_chain_count(g, induced=True)),
+    ("tailed-tri", lambda: apps.tailed_triangle_count(g),
+     lambda: baseline.tailed_triangle_count(g)),
+    ("3-motif", lambda: apps.three_motif(g), lambda: baseline.three_motif(g)),
+    ("4-clique", lambda: apps.clique_count(g, 4), lambda: baseline.clique_count(g, 4)),
+    ("5-clique", lambda: apps.clique_count(g, 5), lambda: baseline.clique_count(g, 5)),
+]:
+    t0 = time.time(); r = eng(); t1 = time.time() - t0
+    t0 = time.time(); rb = base(); t2 = time.time() - t0
+    assert r == rb
+    print(f"[mine] {name:12s} = {r!s:>14}  engine {t1:6.2f}s | scalar {t2:6.2f}s")
+
+t0 = time.time()
+ex = exhaustive.exhaustive_count(g, "triangle")
+print(f"[mine] GRAMER-style exhaustive triangle = {ex} "
+      f"({time.time()-t0:.2f}s — the method the paper shows losing)")
+
+labels = random_labels(g.num_vertices, 4, seed=7)
+t0 = time.time()
+freq = fsm(g, labels, min_support=400)
+print(f"[mine] FSM (MNI support>=400): {len(freq)} frequent patterns "
+      f"({time.time()-t0:.1f}s)")
+wrong = sfsm(g, labels, min_support=400)
+print(f"[mine] sFSM (GRAMER count-support): {len(wrong)} patterns — "
+      "violates downward closure (§VI-B)")

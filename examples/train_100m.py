@@ -1,0 +1,73 @@
+"""End-to-end driver: train a ~100M-param qwen3-style model for a few
+hundred steps on the synthetic bigram corpus and watch the loss fall well
+below the unigram entropy — the full production loop (sharded init, pjit'd
+step, checkpointing, NaN guard) on whatever devices exist.
+
+  PYTHONPATH=src python examples/train_100m.py [--steps 300]
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import DEFAULT_RULES
+from repro.launch.mesh import make_host_mesh
+from repro.models.transformer import Model, ModelConfig, param_count
+from repro.train.checkpoint import CheckpointManager
+from repro.train.data import SyntheticLMData, input_spec_batch
+from repro.train.optimizer import OptConfig, adamw_init
+from repro.train.train_step import jit_train_step
+from repro.distributed.fault_tolerance import StepGuard
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default="/tmp/ckpt_100m")
+    args = ap.parse_args()
+
+    cfg = ModelConfig(name="qwen3-100m", num_layers=10, d_model=768,
+                      num_heads=12, num_kv_heads=4, head_dim=64, d_ff=2560,
+                      vocab_size=32768, qk_norm=True, tie_embeddings=True,
+                      kv_repeat=2)
+    model = Model(cfg)
+    print(f"[100m] params: {param_count(model)/1e6:.1f}M")
+    mesh = make_host_mesh()
+    data = SyntheticLMData(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                           global_batch=args.batch, seed=1, noise=0.05)
+    opt_cfg = OptConfig(lr=1e-3)
+    spec = input_spec_batch(cfg.vocab_size, args.seq, args.batch)
+    step_fn, (p_shard, o_shard, shapes, _) = jit_train_step(
+        model, mesh, DEFAULT_RULES, opt_cfg, spec, total_steps=args.steps)
+    with mesh:
+        params = jax.jit(lambda k: model.init(k)[0],
+                         out_shardings=p_shard)(jax.random.PRNGKey(0))
+        opt = jax.jit(lambda p: adamw_init(p, opt_cfg),
+                      out_shardings=o_shard)(params)
+    ckpt = CheckpointManager(args.ckpt)
+    guard = StepGuard()
+    unigram_entropy = math.log(cfg.vocab_size)
+    for step in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(step).items()}
+        params2, opt2, metrics = step_fn(params, opt, batch, jnp.int32(step))
+        metrics = jax.device_get(metrics)
+        if guard.ok(metrics):
+            params, opt = params2, opt2
+        if step % 25 == 0 or step == args.steps - 1:
+            print(f"[100m] step {step:4d} loss={metrics['loss']:.4f} "
+                  f"(unigram entropy {unigram_entropy:.2f})", flush=True)
+        if (step + 1) % 100 == 0:
+            ckpt.save(step, params, opt, data.state())
+    final = float(metrics["loss"])
+    print(f"[100m] final loss {final:.3f} vs unigram {unigram_entropy:.2f} "
+          f"-> {'LEARNED structure' if final < unigram_entropy - 1 else 'check hyperparams'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Render the §Dry-run / §Roofline markdown tables from dry-run artifacts.
+
+  python scripts/render_experiments.py [--dir experiments/dryrun] [--mesh single]
+"""
+import argparse
+import glob
+import json
+import os
+
+
+def load(d):
+    rows = {}
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        r = json.load(open(f))
+        rows[(r["arch"], r["shape"], r["mesh"])] = r
+    return rows
+
+
+def fmt(rows, mesh):
+    out = ["| arch | shape | compute_s | memory_s | collective_s | dominant | "
+           "roofline% | useful% | peak GB/chip | fits 16GB |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for (a, s, m), r in sorted(rows.items()):
+        if m != mesh:
+            continue
+        if r["status"] == "skipped":
+            out.append(f"| {a} | {s} | — | — | — | skip | — | — | — | n/a |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {a} | {s} | ERR | | | | | | | |")
+            continue
+        roof = r["roofline"]
+        mem = r["scan_measure"]["memory"]
+        out.append(
+            f"| {a} | {s} | {roof['compute_s']:.3f} | {roof['memory_s']:.3f} "
+            f"| {roof['collective_s']:.3f} | {roof['dominant'][:-2]} "
+            f"| {100*roof['roofline_fraction']:.1f}% "
+            f"| {100*roof['useful_flops_ratio']:.1f}% "
+            f"| {mem['peak_bytes']/1e9:.2f} | {r['fits_hbm']} |")
+    return "\n".join(out)
+
+
+def compare(base_dir, new_dir, cells):
+    b, n = load(base_dir), load(new_dir)
+    out = ["| cell | metric | baseline | optimized | Δ |", "|---|---|---|---|---|"]
+    for key in cells:
+        rb, rn = b.get(key), n.get(key)
+        if not rb or not rn or rb.get("status") != "ok" or rn.get("status") != "ok":
+            continue
+        for metric, get in [
+            ("dominant-term s", lambda r: max(r["roofline"]["compute_s"],
+                                              r["roofline"]["memory_s"],
+                                              r["roofline"]["collective_s"])),
+            ("memory_s", lambda r: r["roofline"]["memory_s"]),
+            ("collective_s", lambda r: r["roofline"]["collective_s"]),
+            ("peak GB", lambda r: r["scan_measure"]["memory"]["peak_bytes"] / 1e9),
+            ("roofline %", lambda r: 100 * r["roofline"]["roofline_fraction"]),
+        ]:
+            vb, vn = get(rb), get(rn)
+            d = (vn - vb) / vb * 100 if vb else 0
+            out.append(f"| {key[0]} {key[1]} {key[2]} | {metric} | {vb:.3f} "
+                       f"| {vn:.3f} | {d:+.1f}% |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--baseline", default="experiments/dryrun_baseline")
+    args = ap.parse_args()
+    rows = load(args.dir)
+    print("## single pod (16x16)\n")
+    print(fmt(rows, "single"))
+    print("\n## multi pod (2x16x16)\n")
+    print(fmt(rows, "multi"))

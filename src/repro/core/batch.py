@@ -1,0 +1,98 @@
+"""Batched stream ops — the paper's "4 parallel IUs" as data parallelism.
+
+Rows are sentinel-padded sorted int32 matrices (B, cap). ``bounds`` is a
+per-row exclusive upper bound (SENTINEL = unbounded), realising the R3
+early-termination operand per lane. These jnp forms are the semantic
+reference and the XLA:CPU fast path; ``repro.kernels.ops`` exposes identical
+signatures backed by Pallas TPU kernels and is tested to agree exactly.
+
+Implementation note: membership is a vmapped binary search
+(``jnp.searchsorted``) — O(capA · log capB) per row with no data-dependent
+branches, which is what the VPU wants. The Pallas path instead uses all-pairs
+tile compare with tile skipping (see kernels/intersect.py); both orders
+agree because keys are strictly sorted sets.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .stream import SENTINEL
+
+
+def _row_membership(a_row: jax.Array, b_row: jax.Array) -> jax.Array:
+    idx = jnp.searchsorted(b_row, a_row)
+    hit = b_row[jnp.clip(idx, 0, b_row.shape[0] - 1)] == a_row
+    return hit & (a_row != SENTINEL)
+
+
+_membership = jax.vmap(_row_membership)
+
+
+def _bounds(rows_a: jax.Array, bounds) -> jax.Array:
+    if bounds is None:
+        return jnp.full((rows_a.shape[0],), SENTINEL, jnp.int32)
+    return jnp.asarray(bounds, jnp.int32)
+
+
+@jax.jit
+def batch_inter_count(rows_a: jax.Array, rows_b: jax.Array, bounds=None) -> jax.Array:
+    """counts[i] = |{k in A_i ∩ B_i : k < bounds[i]}| — batched S_INTER.C."""
+    ub = _bounds(rows_a, bounds)
+    keep = _membership(rows_a, rows_b) & (rows_a < ub[:, None])
+    return jnp.sum(keep, axis=1, dtype=jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("out_cap",))
+def batch_inter(rows_a: jax.Array, rows_b: jax.Array, bounds=None,
+                out_cap: int | None = None):
+    """Batched S_INTER. Returns (rows, counts) with rows (B, out_cap).
+
+    out_cap defaults to min(capA, capB) — the paper's §IV-D dependency bound
+    reused to size the output statically.
+    """
+    ub = _bounds(rows_a, bounds)
+    keep = _membership(rows_a, rows_b) & (rows_a < ub[:, None])
+    cap = out_cap or min(rows_a.shape[1], rows_b.shape[1])
+    masked = jnp.where(keep, rows_a, SENTINEL)
+    rows = jnp.sort(masked, axis=1)[:, :cap]
+    return rows, jnp.sum(keep, axis=1, dtype=jnp.int32)
+
+
+@jax.jit
+def batch_sub_count(rows_a: jax.Array, rows_b: jax.Array, bounds=None) -> jax.Array:
+    """counts[i] = |{k in A_i \\ B_i : k < bounds[i]}| — batched S_SUB.C."""
+    ub = _bounds(rows_a, bounds)
+    keep = (~_membership(rows_a, rows_b)) & (rows_a != SENTINEL) & (rows_a < ub[:, None])
+    return jnp.sum(keep, axis=1, dtype=jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("out_cap",))
+def batch_sub(rows_a: jax.Array, rows_b: jax.Array, bounds=None,
+              out_cap: int | None = None):
+    """Batched S_SUB. Returns (rows, counts), rows (B, out_cap or capA)."""
+    ub = _bounds(rows_a, bounds)
+    keep = (~_membership(rows_a, rows_b)) & (rows_a != SENTINEL) & (rows_a < ub[:, None])
+    cap = out_cap or rows_a.shape[1]
+    masked = jnp.where(keep, rows_a, SENTINEL)
+    rows = jnp.sort(masked, axis=1)[:, :cap]
+    return rows, jnp.sum(keep, axis=1, dtype=jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("op",))
+def batch_vinter(rows_a, vals_a, rows_b, vals_b, op: str = "mac") -> jax.Array:
+    """Batched S_VINTER: per-row reduce over value pairs of intersected keys."""
+    idx = jnp.clip(jax.vmap(jnp.searchsorted)(rows_b, rows_a), 0, rows_b.shape[1] - 1)
+    found = (jnp.take_along_axis(rows_b, idx, axis=1) == rows_a) & (rows_a != SENTINEL)
+    vb = jnp.take_along_axis(vals_b, idx, axis=1)
+    if op == "mac":
+        terms = vals_a * vb
+    elif op == "max":
+        terms = jnp.maximum(vals_a, vb)
+    elif op == "min":
+        terms = jnp.minimum(vals_a, vb)
+    else:
+        raise ValueError(f"unknown SVPU op {op!r}")
+    return jnp.sum(jnp.where(found, terms, 0.0), axis=1, dtype=jnp.float32)

@@ -1,0 +1,143 @@
+"""IntersectX stream ISA (Table I of the paper) as composable JAX ops.
+
+Every instruction becomes a pure, jit-able function on ``Stream`` pytrees with
+*static shapes*: the paper's dependency-tracking property |A∩B| <= min(|A|,|B|)
+(§IV-D) sizes the output buffers, so XLA sees fixed capacities while lengths
+stay dynamic.
+
+Bound semantics (the R3 operand, §III-B): results contain only keys strictly
+below ``bound``; ``bound=None`` (the paper's -1) means unbounded — we pass
+SENTINEL so there is a single code path. Early termination on TPU is realised
+at the kernel level by skipping out-of-bound VMEM tiles (see
+``repro.kernels.intersect``); at the ISA level bounds are masks.
+
+These jnp implementations are the *semantic reference* (and the fast XLA:CPU
+path). ``repro.kernels.ops`` provides the Pallas TPU path with identical
+signatures; tests assert they agree element-for-element.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .stream import SENTINEL, Stream
+
+# re-export for callers
+stream_read = None  # set below to avoid circular docs
+
+
+def _membership(a_keys: jax.Array, b_keys: jax.Array) -> jax.Array:
+    """found[i] = a_keys[i] in b_keys (both sorted, sentinel-padded)."""
+    idx = jnp.searchsorted(b_keys, a_keys)
+    hit = b_keys[jnp.clip(idx, 0, b_keys.shape[0] - 1)] == a_keys
+    return hit & (a_keys != SENTINEL)
+
+
+def _compact(keys: jax.Array, keep: jax.Array, out_cap: int) -> tuple[jax.Array, jax.Array]:
+    """Stable-compact kept keys to the front, sentinel-pad; returns (keys, count).
+
+    Sorting keeps order because kept keys are already ascending and dropped
+    slots become SENTINEL (> every valid key).
+    """
+    masked = jnp.where(keep, keys, SENTINEL)
+    packed = jnp.sort(masked)[:out_cap]
+    return packed, jnp.sum(keep, dtype=jnp.int32)
+
+
+def _bound_or_sentinel(bound) -> jax.Array:
+    if bound is None:
+        return jnp.asarray(SENTINEL, jnp.int32)
+    return jnp.asarray(bound, jnp.int32)
+
+
+# ----------------------------------------------------------------------------
+# S_INTER / S_INTER.C
+# ----------------------------------------------------------------------------
+
+def s_inter(a: Stream, b: Stream, bound=None) -> Stream:
+    """S_INTER: out = {k in A ∩ B : k < bound}, capacity = min(capA, capB)."""
+    ub = _bound_or_sentinel(bound)
+    keep = _membership(a.keys, b.keys) & (a.keys < ub)
+    out_cap = min(a.capacity, b.capacity)
+    keys, count = _compact(a.keys, keep, out_cap)
+    return Stream(keys=keys, length=count)
+
+
+def s_inter_c(a: Stream, b: Stream, bound=None) -> jax.Array:
+    """S_INTER.C: |{k in A ∩ B : k < bound}| (count only, no output stream)."""
+    ub = _bound_or_sentinel(bound)
+    keep = _membership(a.keys, b.keys) & (a.keys < ub)
+    return jnp.sum(keep, dtype=jnp.int32)
+
+
+# ----------------------------------------------------------------------------
+# S_SUB / S_SUB.C
+# ----------------------------------------------------------------------------
+
+def s_sub(a: Stream, b: Stream, bound=None) -> Stream:
+    """S_SUB: out = {k in A \\ B : k < bound}, capacity = capA."""
+    ub = _bound_or_sentinel(bound)
+    keep = (~_membership(a.keys, b.keys)) & (a.keys != SENTINEL) & (a.keys < ub)
+    keys, count = _compact(a.keys, keep, a.capacity)
+    return Stream(keys=keys, length=count)
+
+
+def s_sub_c(a: Stream, b: Stream, bound=None) -> jax.Array:
+    """S_SUB.C: |{k in A \\ B : k < bound}|."""
+    ub = _bound_or_sentinel(bound)
+    keep = (~_membership(a.keys, b.keys)) & (a.keys != SENTINEL) & (a.keys < ub)
+    return jnp.sum(keep, dtype=jnp.int32)
+
+
+# ----------------------------------------------------------------------------
+# S_VINTER — sparse computation on values (SVPU, §IV-E)
+# ----------------------------------------------------------------------------
+
+VINTER_OPS = ("mac", "max", "min")
+
+
+@partial(jax.jit, static_argnames=("op",))
+def s_vinter(a: Stream, b: Stream, op: str = "mac") -> jax.Array:
+    """S_VINTER: intersect keys, reduce over aligned value pairs.
+
+    op='mac' : Σ va·vb   (sparse dot product)
+    op='max' : Σ max(va, vb)
+    op='min' : Σ min(va, vb)
+    """
+    if a.values is None or b.values is None:
+        raise TypeError("S_VINTER requires (key,value) streams (paper: exception)")
+    if op not in VINTER_OPS:
+        raise ValueError(f"unknown SVPU op {op!r}; supported: {VINTER_OPS}")
+    idx = jnp.clip(jnp.searchsorted(b.keys, a.keys), 0, b.capacity - 1)
+    found = (b.keys[idx] == a.keys) & (a.keys != SENTINEL)
+    va = a.values
+    vb = b.values[idx]
+    if op == "mac":
+        terms = va * vb
+    elif op == "max":
+        terms = jnp.maximum(va, vb)
+    else:
+        terms = jnp.minimum(va, vb)
+    return jnp.sum(jnp.where(found, terms, 0.0), dtype=jnp.float32)
+
+
+# ----------------------------------------------------------------------------
+# S_FETCH — stream element access
+# ----------------------------------------------------------------------------
+
+def s_fetch(s: Stream, offset) -> jax.Array:
+    """S_FETCH: s.keys[offset], or SENTINEL ("EOS") past the end."""
+    offset = jnp.asarray(offset, jnp.int32)
+    key = s.keys[jnp.clip(offset, 0, s.capacity - 1)]
+    return jnp.where(offset < s.length, key, SENTINEL)
+
+
+# ----------------------------------------------------------------------------
+# derived helpers used across mining apps
+# ----------------------------------------------------------------------------
+
+def s_union_count(a: Stream, b: Stream) -> jax.Array:
+    """|A ∪ B| = |A| + |B| - |A ∩ B| (not a paper instruction; test invariant)."""
+    return a.length + b.length - s_inter_c(a, b)

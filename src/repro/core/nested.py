@@ -1,0 +1,38 @@
+"""S_NESTINTER — the paper's CISC nested-intersection instruction (§III-B, §IV-F).
+
+Semantics: given key stream S = [s_0..s_k] over a CSR graph loaded with
+S_CSR,    C = Σ_i |S ∩ N(s_i)|.
+
+The paper's hardware translates this into a µop sequence (S_READ/S_INTER.C/
+S_FREE per key) buffered in a translation buffer. On TPU the translation is
+*static*: gather the neighbor rows of every key of S (one vectorised gather
+= the translator's load-queue traffic) and run one batched intersection
+count against S. Degree bucketing bounds padding waste — the analogue of the
+translation buffer never stalling on over-long streams.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .batch import batch_inter_count
+from .stream import SENTINEL, Stream, round_capacity
+
+
+def s_nestinter(g, s: Stream, cap: int | None = None,
+                bound_by_key: bool = False) -> jax.Array:
+    """C = Σ_{i<len(S)} |S ∩ N(s_i)| (optionally bounded by s_i per key).
+
+    ``bound_by_key=True`` is a beyond-paper extension: each inner intersection
+    is bounded by its own key (counts only common neighbors < s_i), which is
+    the inner loop of symmetry-broken clique counting.
+    """
+    from repro.graph.csr import padded_rows  # deferred: graph layer sits above core
+    cap = round_capacity(cap if cap is not None else g.max_degree)
+    rows, _ = padded_rows(g, s.keys, cap)           # (capS, cap) — SENTINEL keys
+    valid = s.keys != SENTINEL                      # gather of SENTINEL key is garbage
+    rows = jnp.where(valid[:, None], rows, SENTINEL)
+    bounds = s.keys if bound_by_key else None
+    a = jnp.broadcast_to(s.keys[None, :], (rows.shape[0], s.capacity))
+    counts = batch_inter_count(a, rows, bounds)
+    return jnp.sum(jnp.where(valid, counts, 0), dtype=jnp.int64)

@@ -1,0 +1,141 @@
+"""Stream: the paper's first-class sparse-vector data type, as a JAX pytree.
+
+A stream is a sorted int32 key array of *static capacity*, padded with
+``SENTINEL`` (2^31-1), plus a live length. (key,value) streams carry a values
+array aligned with keys. All ISA ops (``repro.core.isa``) preserve the
+invariants below, which are enforced by property tests:
+
+  I1  keys[:length] strictly increasing (edge lists / sparse indices are sets)
+  I2  keys[length:] == SENTINEL
+  I3  0 <= length <= capacity
+  I4  capacity % LANE == 0  (TPU lane alignment; the paper's 64-key S-Cache
+      slot becomes a 128-key VMEM tile)
+
+The paper's Stream Mapping Table (SMT) tracked stream-ID -> stream-register
+mappings at decode time; in an AOT-compiled dataflow program that bookkeeping
+is XLA buffer assignment. ``StreamTable`` keeps the *programming model*
+(Table II handles with define/active bits) for the API layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SENTINEL = np.int32(np.iinfo(np.int32).max)  # 2147483647, "End Of Stream"
+LANE = 128  # TPU lane width; minimum stream capacity granule
+
+
+def round_capacity(n: int) -> int:
+    """Smallest multiple of LANE >= max(n, 1)."""
+    return max(LANE, ((int(n) + LANE - 1) // LANE) * LANE)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Stream:
+    """A key stream or (key,value) stream (values is None for key streams)."""
+
+    keys: jax.Array                     # (capacity,) int32, sorted, sentinel-padded
+    length: jax.Array                   # ()        int32
+    values: jax.Array | None = None    # (capacity,) float, aligned with keys
+
+    @property
+    def capacity(self) -> int:
+        return self.keys.shape[-1]
+
+    @property
+    def has_values(self) -> bool:
+        return self.values is not None
+
+
+def make_stream(keys, values=None, capacity: int | None = None) -> Stream:
+    """Build a stream from a host/np array of sorted unique keys."""
+    keys = np.asarray(keys, dtype=np.int32)
+    assert keys.ndim == 1
+    n = int(keys.shape[0])
+    cap = round_capacity(capacity if capacity is not None else n)
+    out = np.full((cap,), SENTINEL, dtype=np.int32)
+    out[:n] = keys
+    vals = None
+    if values is not None:
+        values = np.asarray(values, dtype=np.float32)
+        v = np.zeros((cap,), dtype=np.float32)
+        v[:n] = values
+        vals = jnp.asarray(v)
+    return Stream(keys=jnp.asarray(out), length=jnp.asarray(n, jnp.int32), values=vals)
+
+
+def empty_stream(capacity: int, with_values: bool = False) -> Stream:
+    cap = round_capacity(capacity)
+    return Stream(
+        keys=jnp.full((cap,), SENTINEL, dtype=jnp.int32),
+        length=jnp.asarray(0, jnp.int32),
+        values=jnp.zeros((cap,), jnp.float32) if with_values else None,
+    )
+
+
+@partial(jax.jit, static_argnames=("capacity",))
+def stream_from_slice(memory: jax.Array, start, length, capacity: int) -> Stream:
+    """S_READ: initialize a key stream from ``memory[start : start+length]``.
+
+    ``capacity`` is static (the stream-register slot size); ``start``/``length``
+    are traced. Elements past ``length`` are sentinel-padded.
+    """
+    cap = round_capacity(capacity)
+    # ALWAYS pad by cap: dynamic_slice clamps the start when start+cap runs
+    # past the array end, silently shifting the window (a stream read near
+    # the end of the edge array would return its neighbor's keys).
+    mem = jnp.pad(memory, (0, cap), constant_values=SENTINEL)
+    window = jax.lax.dynamic_slice(mem, (start,), (cap,))
+    idx = jnp.arange(cap, dtype=jnp.int32)
+    keys = jnp.where(idx < length, window, SENTINEL)
+    return Stream(keys=keys, length=jnp.asarray(length, jnp.int32))
+
+
+def to_host(s: Stream) -> np.ndarray:
+    """Return the live keys as a host numpy array (test/debug helper)."""
+    n = int(s.length)
+    return np.asarray(s.keys)[:n]
+
+
+class StreamTable:
+    """Programming-model SMT: named handles with define/active bits.
+
+    Mirrors §IV-B semantics at the API level: registering a handle sets
+    V_D=V_A=1; releasing clears V_D immediately (later references raise) and
+    V_A at "retire" (here: immediately, since execution is eager/traced).
+    ``max_active`` models the paper's 16 stream registers; exceeding it is an
+    error, mirroring the stall-on-full behaviour.
+    """
+
+    def __init__(self, max_active: int = 16):
+        self.max_active = max_active
+        self._streams: dict[int, Stream] = {}
+        self._next = 0
+
+    def register(self, s: Stream) -> int:
+        if len(self._streams) >= self.max_active:
+            raise RuntimeError(
+                f"stream table full ({self.max_active} active); "
+                "S_FREE (release) a stream first")
+        sid = self._next
+        self._next += 1
+        self._streams[sid] = s
+        return sid
+
+    def get(self, sid: int) -> Stream:
+        if sid not in self._streams:
+            raise KeyError(f"stream id {sid} is not defined (S_FREE'd or never read)")
+        return self._streams[sid]
+
+    def release(self, sid: int) -> None:
+        if sid not in self._streams:
+            raise KeyError(f"stream id {sid} is not defined")
+        del self._streams[sid]
+
+    def __len__(self) -> int:
+        return len(self._streams)

@@ -1,0 +1,11 @@
+from .sharding import (
+    Axes, DEFAULT_RULES, FSDP_RULES, ShardingRules, constrain,
+    input_sharding, is_axes, logical_to_physical, mesh_context,
+    named_sharding, shard_params_tree, with_sharding_constraint,
+)
+
+__all__ = [
+    "Axes", "DEFAULT_RULES", "FSDP_RULES", "ShardingRules", "constrain",
+    "input_sharding", "is_axes", "logical_to_physical", "mesh_context",
+    "named_sharding", "shard_params_tree", "with_sharding_constraint",
+]

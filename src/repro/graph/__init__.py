@@ -1,0 +1,8 @@
+from .csr import CSRGraph, build_csr, neighbors_stream, padded_rows, degree_buckets
+from .generators import erdos_renyi, powerlaw_cluster, rmat
+from .datasets import get_dataset, DATASETS
+
+__all__ = [
+    "CSRGraph", "build_csr", "neighbors_stream", "padded_rows", "degree_buckets",
+    "erdos_renyi", "powerlaw_cluster", "rmat", "get_dataset", "DATASETS",
+]

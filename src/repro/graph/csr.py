@@ -1,0 +1,141 @@
+"""Padded CSR graph representation (the paper's S_CSR register file, §III-A).
+
+The paper loads three registers with S_CSR: CSR index (indptr), CSR edge list
+(indices) and *CSR offset* — for every vertex v, the position within N(v) of
+the smallest neighbor larger than v. The offset register exists purely to
+serve symmetry breaking (scan only the `< v` or `> v` half of a neighbor
+list); we keep it with identical semantics.
+
+TPU adaptations:
+  * ``indices`` is sentinel-padded to a LANE multiple so any window gather is
+    in-bounds and masked loads are branch-free.
+  * Every neighbor list is sorted ascending (required by all ISA ops).
+  * ``degree_buckets`` groups vertices by padded-degree capacity so batched
+    kernels waste bounded work on padding (the S_NESTINTER translation buffer
+    becomes a static schedule over buckets — see core/nested.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.stream import LANE, SENTINEL, Stream, round_capacity, stream_from_slice
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CSRGraph:
+    """Compressed sparse row graph; all neighbor lists sorted ascending."""
+
+    indptr: jax.Array    # (V+1,) int32
+    indices: jax.Array   # (E_pad,) int32, sentinel-padded to LANE multiple
+    offsets: jax.Array   # (V,)   int32: first idx in N(v) with neighbor > v
+    degrees: jax.Array   # (V,)   int32
+    num_vertices: int = dataclasses.field(metadata=dict(static=True), default=0)
+    num_edges: int = dataclasses.field(metadata=dict(static=True), default=0)
+    max_degree: int = dataclasses.field(metadata=dict(static=True), default=0)
+
+    @property
+    def padded_max_degree(self) -> int:
+        return round_capacity(self.max_degree)
+
+
+def build_csr(edges: np.ndarray, num_vertices: int | None = None,
+              undirected: bool = True) -> CSRGraph:
+    """Build a CSRGraph from an (M, 2) int edge array (host side).
+
+    Self-loops and duplicate edges are removed; for ``undirected`` graphs both
+    directions are materialised (the paper's datasets are undirected simple
+    graphs for mining purposes).
+    """
+    edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    if num_vertices is None:
+        num_vertices = int(edges.max()) + 1 if edges.size else 0
+    edges = edges[edges[:, 0] != edges[:, 1]]                  # drop self loops
+    if undirected:
+        edges = np.concatenate([edges, edges[:, ::-1]], axis=0)
+    # dedup
+    key = edges[:, 0] * np.int64(num_vertices) + edges[:, 1]
+    _, uniq = np.unique(key, return_index=True)
+    edges = edges[uniq]
+    order = np.lexsort((edges[:, 1], edges[:, 0]))
+    edges = edges[order]
+
+    src, dst = edges[:, 0], edges[:, 1]
+    degrees = np.bincount(src, minlength=num_vertices).astype(np.int32)
+    indptr = np.zeros(num_vertices + 1, dtype=np.int32)
+    np.cumsum(degrees, out=indptr[1:])
+    num_edges = int(edges.shape[0])
+
+    e_pad = round_capacity(num_edges + 1)  # +1: a window starting at E stays in-bounds
+    indices = np.full(e_pad, SENTINEL, dtype=np.int32)
+    indices[:num_edges] = dst.astype(np.int32)
+
+    # CSR offset register: first index in N(v) strictly greater than v.
+    # With no self-loops this equals |{w in N(v): w < v}| — one bincount.
+    offsets = np.bincount(src[dst < src], minlength=num_vertices).astype(np.int32)
+    max_degree = int(degrees.max()) if num_vertices else 0
+
+    return CSRGraph(
+        indptr=jnp.asarray(indptr), indices=jnp.asarray(indices),
+        offsets=jnp.asarray(offsets), degrees=jnp.asarray(degrees),
+        num_vertices=int(num_vertices), num_edges=num_edges,
+        max_degree=max_degree)
+
+
+def neighbors_stream(g: CSRGraph, v, cap: int | None = None) -> Stream:
+    """N(v) as a Stream (S_READ of an edge list). ``cap`` static; defaults to
+    the graph's padded max degree."""
+    cap = round_capacity(cap if cap is not None else g.max_degree)
+    start = g.indptr[v]
+    length = g.indptr[v + 1] - start
+    return stream_from_slice(g.indices, start, length, cap)
+
+
+def padded_rows(g: CSRGraph, vs: jax.Array, cap: int):
+    """Gather neighbor lists of a vertex batch into a (B, cap) padded matrix.
+
+    Returns (keys, lengths): keys sentinel-padded/truncated to ``cap``.
+    This is the data-movement core of S_NESTINTER (§IV-F): the nested
+    translator's per-key stream loads become one vectorised gather.
+    """
+    vs = jnp.asarray(vs, jnp.int32)
+    starts = g.indptr[vs]
+    lens = g.indptr[vs + 1] - starts
+    col = jnp.arange(cap, dtype=jnp.int32)
+    idx = starts[:, None] + col[None, :]
+    idx = jnp.clip(idx, 0, g.indices.shape[0] - 1)
+    rows = g.indices[idx]
+    rows = jnp.where(col[None, :] < lens[:, None], rows, SENTINEL)
+    return rows, jnp.minimum(lens, cap).astype(jnp.int32)
+
+
+def degree_buckets(g: CSRGraph, base: int = LANE) -> list[tuple[int, np.ndarray]]:
+    """Host-side: group vertices into power-of-two capacity buckets.
+
+    Returns [(cap, vertex_ids), ...] with cap ∈ {base, 2·base, 4·base, ...},
+    covering every vertex with degree > 0. Padding waste per bucket ≤ 2×.
+    """
+    deg = np.asarray(g.degrees)
+    out: list[tuple[int, np.ndarray]] = []
+    cap = base
+    lo = 1
+    while lo <= max(int(deg.max()) if deg.size else 0, 1):
+        sel = np.nonzero((deg >= lo) & (deg <= cap))[0]
+        if sel.size:
+            out.append((cap, sel.astype(np.int32)))
+        lo = cap + 1
+        cap *= 2
+    return out
+
+
+def edge_list(g: CSRGraph) -> np.ndarray:
+    """(E, 2) directed edge array (host), in CSR order."""
+    indptr = np.asarray(g.indptr)
+    indices = np.asarray(g.indices)[: g.num_edges]
+    src = np.repeat(np.arange(g.num_vertices, dtype=np.int32),
+                    np.diff(indptr).astype(np.int64))
+    return np.stack([src, indices], axis=1)

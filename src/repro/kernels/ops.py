@@ -1,0 +1,74 @@
+"""Backend dispatch for the stream-intersection kernels.
+
+Public entry points used by the engine and the sparse layer. ``backend``:
+  'xla'     pure-jnp reference path (fast on XLA:CPU, the semantic oracle)
+  'pallas'  Pallas kernels — compiled on TPU, interpret-mode on CPU
+  'auto'    pallas on TPU, xla elsewhere (interpret mode is a correctness
+            vehicle, not a fast path)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.batch import batch_inter, batch_inter_count, batch_vinter
+from repro.core.stream import SENTINEL
+from .bitmap import bitmap_and_count_pallas, bitmap_and_count_ref, keys_to_bitmap
+from .intersect import intersect_count_pallas, intersect_mark_pallas
+from .svinter import vinter_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(backend: str) -> str:
+    if backend == "auto":
+        return "pallas" if _on_tpu() else "xla"
+    return backend
+
+
+def xinter_count(a, b, bounds=None, backend: str = "auto"):
+    """Batched bounded S_INTER.C."""
+    backend = _resolve(backend)
+    if backend == "xla":
+        return batch_inter_count(a, b, bounds)
+    return intersect_count_pallas(a, b, bounds, interpret=not _on_tpu())
+
+
+def xinter(a, b, bounds=None, out_cap: int | None = None, backend: str = "auto"):
+    """Batched bounded S_INTER -> (rows, counts).
+
+    Pallas path: the kernel produces the match mask (the O(n·m) compare hot
+    spot); compaction is a fused XLA sort over the masked keys — keeping
+    data movement in the compiler's hands, compute in the kernel's."""
+    backend = _resolve(backend)
+    if backend == "xla":
+        return batch_inter(a, b, bounds, out_cap=out_cap)
+    mark = intersect_mark_pallas(a, b, bounds, interpret=not _on_tpu())
+    cap = out_cap or min(a.shape[1], b.shape[1])
+    masked = jnp.where(mark > 0, a, SENTINEL)
+    rows = jnp.sort(masked, axis=1)[:, :cap]
+    return rows, jnp.sum(mark, axis=1, dtype=jnp.int32)
+
+
+def xvinter_mac(a_keys, a_vals, b_keys, b_vals, op: str = "mac",
+                backend: str = "auto"):
+    """Batched S_VINTER (SVPU): reduce over value pairs of intersected keys."""
+    backend = _resolve(backend)
+    if backend == "xla":
+        return batch_vinter(a_keys, a_vals, b_keys, b_vals, op=op)
+    return vinter_pallas(a_keys, a_vals, b_keys, b_vals, op=op,
+                         interpret=not _on_tpu())
+
+
+def xbitmap_count(a_words, b_words, backend: str = "auto"):
+    """Bitmap-path intersection count (beyond-paper dense path)."""
+    backend = _resolve(backend)
+    if backend == "xla":
+        return bitmap_and_count_ref(a_words, b_words)
+    return bitmap_and_count_pallas(a_words, b_words, interpret=not _on_tpu())
+
+
+__all__ = ["xinter", "xinter_count", "xvinter_mac", "xbitmap_count",
+           "keys_to_bitmap"]

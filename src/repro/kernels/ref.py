@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert exact agreement).
+
+These re-export the semantic reference implementations from ``repro.core``
+— the kernels must match them bit-for-bit (integer counts/masks) or to
+float32 tolerance (S_VINTER reductions, whose summation order differs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.batch import batch_inter, batch_inter_count, batch_vinter
+from repro.core.stream import SENTINEL
+from .bitmap import bitmap_and_count_ref, keys_to_bitmap
+
+
+def intersect_count_ref(a, b, bounds=None):
+    return batch_inter_count(a, b, bounds)
+
+
+def intersect_mark_ref(a, b, bounds=None):
+    """Oracle for the mark kernel: membership mask over A slots."""
+    idx = jax.vmap(jnp.searchsorted)(b, a)
+    hit = jnp.take_along_axis(b, jnp.clip(idx, 0, b.shape[1] - 1), axis=1) == a
+    hit &= a != SENTINEL
+    if bounds is not None:
+        hit &= a < jnp.asarray(bounds, jnp.int32)[:, None]
+    return hit.astype(jnp.int32)
+
+
+def intersect_rows_ref(a, b, bounds=None, out_cap=None):
+    return batch_inter(a, b, bounds, out_cap=out_cap)
+
+
+def vinter_ref(a_keys, a_vals, b_keys, b_vals, op="mac"):
+    return batch_vinter(a_keys, a_vals, b_keys, b_vals, op=op)
+
+
+__all__ = [
+    "intersect_count_ref", "intersect_mark_ref", "intersect_rows_ref",
+    "vinter_ref", "bitmap_and_count_ref", "keys_to_bitmap",
+]

@@ -1,0 +1,90 @@
+"""S_VINTER as a Pallas kernel: intersect keys, MAC value pairs on the MXU.
+
+The paper's SVPU (§IV-E) collects (val0, val1) pairs through the load queue
+and feeds a scalar FMA per matched key. The TPU-native form turns the whole
+tile-pair into two dense ops: with the (TA x TB) match mask M (a permutation
+sub-matrix, keys being strict sets),
+
+        Σ_matched va·vb  =  vaᵀ · M · vb
+
+i.e. one MXU mat-vec (M·vb) and one VPU dot — the sparse MAC becomes dense
+systolic work with zero gather/scatter. MAX/MIN reductions use the mask on
+the VPU directly (no MXU form exists for them).
+
+Uses the same scalar-prefetched tile-overlap schedule as intersect.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.stream import SENTINEL
+from .intersect import TA, TB, tile_schedule
+
+
+def _vinter_kernel(op: str, lo_ref, nv_ref, ak_ref, av_ref, bk_ref, bv_ref,
+                   out_ref):
+    bi, i, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    ak = ak_ref[0, :]
+    av = av_ref[0, :]
+    bk = bk_ref[0, :]
+    bv = bv_ref[0, :]
+    valid = ak != SENTINEL
+    m = ((ak[:, None] == bk[None, :]) & valid[:, None]).astype(jnp.float32)
+    if op == "mac":
+        # vaᵀ·M·vb : MXU mat-vec then VPU dot
+        mv = jnp.dot(m, bv[:, None], preferred_element_type=jnp.float32)[:, 0]
+        contrib = jnp.sum(av * mv)
+    elif op == "max":
+        pair = jnp.maximum(av[:, None], bv[None, :]) * m
+        contrib = jnp.sum(pair)
+    else:  # min
+        pair = jnp.minimum(av[:, None], bv[None, :]) * m
+        contrib = jnp.sum(pair)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        out_ref[0, 0] = 0.0
+
+    @pl.when(j < nv_ref[bi, i])
+    def _acc():
+        out_ref[0, 0] += contrib
+
+
+@functools.partial(jax.jit, static_argnames=("op", "max_visits", "interpret"))
+def vinter_pallas(a_keys, a_vals, b_keys, b_vals, op: str = "mac",
+                  max_visits=None, interpret: bool = True):
+    """out[i] = Σ_{k ∈ A_i ∩ B_i} op(valA_i[k], valB_i[k]) — batched S_VINTER."""
+    B, cap_a = a_keys.shape
+    cap_b = b_keys.shape[1]
+    bounds = jnp.full((B,), SENTINEL, jnp.int32)   # S_VINTER is unbounded
+    lo_t, nv = tile_schedule(a_keys, b_keys, bounds)
+    if max_visits is None:
+        max_visits = cap_b // TB
+    grid = (B, cap_a // TA, int(max_visits))
+    kern = functools.partial(_vinter_kernel, op)
+    out = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, TA), lambda bi, i, j, lo, nv: (bi, i)),
+                pl.BlockSpec((1, TA), lambda bi, i, j, lo, nv: (bi, i)),
+                pl.BlockSpec((1, TB),
+                             lambda bi, i, j, lo, nv:
+                             (bi, jnp.minimum(lo[bi, i] + j, cap_b // TB - 1))),
+                pl.BlockSpec((1, TB),
+                             lambda bi, i, j, lo, nv:
+                             (bi, jnp.minimum(lo[bi, i] + j, cap_b // TB - 1))),
+            ],
+            out_specs=pl.BlockSpec((1, 1), lambda bi, i, j, lo, nv: (bi, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, 1), jnp.float32),
+        interpret=interpret,
+    )(lo_t, nv, a_keys, a_vals, b_keys, b_vals)
+    return out[:, 0]

@@ -1,0 +1,341 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces the compiled artifact's
+  memory_analysis()  -> bytes/device (proves the cell fits 16 GB/chip)
+  cost_analysis()    -> HLO FLOPs / bytes (per device under SPMD)
+  compiled HLO text  -> collective bytes by op
+plus a *calibration lower* (2 units, scan unrolled) that disentangles the
+layer-scan body cost from the outside cost — XLA cost analysis counts a
+while body once regardless of trip count (verified in tests/test_roofline):
+
+    body_sum = X(unroll2) - X(scan)
+    total(G) = X(scan) + (G - 1) * body_sum
+
+Artifacts land in experiments/dryrun/<arch>__<shape>__<mesh>.json and feed
+EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch rwkv6-3b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, SHAPES, get_arch
+from repro.configs.common import ArchSpec
+from repro.distributed.sharding import (DEFAULT_RULES, FSDP_RULES, Axes,
+                                        mesh_context, named_sharding,
+                                        shard_params_tree)
+from repro.launch.mesh import make_production_mesh, mesh_chips
+from repro.models.transformer import Model, shapes_and_axes
+from repro.roofline.analysis import (V5E, collective_bytes, model_flops_6nd,
+                                     parse_cost, roofline_report)
+from repro.train.optimizer import OptConfig, adamw_init, opt_state_shardings
+from repro.train.train_step import (batch_shardings, make_train_step)
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _rules_for(spec: ArchSpec):
+    return FSDP_RULES if spec.rules == "fsdp" else DEFAULT_RULES
+
+
+def _cache_shapes_and_axes(model: Model, batch: int, max_len: int):
+    box = {}
+
+    def build():
+        c, a = model.init_cache(batch, max_len)
+        box["axes"] = a
+        if model.cfg.first_dense:
+            d, da = model.init_dense_cache(batch, max_len)
+            c["dense"] = d
+            box["axes"]["dense"] = da
+        return c
+
+    shapes = jax.eval_shape(build)
+    return shapes, box["axes"]
+
+
+def _active_params(model: Model) -> tuple[int, int]:
+    """(total, active) parameter counts (active discounts unrouted experts,
+    identified by the 'experts' logical axis)."""
+    import math as _math
+    from repro.distributed.sharding import is_axes
+    cfg = model.cfg
+    shapes, axes = shapes_and_axes(model)
+    flat_s = jax.tree.leaves(shapes)
+    flat_a = jax.tree.leaves(axes, is_leaf=is_axes)
+    total = sum(_math.prod(s.shape) for s in flat_s)
+    if cfg.moe is None:
+        return total, total
+    E, k = cfg.moe.num_experts, cfg.moe.top_k
+    expert = sum(_math.prod(s.shape) for s, a in zip(flat_s, flat_a)
+                 if "experts" in a)
+    active = total - int(expert * (1 - k / E))
+    return total, active
+
+
+def _measure(lowered, label: str):
+    t0 = time.time()
+    compiled = lowered.compile()
+    dt = time.time() - t0
+    ca = compiled.cost_analysis()
+    cost = parse_cost(ca[0] if isinstance(ca, (list, tuple)) else ca)
+    ma = compiled.memory_analysis()
+    mem = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "code_bytes": int(ma.generated_code_size_in_bytes),
+    }
+    mem["peak_bytes"] = (mem["argument_bytes"] + mem["output_bytes"]
+                         + mem["temp_bytes"] - mem["alias_bytes"])
+    coll = collective_bytes(compiled.as_text())
+    return {"label": label, "compile_s": dt, "cost": cost, "memory": mem,
+            "collectives": coll}
+
+
+def _combine(scan_m: dict, unroll2_m: dict, units: int) -> dict:
+    """total(G) = X(scan) + (G-1) * (X(unroll2) - X(scan)) per metric."""
+    def comb(a, b):
+        return a + (units - 1) * max(b - a, 0.0)
+
+    flops = comb(scan_m["cost"]["flops"], unroll2_m["cost"]["flops"])
+    byts = comb(scan_m["cost"]["bytes"], unroll2_m["cost"]["bytes"])
+    coll = {}
+    keys = set(scan_m["collectives"]) | set(unroll2_m["collectives"])
+    for k in keys:
+        coll[k] = int(comb(scan_m["collectives"].get(k, 0),
+                           unroll2_m["collectives"].get(k, 0)))
+    return {"flops": flops, "bytes": byts, "collectives": coll}
+
+
+def _calib_config(cfg, kind: str):
+    """2-unit unrolled twin of a config (same shapes per layer)."""
+    upd = dict(num_layers=cfg.first_dense + 2 * len(cfg.unit),
+               unroll_units=True)
+    if cfg.encoder_layers:
+        upd["encoder_layers"] = 2
+    return dataclasses.replace(cfg, **upd)
+
+
+# ---------------------------------------------------------------------------
+# per-kind lowering
+# ---------------------------------------------------------------------------
+
+
+def _bf16(shapes):
+    """Params ride bf16 on the wire/HBM; the fp32 master lives (ZeRO-
+    sharded) in the optimizer state."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+        if s.dtype == jnp.float32 else s, shapes)
+
+
+def lower_train(spec: ArchSpec, model: Model, mesh, rules, shape_spec):
+    opt_cfg = OptConfig(state_bits=spec.opt_bits, master_weights=True)
+    shapes, axes = shapes_and_axes(model)
+    shapes = _bf16(shapes)
+    p_shard = shard_params_tree(shapes, axes, mesh, rules)
+    o_shapes = jax.eval_shape(lambda p: adamw_init(p, opt_cfg), shapes)
+    o_shard = opt_state_shardings(shapes, axes, mesh, rules, opt_cfg)
+    batch_spec = spec.input_specs_for(model.cfg, shape_spec)
+    b_shard = batch_shardings(batch_spec, mesh, rules)
+    rep = named_sharding(Axes(), mesh, rules)
+    fn = make_train_step(model, mesh, rules, opt_cfg)
+    jitted = jax.jit(fn, in_shardings=(p_shard, o_shard, b_shard, rep),
+                     out_shardings=(p_shard, o_shard,
+                                    {"loss": rep, "gnorm": rep, "lr": rep}),
+                     donate_argnums=(0, 1))
+    step = jax.ShapeDtypeStruct((), jnp.int32)
+    return jitted.lower(shapes, o_shapes, batch_spec, step)
+
+
+def lower_prefill(spec: ArchSpec, model: Model, mesh, rules, shape_spec):
+    shapes, axes = shapes_and_axes(model)
+    shapes = _bf16(shapes)
+    p_shard = shard_params_tree(shapes, axes, mesh, rules)
+    batch_spec = spec.input_specs_for(model.cfg, shape_spec)
+    batch_spec.pop("targets", None)
+    b_shard = batch_shardings(batch_spec, mesh, rules)
+
+    def fwd(params, batch):
+        with mesh_context(mesh, rules):
+            logits, _ = model.apply(params, batch)
+            return logits[:, -1]
+
+    jitted = jax.jit(fwd, in_shardings=(p_shard, b_shard))
+    return jitted.lower(shapes, batch_spec)
+
+
+def lower_decode(spec: ArchSpec, model: Model, mesh, rules, shape_spec):
+    cfg = model.cfg
+    B, S = shape_spec["batch"], shape_spec["seq"]
+    shapes, axes = shapes_and_axes(model)
+    shapes = _bf16(shapes)
+    p_shard = shard_params_tree(shapes, axes, mesh, rules)
+    c_shapes, c_axes = _cache_shapes_and_axes(model, B, S)
+    c_shard = shard_params_tree(c_shapes, c_axes, mesh, rules)
+    rep = named_sharding(Axes(), mesh, rules)
+    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    tok_shard = named_sharding(Axes("batch", None), mesh, rules, (B, 1))
+    args = [shapes, tok, jax.ShapeDtypeStruct((), jnp.int32), c_shapes]
+    shards = [p_shard, tok_shard, rep, c_shard]
+    if cfg.encoder_layers:
+        se = min(4096, S)
+        enc = jax.ShapeDtypeStruct((B, se, cfg.d_model), cfg.dtype)
+        encp = jax.ShapeDtypeStruct((B, se), jnp.int32)
+        args += [enc, encp]
+        shards += [named_sharding(Axes("batch", "seq", "embed"), mesh, rules,
+                                  (B, se, cfg.d_model)),
+                   named_sharding(Axes("batch", "seq"), mesh, rules, (B, se))]
+
+    def step(params, token, pos, caches, *enc_args):
+        with mesh_context(mesh, rules):
+            return model.decode_step(params, token, pos, caches, *enc_args)
+
+    logit_shard = named_sharding(Axes("batch", None, "vocab"), mesh, rules,
+                                 (B, 1, cfg.vocab_size))
+    jitted = jax.jit(step,
+                     in_shardings=tuple(shards),
+                     out_shardings=(logit_shard, c_shard),
+                     donate_argnums=(3,))
+    return jitted.lower(*args)
+
+
+LOWER = {"train": lower_train, "prefill": lower_prefill,
+         "decode": lower_decode}
+
+
+# ---------------------------------------------------------------------------
+# cell driver
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str = OUT_DIR, calibrate: bool = True,
+             overrides: dict | None = None) -> dict:
+    spec = get_arch(arch)
+    mesh_name = "multi" if multi_pod else "single"
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}.json")
+    reason = spec.skips.get(shape_name)
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "time": time.time()}
+    if reason:
+        record.update({"status": "skipped", "reason": reason})
+        json.dump(record, open(path, "w"), indent=1)
+        return record
+
+    sh = dict(SHAPES[shape_name])
+    sh["name"] = shape_name
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = _rules_for(spec)
+    cfg = spec.config
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    model = Model(cfg)
+    kind = sh["kind"]
+    try:
+        t0 = time.time()
+        lowered = LOWER[kind](spec, model, mesh, rules, sh)
+        lower_s = time.time() - t0
+        scan_m = _measure(lowered, "scan")
+        chips = mesh_chips(mesh)
+        units = cfg.num_units
+        combined = {"flops": scan_m["cost"]["flops"],
+                    "bytes": scan_m["cost"]["bytes"],
+                    "collectives": scan_m["collectives"]}
+        calib_m = None
+        if calibrate and units > 2:
+            calib_model = Model(_calib_config(cfg, kind))
+            lowered2 = LOWER[kind](spec, calib_model, mesh, rules, sh)
+            calib_m = _measure(lowered2, "unroll2")
+            combined = _combine(scan_m, calib_m, units)
+        total, active = _active_params(model)
+        if kind == "train":
+            tokens = sh["batch"] * sh["seq"]
+            mf = model_flops_6nd(total, tokens, active)
+        elif kind == "prefill":
+            tokens = sh["batch"] * sh["seq"]
+            mf = model_flops_6nd(total, tokens, active) / 3.0   # fwd only
+        else:
+            mf = model_flops_6nd(total, sh["batch"], active) / 3.0
+        roof = roofline_report(combined["flops"], combined["bytes"],
+                               combined["collectives"], chips,
+                               model_flops=mf)
+        record.update({
+            "status": "ok", "kind": kind, "chips": chips,
+            "lower_s": lower_s,
+            "params_total": total, "params_active": active,
+            "units": units,
+            "scan_measure": scan_m, "calib_measure": calib_m,
+            "combined": combined, "roofline": roof,
+            "fits_hbm": scan_m["memory"]["peak_bytes"] < V5E.hbm_bytes,
+        })
+    except Exception as e:  # record the failure — dry-run bugs are bugs
+        record.update({"status": "error", "error": repr(e),
+                       "trace": traceback.format_exc()})
+    json.dump(record, open(path, "w"), indent=1)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    ap.add_argument("--no-calibrate", action="store_true")
+    ap.add_argument("--force", action="store_true",
+                    help="re-run cells whose artifact already exists")
+    args = ap.parse_args()
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    cells = []
+    if args.all:
+        for a in ARCH_NAMES:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+    for a, s in cells:
+        for mp in meshes:
+            mesh_name = "multi" if mp else "single"
+            path = os.path.join(args.out, f"{a}__{s}__{mesh_name}.json")
+            if not args.force and os.path.exists(path):
+                prev = json.load(open(path))
+                if prev.get("status") in ("ok", "skipped"):
+                    print(f"[dryrun] {a} {s} {mesh_name}: cached "
+                          f"({prev['status']})", flush=True)
+                    continue
+            r = run_cell(a, s, mp, args.out, calibrate=not args.no_calibrate)
+            status = r.get("status")
+            extra = ""
+            if status == "ok":
+                roof = r["roofline"]
+                extra = (f" dominant={roof['dominant']} "
+                         f"peakGB={r['scan_measure']['memory']['peak_bytes']/1e9:.2f} "
+                         f"fit={r['fits_hbm']}")
+            elif status == "error":
+                extra = " " + r["error"][:120]
+            print(f"[dryrun] {a} {s} {'multi' if mp else 'single'}: "
+                  f"{status}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

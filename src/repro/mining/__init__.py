@@ -1,0 +1,17 @@
+from .apps import (
+    clique_count,
+    tailed_triangle_count,
+    three_chain_count,
+    three_motif,
+    triangle_count,
+    triangle_count_nested,
+)
+from .fsm import fsm, sfsm
+from .exhaustive import exhaustive_count
+from . import reference
+
+__all__ = [
+    "triangle_count", "triangle_count_nested", "three_chain_count",
+    "tailed_triangle_count", "three_motif", "clique_count",
+    "fsm", "sfsm", "exhaustive_count", "reference",
+]

@@ -1,0 +1,201 @@
+"""Wavefront pattern-enumeration engine: host-orchestrated, device-batched.
+
+The paper's execution model is a core issuing stream instructions whose
+operands live in the S-Cache. The TPU translation keeps the *dataflow* —
+(prefix stream) x (neighbor list) bounded intersections — but replaces the
+instruction stream with level-synchronous waves:
+
+  level 1: the half edge list (v1 < v0, straight from the CSR offset register)
+  level l: for each surviving work item, S_l = S_{l-1} ∩ N(v) ∩ [0, v)
+
+Between levels the surviving (prefix, vertex) work items are *compacted on
+the host* (the translation buffer of §IV-F become a dense worklist), and the
+prefix capacity is re-derived from the actual max survivor length — the
+paper's Fig. 14 observation (clique streams are short) becomes an adaptive
+buffer size instead of a cache-residency win.
+
+Work is chunked so device buffers stay bounded; padded tail items carry
+bound=0 so they contribute nothing (branch-free masking, no special cases).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.batch import batch_inter, batch_inter_count
+from repro.core.stream import LANE, SENTINEL, round_capacity
+from repro.graph.csr import CSRGraph, padded_rows
+
+
+def half_edges(g: CSRGraph) -> np.ndarray:
+    """(E/2, 2) array of (v0, v1) with v1 < v0 — the symmetric-breaking edge
+    frontier, read directly via the CSR offset register (offsets[v0] = number
+    of neighbors < v0)."""
+    indptr = np.asarray(g.indptr)
+    offsets = np.asarray(g.offsets)
+    indices = np.asarray(g.indices)
+    counts = offsets.astype(np.int64)
+    v0 = np.repeat(np.arange(g.num_vertices, dtype=np.int32), counts)
+    # position of each kept slot within its row
+    pos = np.arange(counts.sum(), dtype=np.int64) - np.repeat(
+        np.concatenate([[0], np.cumsum(counts)[:-1]]), counts)
+    v1 = indices[indptr[v0].astype(np.int64) + pos]
+    return np.stack([v0, v1], axis=1)
+
+
+def directed_edges(g: CSRGraph) -> np.ndarray:
+    """(E, 2) all directed edges (v0, v1) in CSR order."""
+    indptr = np.asarray(g.indptr).astype(np.int64)
+    v0 = np.repeat(np.arange(g.num_vertices, dtype=np.int32), np.diff(indptr))
+    v1 = np.asarray(g.indices)[: g.num_edges]
+    return np.stack([v0, v1], axis=1)
+
+
+def _pad_to(x: np.ndarray, n: int, fill) -> np.ndarray:
+    if x.shape[0] == n:
+        return x
+    pad = np.full((n - x.shape[0],) + x.shape[1:], fill, dtype=x.dtype)
+    return np.concatenate([x, pad], axis=0)
+
+
+@dataclasses.dataclass
+class Wave:
+    """A compacted frontier: prefix rows + the vertex that extends each."""
+
+    rows: np.ndarray    # (N, cap) int32 sorted sentinel-padded prefix streams
+    verts: np.ndarray   # (N,) int32 extension vertex (also the bound)
+
+    def __len__(self) -> int:
+        return int(self.verts.shape[0])
+
+
+def _pow2cap(n: int) -> int:
+    """Smallest power-of-two LANE multiple >= n (degree bucket capacity)."""
+    c = LANE
+    while c < n:
+        c *= 2
+    return c
+
+
+def edge_wave(g: CSRGraph, chunk: int, symmetric: bool = True):
+    """Yield level-1 waves: (v0 rows are N(v0), vert = v1), bucketed by the
+    prefix vertex's degree so per-edge work is O(bucket) not O(max degree)
+    (<= 2x padding waste — the paper's Fig. 14 stream-length skew exploited
+    as static capacity classes; EXPERIMENTS.md §Perf mining iteration)."""
+    edges = half_edges(g) if symmetric else directed_edges(g)
+    if edges.shape[0] == 0:
+        return
+    deg = np.asarray(g.degrees)
+    caps = np.array([_pow2cap(max(int(d), 1)) for d in deg[edges[:, 0]]])
+    for cap in np.unique(caps):
+        sel = edges[caps == cap]
+        # fixed chunk width: one compiled shape per degree bucket
+        nb = min(chunk, _pow2cap(sel.shape[0]))
+        for lo in range(0, sel.shape[0], nb):
+            sl = sel[lo: lo + nb]
+            n = sl.shape[0]
+            v0 = _pad_to(sl[:, 0], nb, 0)
+            v1 = _pad_to(sl[:, 1], nb, 0)
+            rows, _ = padded_rows(g, jnp.asarray(v0), int(cap))
+            yield Wave(rows=rows, verts=v1), n
+
+
+def _neighbor_cap(g: CSRGraph, verts: np.ndarray) -> int:
+    deg = np.asarray(g.degrees)
+    mx = int(deg[np.asarray(verts)].max()) if len(verts) else 1
+    return _pow2cap(max(mx, 1))
+
+
+def expand_count(g: CSRGraph, wave: Wave, bounded: bool = True) -> jnp.ndarray:
+    """counts[i] = |rows_i ∩ N(verts_i) ∩ [0, verts_i)| (bound dropped when
+    ``bounded`` is False). Neighbor capacity = the chunk's degree bucket."""
+    capn = _neighbor_cap(g, wave.verts)
+    nbr, _ = padded_rows(g, jnp.asarray(wave.verts), capn)
+    bounds = jnp.asarray(wave.verts) if bounded else None
+    return batch_inter_count(jnp.asarray(wave.rows), nbr, bounds)
+
+
+def expand(g: CSRGraph, wave: Wave, out_cap: int | None = None):
+    """Materialise S_l rows: (rows (N, out_cap), counts (N,))."""
+    capn = _neighbor_cap(g, wave.verts)
+    rows_a = jnp.asarray(wave.rows)
+    cap = out_cap or min(rows_a.shape[1], capn)
+    nbr, _ = padded_rows(g, jnp.asarray(wave.verts), capn)
+    rows, counts = batch_inter(rows_a, nbr,
+                               jnp.asarray(wave.verts), out_cap=cap)
+    return np.asarray(rows), np.asarray(counts)
+
+
+def compact(rows: np.ndarray, counts: np.ndarray, limit: int | None = None,
+            return_src: bool = False):
+    """Host compaction: expand (rows, counts) into the next Wave.
+
+    Every valid key rows[i, j] (j < counts[i]) becomes a work item whose
+    prefix is rows[i] and whose extension vertex/bound is that key. The
+    prefix capacity shrinks to the padded max survivor length (adaptive
+    stream capacity — clique streams are short, paper Fig. 14).
+    ``return_src`` additionally yields the source row index of each item
+    (needed when the caller must recover the enclosing prefix vertices).
+    """
+    counts = counts[: limit] if limit is not None else counts
+    rows = rows[: counts.shape[0]]
+    maxc = int(counts.max()) if counts.size else 0
+    if maxc == 0:
+        return (None, None) if return_src else None
+    cap = round_capacity(maxc)
+    col = np.arange(rows.shape[1])
+    ii, jj = np.nonzero(col[None, :] < counts[:, None])
+    verts = rows[ii, jj].astype(np.int32)
+    wave = Wave(rows=rows[ii, :cap], verts=verts)
+    return (wave, ii) if return_src else wave
+
+
+def pair_wave(g: CSRGraph, edges: np.ndarray, chunk: int):
+    """Yield degree-bucketed padded row pairs for an (N, 2) vertex-pair list:
+    (rows_a, rows_b, v0, v1, n_valid). Used by apps that intersect/subtract
+    two neighbor lists per edge (TT, induced TC)."""
+    if edges.shape[0] == 0:
+        return
+    deg = np.asarray(g.degrees)
+    cap_a = np.array([_pow2cap(max(int(d), 1)) for d in deg[edges[:, 0]]])
+    cap_b = np.array([_pow2cap(max(int(d), 1)) for d in deg[edges[:, 1]]])
+    keys = cap_a.astype(np.int64) << 32 | cap_b
+    for key in np.unique(keys):
+        ca, cb = int(key >> 32), int(key & 0xFFFFFFFF)
+        sel = edges[keys == key]
+        nb = min(chunk, _pow2cap(sel.shape[0]))
+        for lo in range(0, sel.shape[0], nb):
+            sl = sel[lo: lo + nb]
+            n = sl.shape[0]
+            v0 = _pad_to(sl[:, 0], nb, 0)
+            v1 = _pad_to(sl[:, 1], nb, 0)
+            rows_a, _ = padded_rows(g, jnp.asarray(v0), ca)
+            rows_b, _ = padded_rows(g, jnp.asarray(v1), cb)
+            yield rows_a, rows_b, v0, v1, n
+
+
+def wave_chunks(wave: Wave, chunk: int):
+    """Split a host wave into padded device chunks; yields (Wave, n_valid).
+
+    Padding uses vertex 0 with bound 0 => zero contribution."""
+    n = len(wave)
+    for lo in range(0, max(n, 1), chunk):
+        r = wave.rows[lo: lo + chunk]
+        v = wave.verts[lo: lo + chunk]
+        if r.shape[0] == 0:
+            continue
+        k = r.shape[0]
+        yield Wave(rows=_pad_to(r, chunk, SENTINEL), verts=_pad_to(v, chunk, 0)), k
+
+
+DEFAULT_CHUNK = 4096
+
+
+def choose_chunk(cap: int, budget_bytes: int = 64 << 20) -> int:
+    """Chunk size so one wave's buffers stay within ``budget_bytes``."""
+    per_row = cap * 4 * 4  # rows + neighbor rows + output + slack
+    c = max(LANE, budget_bytes // max(per_row, 1))
+    return int(min(DEFAULT_CHUNK * 4, (c // LANE) * LANE))

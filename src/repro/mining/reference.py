@@ -1,0 +1,139 @@
+"""Brute-force oracles for the mining applications (test-only, networkx/numpy).
+
+Nothing here is used by the library at runtime; tests assert that the
+wavefront engine, the InHouseAutoMine baseline and the exhaustive-check
+baseline all agree with these definitions on small graphs.
+"""
+from __future__ import annotations
+
+import itertools
+
+import networkx as nx
+import numpy as np
+
+from repro.graph.csr import CSRGraph, edge_list
+
+
+def to_networkx(g: CSRGraph) -> nx.Graph:
+    G = nx.Graph()
+    G.add_nodes_from(range(g.num_vertices))
+    G.add_edges_from(map(tuple, edge_list(g)))
+    return G
+
+
+def triangle_count(g: CSRGraph) -> int:
+    G = to_networkx(g)
+    return sum(nx.triangles(G).values()) // 3
+
+
+def clique_count(g: CSRGraph, k: int) -> int:
+    G = to_networkx(g)
+    return sum(1 for c in nx.enumerate_all_cliques(G) if len(c) == k)
+
+
+def three_chain_count(g: CSRGraph, induced: bool = False) -> int:
+    deg = np.asarray(g.degrees, dtype=np.int64)
+    non_induced = int((deg * (deg - 1) // 2).sum())
+    if not induced:
+        return non_induced
+    return non_induced - 3 * triangle_count(g)
+
+
+def tailed_triangle_count(g: CSRGraph) -> int:
+    """Σ over triangles of (deg(a)+deg(b)+deg(c) - 6)."""
+    G = to_networkx(g)
+    deg = np.asarray(g.degrees, dtype=np.int64)
+    total = 0
+    for c in nx.enumerate_all_cliques(G):
+        if len(c) == 3:
+            total += int(deg[list(c)].sum() - 6)
+    return total
+
+
+def motif3(g: CSRGraph) -> dict[str, int]:
+    return {"triangle": triangle_count(g),
+            "chain": three_chain_count(g, induced=True)}
+
+
+def fsm_oracle(g: CSRGraph, labels: np.ndarray, min_support: int,
+               metric: str = "mni") -> dict:
+    """Brute-force FSM oracle (tiny labelled graphs only).
+
+    Enumerates every non-induced embedding of each <=3-edge pattern shape
+    explicitly, fills MNI domains per pattern-vertex orbit, and returns
+    {canonical pattern: support} for the frequent ones. ``metric`` = 'mni'
+    or 'count' (the sFSM/GRAMER metric). Shares canonical keys with
+    ``repro.mining.fsm`` so results are directly comparable.
+    """
+    from .fsm import edge_key, wedge_key, triangle_key, star3_key, path4_key
+
+    L = np.asarray(labels)
+    indptr = np.asarray(g.indptr)
+    indices = np.asarray(g.indices)
+    adj = [indices[indptr[v]: indptr[v + 1]] for v in range(g.num_vertices)]
+    domains: dict[tuple, dict[tuple, set]] = {}
+    counts: dict[tuple, int] = {}
+
+    def add(key, orbit_assignments):
+        dom = domains.setdefault(key, {})
+        for orbit, v in orbit_assignments:
+            dom.setdefault(orbit, set()).add(int(v))
+        counts[key] = counts.get(key, 0) + 1
+
+    # edges (unordered)
+    for u in range(g.num_vertices):
+        for v in adj[u]:
+            if v <= u:
+                continue
+            k = edge_key(L[u], L[v])
+            add(k, [(("end", int(L[u])), u), (("end", int(L[v])), v)])
+    # wedges: center m, unordered leaf pairs
+    for m in range(g.num_vertices):
+        for a, b in itertools.combinations(adj[m].tolist(), 2):
+            k = wedge_key(L[a], L[m], L[b])
+            add(k, [(("center",), m), (("leaf", int(L[a])), a),
+                    (("leaf", int(L[b])), b)])
+    # triangles
+    for u in range(g.num_vertices):
+        for v in adj[u]:
+            if v <= u:
+                continue
+            common = np.intersect1d(adj[u], adj[v], assume_unique=True)
+            for w in common[common > v]:
+                k = triangle_key(L[u], L[v], L[w])
+                add(k, [(("v", int(L[x])), x) for x in (u, v, int(w))])
+    # 3-stars: center + unordered leaf triples
+    for m in range(g.num_vertices):
+        for tri in itertools.combinations(adj[m].tolist(), 3):
+            k = star3_key(int(L[m]), tuple(int(L[x]) for x in tri))
+            add(k, [(("center",), m)] + [(("leaf", int(L[x])), x) for x in tri])
+    # 4-paths: ordered tuples, registered in canonical orientation(s)
+    for b in range(g.num_vertices):
+        for c in adj[b]:
+            for a in adj[b]:
+                if a == c:
+                    continue
+                for d in adj[int(c)]:
+                    if d == b or d == a:
+                        continue
+                    seq = (int(L[a]), int(L[b]), int(L[c]), int(L[d]))
+                    canon = min(seq, seq[::-1])
+                    k = ("path4", canon)
+                    tup = (a, b, int(c), int(d))
+                    if seq == canon:
+                        add(k, [((i,), tup[i]) for i in range(4)])
+                    if seq[::-1] == canon and seq != canon:
+                        add(k, [((i,), tup[3 - i]) for i in range(4)])
+    # Each path-4 subgraph has exactly two ordered tuples (forward/backward)
+    # and exactly one of the two registration branches fires per tuple, so
+    # every subgraph registers twice regardless of palindromy => halve.
+    out = {}
+    for key, dom in domains.items():
+        if key[0] == "path4":
+            assert counts[key] % 2 == 0
+            counts[key] //= 2
+        support = min(len(s) for s in dom.values())
+        value = support if metric == "mni" else counts[key]
+        if value >= min_support:
+            out[key] = value
+    return out

@@ -1,0 +1,4 @@
+from .transformer import Model, ModelConfig, MoEConfig
+from . import layers, moe, mamba, rwkv
+
+__all__ = ["Model", "ModelConfig", "MoEConfig", "layers", "moe", "mamba", "rwkv"]

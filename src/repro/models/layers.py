@@ -1,0 +1,352 @@
+"""Shared transformer building blocks for the assigned architecture fleet.
+
+Pure-function style: every block has ``<block>_init(key, ...) ->
+(params, axes)`` and ``<block>_apply(params, x, ...)``. ``axes`` trees mirror
+params with ``Axes`` leaves (logical names resolved by
+repro.distributed.sharding at jit boundary).
+
+Covers the whole assigned-architecture surface:
+  GQA attention with qk-norm (qwen3), logit softcapping (gemma2),
+  sliding-window masks (gemma2 local layers), RoPE and M-RoPE (qwen2-vl),
+  MLA compressed-KV attention (deepseek-v2), blocked/online-softmax
+  attention for long contexts, SwiGLU/GELU MLPs, RMSNorm/LayerNorm.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import Axes, constrain
+
+
+class ParamBuilder:
+    """Accumulates (params, axes) pairs with fan-in scaled gaussian init."""
+
+    def __init__(self, key: jax.Array, dtype=jnp.float32):
+        self.key = key
+        self.dtype = dtype
+        self.params: dict = {}
+        self.axes: dict = {}
+
+    def w(self, name: str, shape, axes: Axes, fan_in: int | None = None,
+          zero: bool = False):
+        self.key, sub = jax.random.split(self.key)
+        if zero:
+            arr = jnp.zeros(shape, self.dtype)
+        else:
+            scale = 1.0 / math.sqrt(fan_in if fan_in else shape[0])
+            arr = (jax.random.normal(sub, shape, jnp.float32) * scale
+                   ).astype(self.dtype)
+        self.params[name] = arr
+        self.axes[name] = axes
+        return arr
+
+    def ones(self, name: str, shape, axes: Axes):
+        self.params[name] = jnp.ones(shape, self.dtype)
+        self.axes[name] = axes
+
+    def sub(self, name: str, params, axes):
+        self.params[name] = params
+        self.axes[name] = axes
+
+    def build(self):
+        return self.params, self.axes
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(key, d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}, {"scale": Axes("embed")}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * params["scale"]).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def _rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 1e4,
+               sections: tuple[int, ...] | None = None) -> jax.Array:
+    """Rotary embedding. x: (B, S, ..., head_dim); positions: (B, S) for
+    standard RoPE or (3, B, S) for M-RoPE (qwen2-vl), where ``sections``
+    gives the per-stream frequency split of head_dim//2 (t, h, w)."""
+    hd = x.shape[-1]
+    freqs = _rope_freqs(hd, theta)                       # (hd/2,)
+    if positions.ndim == 3:                              # M-RoPE
+        assert sections is not None and sum(sections) == hd // 2
+        parts = []
+        off = 0
+        for s, sec in enumerate(sections):
+            ang = positions[s].astype(jnp.float32)[..., None] * freqs[off: off + sec]
+            parts.append(ang)
+            off += sec
+        angles = jnp.concatenate(parts, axis=-1)         # (B, S, hd/2)
+    else:
+        angles = positions.astype(jnp.float32)[..., None] * freqs  # (B,S,hd/2)
+    while angles.ndim < x.ndim:
+        angles = angles[..., None, :]                    # broadcast over heads
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA family)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    qk_norm: bool = False          # qwen3
+    softcap: float | None = None   # gemma2 logit softcapping
+    window: int | None = None      # sliding-window (gemma2 local layers)
+    rope_theta: float = 1e4
+    mrope_sections: tuple[int, ...] | None = None  # qwen2-vl
+    block_k: int = 1024            # online-softmax KV block
+    blocked_threshold: int = 8192  # use blocked path when S_k exceeds this
+    #                                (§Perf hillclimb A tried 2048: REFUTED —
+    #                                at S=4096 the q re-reads raise HLO bytes
+    #                                and peak; blocked stays the >8k path)
+
+
+def gqa_init(key, cfg: AttnConfig):
+    b = ParamBuilder(key)
+    d, H, Hk, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    b.w("wq", (d, H, hd), Axes("embed", "heads", "head_dim"), fan_in=d)
+    b.w("wk", (d, Hk, hd), Axes("embed", "kv_heads", "head_dim"), fan_in=d)
+    b.w("wv", (d, Hk, hd), Axes("embed", "kv_heads", "head_dim"), fan_in=d)
+    b.w("wo", (H, hd, d), Axes("heads", "head_dim", "embed"), fan_in=H * hd)
+    if cfg.qk_norm:
+        b.ones("q_norm", (hd,), Axes("head_dim"))
+        b.ones("k_norm", (hd,), Axes("head_dim"))
+    return b.build()
+
+
+def _qk_norm(x, scale, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale).astype(dt)
+
+
+def _mask(pos_q, pos_k, causal: bool, window: int | None):
+    """(B, Sq, Sk) boolean allow-mask from (B, Sq)/(B, Sk) position vectors."""
+    pq = pos_q[..., :, None]
+    pk = pos_k[..., None, :]
+    full = jnp.broadcast_shapes(pq.shape, pk.shape)
+    m = (pk <= pq) if causal else jnp.ones(full, bool)
+    m = jnp.broadcast_to(m, full)
+    if window is not None:
+        m = m & (pq - pk < window)
+    return m
+
+
+def _sdpa_full(q, k, v, pos_q, pos_k, causal, window, softcap):
+    """q: (B,Sq,Hk,G,hd), k/v: (B,Sk,Hk,hd). Materialised-scores path."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    mask = _mask(pos_q, pos_k, causal, window)           # (B,Sq,Sk)
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+
+
+def _sdpa_blocked(q, k, v, pos_q, pos_k, causal, window, softcap, block_k):
+    """Online-softmax over KV blocks: O(block) memory, long-context path."""
+    B, Sq, Hk, G, hd = q.shape
+    Sk = k.shape[1]
+    nb = -(-Sk // block_k)
+    pad = nb * block_k - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos_k = jnp.pad(pos_k, ((0, 0), (0, pad)), constant_values=jnp.iinfo(jnp.int32).max)
+    kb = k.reshape(B, nb, block_k, Hk, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nb, block_k, Hk, hd).transpose(1, 0, 2, 3, 4)
+    pb = pos_k.reshape(B, nb, block_k).transpose(1, 0, 2)
+    scale = hd ** -0.5
+    qf = q.astype(jnp.float32) * scale
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kt, vt, pk = blk
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kt.astype(jnp.float32))
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = _mask(pos_q, pk, causal, window)
+        s = jnp.where(mask[:, None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, vt.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hk, G, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Hk, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hk, G, Sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kb, vb, pb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)   # (B,Sq,Hk,G,hd)
+
+
+def attention(q, k, v, pos_q, pos_k, cfg: AttnConfig, causal: bool = True):
+    """q: (B,Sq,H,hd) flat heads; k/v: (B,Sk,Hk,hd). Returns (B,Sq,H,hd)."""
+    B, Sq, H, hd = q.shape
+    Hk = k.shape[2]
+    G = H // Hk
+    qg = q.reshape(B, Sq, Hk, G, hd)
+    qg = constrain(qg, "batch", "seq", "kv_heads", "heads", "head_dim")
+    if k.shape[1] > cfg.blocked_threshold:
+        out = _sdpa_blocked(qg, k, v, pos_q, pos_k, causal, cfg.window,
+                            cfg.softcap, cfg.block_k)
+    else:
+        out = _sdpa_full(qg, k, v, pos_q, pos_k, causal, cfg.window,
+                         cfg.softcap)
+    return out.reshape(B, Sq, H, hd)
+
+
+def gqa_apply(params, x, positions, cfg: AttnConfig, causal: bool = True,
+              kv_override=None, pos_k=None):
+    """Self-attention (kv_override=None) or cross/cached attention."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    if kv_override is None:
+        k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+        pos_kv = positions
+    else:
+        k, v = kv_override
+        pos_kv = pos_k
+    if cfg.qk_norm:
+        q = _qk_norm(q, params["q_norm"])
+        k = _qk_norm(k, params["k_norm"]) if kv_override is None else k
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+    if kv_override is None:
+        k = apply_rope(k, pos_kv, cfg.rope_theta, cfg.mrope_sections)
+    out = attention(q, k, v, positions if positions.ndim == 2 else positions[0],
+                    pos_kv if pos_kv.ndim == 2 else pos_kv[0], cfg, causal)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype)), (k, v)
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v2): compressed-KV attention
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    num_heads: int
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    rope_theta: float = 1e4
+    block_k: int = 1024
+    blocked_threshold: int = 8192
+
+
+def mla_init(key, cfg: MLAConfig):
+    b = ParamBuilder(key)
+    d, H = cfg.d_model, cfg.num_heads
+    qd = cfg.qk_nope_dim + cfg.qk_rope_dim
+    b.w("wq", (d, H, qd), Axes("embed", "heads", "head_dim"), fan_in=d)
+    b.w("w_dkv", (d, cfg.kv_lora_rank), Axes("embed", "state"), fan_in=d)
+    b.w("w_kr", (d, cfg.qk_rope_dim), Axes("embed", "head_dim"), fan_in=d)
+    b.w("w_uk", (cfg.kv_lora_rank, H, cfg.qk_nope_dim),
+        Axes("state", "heads", "head_dim"), fan_in=cfg.kv_lora_rank)
+    b.w("w_uv", (cfg.kv_lora_rank, H, cfg.v_head_dim),
+        Axes("state", "heads", "head_dim"), fan_in=cfg.kv_lora_rank)
+    b.w("wo", (H, cfg.v_head_dim, d), Axes("heads", "head_dim", "embed"),
+        fan_in=H * cfg.v_head_dim)
+    n, na = rmsnorm_init(None, cfg.kv_lora_rank)
+    b.sub("kv_norm", n, na)
+    return b.build()
+
+
+def mla_compress(params, x, positions, cfg: MLAConfig):
+    """x -> (c_kv, k_rope): the decode cache content (B,S,lora), (B,S,rope)."""
+    c = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"].astype(x.dtype))
+    c = rmsnorm(params["kv_norm"], c)
+    kr = jnp.einsum("bsd,dr->bsr", x, params["w_kr"].astype(x.dtype))
+    kr = apply_rope(kr[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return c, kr
+
+
+def mla_apply(params, x, positions, cfg: MLAConfig, cache=None, pos_k=None):
+    """Training path: decompress K/V per head; cache path: absorbed decode.
+
+    Absorbed decode (beyond-paper-standard MLA trick): fold W_uk into the
+    query and W_uv into the output so attention runs directly over the
+    compressed c_kv — the cache never expands.
+    """
+    B, S, d = x.shape
+    H = cfg.num_heads
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    if cache is None:
+        c, kr = mla_compress(params, x, positions, cfg)
+        pos_k = positions
+    else:
+        c, kr = cache
+    # absorbed: q' = q_nope @ W_uk  -> score space = lora rank
+    q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, params["w_uk"].astype(x.dtype))
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    s = (jnp.einsum("bshr,btr->bhst", q_abs.astype(jnp.float32), c.astype(jnp.float32))
+         + jnp.einsum("bshk,btk->bhst", q_rope.astype(jnp.float32), kr.astype(jnp.float32))
+         ) * scale
+    mask = _mask(positions, pos_k, True, None)
+    s = jnp.where(mask[:, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    attn_c = jnp.einsum("bhst,btr->bshr", p.astype(c.dtype), c)
+    out = jnp.einsum("bshr,rhk->bshk", attn_c, params["w_uv"].astype(x.dtype))
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return y, (c, kr)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, gated: bool = True):
+    b = ParamBuilder(key)
+    if gated:
+        b.w("w_gate", (d_model, d_ff), Axes("embed", "d_ff"), fan_in=d_model)
+    b.w("w_up", (d_model, d_ff), Axes("embed", "d_ff"), fan_in=d_model)
+    b.w("w_down", (d_ff, d_model), Axes("d_ff", "embed"), fan_in=d_ff)
+    return b.build()
+
+
+def mlp_apply(params, x, act: str = "silu"):
+    up = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(x.dtype))
+    if "w_gate" in params:
+        g = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(x.dtype))
+        h = (jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)) * up
+    else:
+        h = jax.nn.gelu(up) if act == "gelu" else jax.nn.silu(up)
+    h = constrain(h, "batch", "seq", "d_ff")
+    return jnp.einsum("bsf,fd->bsd", h, params["w_down"].astype(x.dtype))

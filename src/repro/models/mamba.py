@@ -1,0 +1,133 @@
+"""Mamba (S6 selective SSM) layer — the Jamba hybrid's dominant block.
+
+Training path: chunked selective scan — ``lax.scan`` over sequence chunks
+carrying the (B, d_inner, d_state) state, with an *associative* scan inside
+each chunk (prefix products of the diagonal decays), so the sequential
+depth is S/Q instead of S while chunk temporaries stay O(Q·d_inner·d_state).
+``d_inner`` carries the 'd_ff' logical axis => tensor-parallel over 'model',
+which also divides the chunk temporaries by the TP degree.
+
+Decode path: single-step state update, O(1) in sequence length — this is
+why jamba runs the long_500k cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import Axes, constrain
+from .layers import ParamBuilder
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_model: int
+    d_inner: int                  # expand * d_model
+    d_state: int = 16
+    d_conv: int = 4
+    dt_rank: int = 0              # 0 => d_model // 16
+    chunk: int = 128
+
+    @property
+    def rank(self) -> int:
+        return self.dt_rank or max(1, self.d_model // 16)
+
+
+def mamba_init(key, cfg: MambaConfig):
+    b = ParamBuilder(key)
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.d_state
+    b.w("in_proj", (d, 2 * di), Axes("embed", "d_ff"), fan_in=d)
+    b.w("conv", (cfg.d_conv, di), Axes("conv", "d_ff"), fan_in=cfg.d_conv)
+    b.w("x_proj", (di, cfg.rank + 2 * n), Axes("d_ff", "state"), fan_in=di)
+    b.w("dt_proj", (cfg.rank, di), Axes("state", "d_ff"), fan_in=cfg.rank)
+    b.w("A_log", (di, n), Axes("d_ff", "state"), fan_in=1)
+    b.w("D", (di,), Axes("d_ff"), zero=True)
+    b.w("out_proj", (di, d), Axes("d_ff", "embed"), fan_in=di)
+    return b.build()
+
+
+def _ssm_inputs(params, xz, cfg: MambaConfig, conv_state=None):
+    """Shared front end: conv + projections.
+
+    xz: (B, S, 2*di) from in_proj. Returns (x, z, dt, Bm, Cm, new_conv_state)
+    where x is post-conv/silu (B, S, di)."""
+    di, n = cfg.d_inner, cfg.d_state
+    x, z = jnp.split(xz, 2, axis=-1)
+    # causal depthwise conv along S
+    k = cfg.d_conv
+    if conv_state is None:
+        pad = jnp.zeros(x.shape[:1] + (k - 1,) + x.shape[2:], x.dtype)
+    else:
+        pad = conv_state                                   # (B, k-1, di)
+    xp = jnp.concatenate([pad, x], axis=1)
+    new_conv_state = xp[:, -(k - 1):] if k > 1 else pad
+    conv = sum(xp[:, i: xp.shape[1] - (k - 1 - i)] * params["conv"][i]
+               for i in range(k))
+    x = jax.nn.silu(conv)
+    proj = jnp.einsum("bsd,dr->bsr", x, params["x_proj"].astype(x.dtype))
+    dt, Bm, Cm = jnp.split(proj, [cfg.rank, cfg.rank + n], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsr,rd->bsd", dt,
+                                    params["dt_proj"].astype(x.dtype)))
+    return x, z, dt, Bm, Cm, new_conv_state
+
+
+def mamba_apply(params, u, cfg: MambaConfig):
+    """Training/prefill path. u: (B, S, d_model) -> (y, final_state)."""
+    B, S, d = u.shape
+    di, n, Q = cfg.d_inner, cfg.d_state, cfg.chunk
+    xz = jnp.einsum("bsd,de->bse", u, params["in_proj"].astype(u.dtype))
+    x, z, dt, Bm, Cm, _ = _ssm_inputs(params, xz, cfg)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))      # (di, n)
+
+    nq = -(-S // Q)
+    pad = nq * Q - S
+    def padq(t):
+        return jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+    xq = padq(x).reshape(B, nq, Q, di).transpose(1, 0, 2, 3)
+    dtq = padq(dt).reshape(B, nq, Q, di).transpose(1, 0, 2, 3)
+    Bq = padq(Bm).reshape(B, nq, Q, n).transpose(1, 0, 2, 3)
+    Cq = padq(Cm).reshape(B, nq, Q, n).transpose(1, 0, 2, 3)
+
+    def chunk_step(h, blk):
+        xc, dtc, bc, cc = blk                              # (B,Q,di), (B,Q,n)
+        dtf = dtc.astype(jnp.float32)
+        decay = jnp.exp(dtf[..., None] * A)                # (B,Q,di,n)
+        inp = (dtf * xc.astype(jnp.float32))[..., None] * bc.astype(jnp.float32)[:, :, None, :]
+        def comb(l, r):
+            return (r[0] * l[0], r[0] * l[1] + r[1])
+        a_cum, b_cum = jax.lax.associative_scan(comb, (decay, inp), axis=1)
+        hs = a_cum * h[:, None] + b_cum                    # (B,Q,di,n)
+        y = jnp.einsum("bqdn,bqn->bqd", hs, cc.astype(jnp.float32))
+        return hs[:, -1], y
+
+    h0 = jnp.zeros((B, di, n), jnp.float32)
+    hT, yq = jax.lax.scan(chunk_step, h0, (xq, dtq, Bq, Cq))
+    y = yq.transpose(1, 0, 2, 3).reshape(B, nq * Q, di)[:, :S]
+    y = (y + x.astype(jnp.float32) * params["D"]).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    y = constrain(y, "batch", "seq", "d_ff")
+    return jnp.einsum("bsd,de->bse", y, params["out_proj"].astype(u.dtype)), hT
+
+
+def mamba_decode(params, u, state, cfg: MambaConfig):
+    """Single-token step. u: (B, 1, d); state: (ssm (B,di,n), conv (B,k-1,di))."""
+    ssm, conv_state = state
+    xz = jnp.einsum("bsd,de->bse", u, params["in_proj"].astype(u.dtype))
+    x, z, dt, Bm, Cm, new_conv = _ssm_inputs(params, xz, cfg, conv_state)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dtf = dt[:, 0].astype(jnp.float32)                     # (B, di)
+    decay = jnp.exp(dtf[..., None] * A)                    # (B, di, n)
+    inp = (dtf * x[:, 0].astype(jnp.float32))[..., None] * Bm[:, 0].astype(jnp.float32)[:, None, :]
+    new_ssm = decay * ssm + inp
+    y = jnp.einsum("bdn,bn->bd", new_ssm, Cm[:, 0].astype(jnp.float32))
+    y = (y + x[:, 0].astype(jnp.float32) * params["D"]).astype(u.dtype)
+    y = (y * jax.nn.silu(z[:, 0]))[:, None]
+    out = jnp.einsum("bsd,de->bse", y, params["out_proj"].astype(u.dtype))
+    return out, (new_ssm, new_conv)
+
+
+def mamba_init_state(cfg: MambaConfig, batch: int, dtype=jnp.bfloat16):
+    return (jnp.zeros((batch, cfg.d_inner, cfg.d_state), jnp.float32),
+            jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype))

@@ -1,0 +1,213 @@
+"""Mixture-of-Experts with expert parallelism and two dispatch paths.
+
+``dispatch='einsum'``  — capacity-based one-hot dispatch/combine einsums
+(Switch/MaxText style). SPMD-clean: experts shard over 'model', tokens over
+('pod','data'); XLA inserts the all-to-alls.
+
+``dispatch='sort'``    — *stream dispatch* (beyond-paper tie-in): the
+(token, expert) assignment is treated exactly like the paper's sorted key
+streams — sort token ids by expert key, segment the sorted stream, run
+experts on contiguous slices, scatter back. Removes the O(T·E·C) one-hot
+matmuls; evaluated against 'einsum' in EXPERIMENTS.md §Perf.
+
+Both paths are capacity-bounded (tokens above capacity drop to the residual
+stream, standard practice) and add the load-balancing auxiliary loss.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import Axes, constrain
+from .layers import ParamBuilder
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff: int                      # per-expert intermediate
+    num_shared: int = 0            # shared (always-on) experts, deepseek-v2
+    shared_d_ff: int | None = None
+    capacity_factor: float = 1.25
+    dispatch: str = "einsum"       # 'einsum' | 'sort'
+    num_groups: int = 32           # sort dispatch: token groups (DP shards)
+    router_zloss: float = 1e-3
+    aux_loss: float = 1e-2
+
+
+def moe_init(key, d_model: int, cfg: MoEConfig):
+    b = ParamBuilder(key)
+    E, F = cfg.num_experts, cfg.d_ff
+    b.w("router", (d_model, E), Axes("embed", "experts"), fan_in=d_model)
+    b.w("w_gate", (E, d_model, F), Axes("experts", "embed", "d_ff"), fan_in=d_model)
+    b.w("w_up", (E, d_model, F), Axes("experts", "embed", "d_ff"), fan_in=d_model)
+    b.w("w_down", (E, F, d_model), Axes("experts", "d_ff", "embed"), fan_in=F)
+    if cfg.num_shared:
+        sf = cfg.shared_d_ff or cfg.d_ff * cfg.num_shared
+        b.w("sh_gate", (d_model, sf), Axes("embed", "d_ff"), fan_in=d_model)
+        b.w("sh_up", (d_model, sf), Axes("embed", "d_ff"), fan_in=d_model)
+        b.w("sh_down", (sf, d_model), Axes("d_ff", "embed"), fan_in=sf)
+    return b.build()
+
+
+def _router(params, x, cfg: MoEConfig):
+    """x: (T, D) -> (gates (T,k), idx (T,k), aux_loss)."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # load balance: mean prob * mean assignment per expert
+    T = x.shape[0]
+    me = probs.mean(0)
+    ce = jnp.zeros((cfg.num_experts,), jnp.float32).at[idx.reshape(-1)].add(
+        1.0 / (T * cfg.top_k))
+    aux = cfg.aux_loss * cfg.num_experts * jnp.sum(me * ce)
+    zloss = cfg.router_zloss * jnp.mean(
+        jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return gates.astype(x.dtype), idx, aux + zloss
+
+
+def _expert_ffn(params, h, act=jax.nn.silu):
+    """h: (E, C, D) -> (E, C, D), batched over the expert dim."""
+    g = jnp.einsum("ecd,edf->ecf", h, params["w_gate"].astype(h.dtype))
+    u = jnp.einsum("ecd,edf->ecf", h, params["w_up"].astype(h.dtype))
+    z = act(g) * u
+    z = constrain(z, "experts", None, "d_ff")
+    return jnp.einsum("ecf,efd->ecd", z, params["w_down"].astype(h.dtype))
+
+
+def _capacity(T: int, cfg: MoEConfig) -> int:
+    c = int(cfg.capacity_factor * T * cfg.top_k / cfg.num_experts)
+    return max(8, -(-c // 8) * 8)
+
+
+def _moe_einsum(params, x, cfg: MoEConfig):
+    T, D = x.shape
+    C = _capacity(T, cfg)
+    gates, idx, aux = _router(params, x, cfg)
+    # position of each (t, k) assignment within its expert's capacity
+    onehot = jax.nn.one_hot(idx, cfg.num_experts, dtype=jnp.int32)  # (T,k,E)
+    pos = jnp.cumsum(onehot.reshape(T * cfg.top_k, cfg.num_experts), axis=0
+                     ).reshape(T, cfg.top_k, cfg.num_experts) * onehot - 1
+    within_cap = (pos >= 0) & (pos < C)
+    disp = (jax.nn.one_hot(pos.clip(0), C, dtype=x.dtype)
+            * within_cap[..., None].astype(x.dtype)
+            * onehot[..., None].astype(x.dtype))          # (T,k,E,C)
+    disp_te = disp.sum(1)                                  # (T,E,C)
+    h = jnp.einsum("td,tec->ecd", x, disp_te)
+    h = constrain(h, "experts", None, "embed")
+    out_e = _expert_ffn(params, h)
+    comb = jnp.einsum("tkec,tk->tec", disp, gates)
+    y = jnp.einsum("ecd,tec->td", out_e, comb)
+    return y, aux
+
+
+def _moe_sort(params, x, cfg: MoEConfig):
+    """Global stream dispatch: sort the (expert, token) key stream once.
+
+    The assignment list is the paper's key stream — keys = expert ids,
+    values = token ids; sorting materialises per-expert contiguous slices.
+    The sort is distributed (XLA lowers it to a sorting network with
+    collective-permutes): measured to be cheaper than the grouped variant
+    below at every assigned MoE cell (§Perf hillclimb B iteration log).
+    """
+    T, D = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    C = _capacity(T, cfg)
+    gates, idx, aux = _router(params, x, cfg)
+    flat_e = idx.reshape(-1)                               # (T*K,) expert keys
+    flat_t = jnp.tile(jnp.arange(T, dtype=jnp.int32)[:, None], (1, K)).reshape(-1)
+    flat_g = gates.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)               # stream sort
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    ranks = jnp.arange(T * K, dtype=jnp.int32)
+    first = jnp.searchsorted(se, jnp.arange(E, dtype=jnp.int32))
+    pos = ranks - first[se]
+    keep = pos < C
+    eidx = jnp.where(keep, se, E)                          # OOB => dropped
+    h = jnp.zeros((E, C, D), x.dtype).at[
+        eidx, jnp.where(keep, pos, 0)].set(x[st], mode="drop")
+    h = constrain(h, "experts", None, "embed")
+    out_e = _expert_ffn(params, h)
+    contrib = out_e[jnp.where(keep, se, 0), jnp.where(keep, pos, 0)]
+    contrib = contrib * (sg * keep)[:, None]
+    y = jnp.zeros((T, D), x.dtype).at[st].add(contrib)
+    return y, aux
+
+
+def _moe_gsort(params, x, cfg: MoEConfig):
+    """Group-local stream dispatch (the paper's sorted-key-stream idea).
+
+    The (token, expert) assignment list is a key stream — keys = expert ids,
+    values = token ids. We sort it *within DP-shard-local groups* (the group
+    dim is sharded over ('pod','data'), so every sort, rank and scatter is
+    device-local — no distributed sort network, unlike a global argsort),
+    scatter each group's tokens into its (E, C_g) capacity slots, and cross
+    the network at the (group-sharded -> expert-sharded) transpose.
+
+    Hypothesis REFUTED (§Perf hillclimb B): intended to kill the
+    distributed-sort permutes, but the measured HLO shows XLA re-gathering
+    the grouped buffers across the model axis — 5.3x MORE collective bytes
+    than the global sort at qwen3-moe train_4k. Kept selectable
+    (dispatch='gsort') as the documented negative result.
+    """
+    T, D = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    G = cfg.num_groups if T % cfg.num_groups == 0 else 1
+    Tg = T // G
+    Cg = max(8, -(-int(cfg.capacity_factor * Tg * K / E) // 8) * 8)
+    gates, idx, aux = _router(params, x, cfg)
+
+    eg = idx.reshape(G, Tg * K)                            # per-group keys
+    gg = gates.reshape(G, Tg * K)
+    order = jnp.argsort(eg, axis=1, stable=True)           # LOCAL stream sort
+    se = jnp.take_along_axis(eg, order, axis=1)            # (G, TgK) sorted
+    st = (order // K).astype(jnp.int32)                    # token within group
+    sg = jnp.take_along_axis(gg, order, axis=1)
+    ranks = jnp.arange(Tg * K, dtype=jnp.int32)[None, :]
+    first = jax.vmap(jnp.searchsorted)(se, jnp.broadcast_to(
+        jnp.arange(E, dtype=jnp.int32), (G, E)))           # (G, E)
+    pos = ranks - jnp.take_along_axis(first, se, axis=1)
+    keep = pos < Cg
+    grp = jnp.broadcast_to(jnp.arange(G, dtype=jnp.int32)[:, None],
+                           (G, Tg * K))
+    xg = x.reshape(G, Tg, D)
+    gathered = jnp.take_along_axis(
+        xg, st[..., None], axis=1)                         # (G, TgK, D) local
+    eidx = jnp.where(keep, se, E)                          # OOB => dropped
+    h = jnp.zeros((G, E, Cg, D), x.dtype).at[
+        grp, eidx, jnp.where(keep, pos, 0)].set(gathered, mode="drop")
+    h = constrain(h, "moe_groups", "experts", None, "embed")
+    # ---- the all-to-all boundary: groups-sharded -> experts-sharded ----
+    ht = h.transpose(1, 0, 2, 3).reshape(E, G * Cg, D)
+    ht = constrain(ht, "experts", "moe_cap", "embed")
+    out_e = _expert_ffn(params, ht)
+    back = out_e.reshape(E, G, Cg, D).transpose(1, 0, 2, 3)
+    back = constrain(back, "moe_groups", "experts", None, "embed")
+    # ---- combine: gather each assignment's expert output, weighted ----
+    contrib = back[grp, eidx, jnp.where(keep, pos, 0)]     # (G, TgK, D)
+    contrib = contrib * (sg * keep)[..., None]
+    y = jnp.zeros((G, Tg, D), x.dtype).at[grp, st].add(contrib)
+    return y.reshape(T, D), aux
+
+
+def moe_apply(params, x, cfg: MoEConfig):
+    """x: (B, S, D) -> (y, aux_loss)."""
+    B, S, D = x.shape
+    flat = x.reshape(B * S, D)
+    if cfg.dispatch == "sort":
+        y, aux = _moe_sort(params, flat, cfg)
+    elif cfg.dispatch == "gsort":
+        y, aux = _moe_gsort(params, flat, cfg)
+    else:
+        y, aux = _moe_einsum(params, flat, cfg)
+    if cfg.num_shared:
+        g = jnp.einsum("td,df->tf", flat, params["sh_gate"].astype(x.dtype))
+        u = jnp.einsum("td,df->tf", flat, params["sh_up"].astype(x.dtype))
+        y = y + jnp.einsum("tf,fd->td", jax.nn.silu(g) * u,
+                           params["sh_down"].astype(x.dtype))
+    return y.reshape(B, S, D), aux

@@ -1,0 +1,234 @@
+"""RWKV-6 "Finch" time-mix / channel-mix blocks (attention-free SSM family).
+
+Data-dependent decay: w_t is produced per token through a low-rank path from
+the token-shifted input (the defining RWKV6 feature); state is matrix-valued
+per head, S ∈ R^{head x head}, updated S_t = diag(w_t) S_{t-1} + k_t v_tᵀ.
+
+Baseline training path: sequential ``lax.scan`` over time (compile-size O(1),
+runtime O(S) sequential — recorded as the §Perf baseline for the rwkv cells).
+``rwkv_apply_chunked`` is the hillclimbed path: chunk-parallel prefix-decay
+formulation that replaces S sequential steps with S/Q chunk steps of dense
+matmuls (intra-chunk attention-like matmul + carried state), the standard
+linear-attention chunking.
+
+Decode: O(1) single-step update — rwkv runs the long_500k cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import Axes, constrain
+from .layers import ParamBuilder
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    d_model: int
+    d_ff: int
+    head_size: int = 64
+    decay_lora: int = 64
+    chunk: int = 32
+
+    @property
+    def num_heads(self) -> int:
+        return self.d_model // self.head_size
+
+
+def rwkv_init(key, cfg: RWKVConfig):
+    b = ParamBuilder(key)
+    d, H, hs = cfg.d_model, cfg.num_heads, cfg.head_size
+    for name in ("maa_r", "maa_k", "maa_v", "maa_w", "maa_g"):
+        b.w(name, (d,), Axes("embed"), zero=True)          # token-shift mix
+    b.w("w_r", (d, d), Axes("embed", "heads"), fan_in=d)
+    b.w("w_k", (d, d), Axes("embed", "heads"), fan_in=d)
+    b.w("w_v", (d, d), Axes("embed", "heads"), fan_in=d)
+    b.w("w_g", (d, d), Axes("embed", "heads"), fan_in=d)
+    b.w("w_o", (d, d), Axes("heads", "embed"), fan_in=d)
+    b.w("decay_base", (d,), Axes("embed"), zero=True)
+    b.w("decay_lora_a", (d, cfg.decay_lora), Axes("embed", "state"), fan_in=d)
+    b.w("decay_lora_b", (cfg.decay_lora, d), Axes("state", "embed"),
+        fan_in=cfg.decay_lora)
+    b.w("bonus", (H, hs), Axes("heads", "head_dim"), zero=True)  # time_faaaa
+    b.ones("ln_x", (d,), Axes("embed"))
+    return b.build()
+
+
+def _timeshift(x, last=None):
+    """x_{t-1} with zero (or cache) at t=0."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def _rkvwg(params, x, x_prev):
+    """Token-shift mixing + projections; returns per-head r,k,v,w,g."""
+    def mix(maa):
+        m = params[maa].astype(x.dtype)
+        return x + (x_prev - x) * m
+    r = jnp.einsum("bsd,de->bse", mix("maa_r"), params["w_r"].astype(x.dtype))
+    k = jnp.einsum("bsd,de->bse", mix("maa_k"), params["w_k"].astype(x.dtype))
+    v = jnp.einsum("bsd,de->bse", mix("maa_v"), params["w_v"].astype(x.dtype))
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", mix("maa_g"),
+                               params["w_g"].astype(x.dtype)))
+    xw = mix("maa_w")
+    lora = jnp.einsum("bsd,dr->bsr", jnp.tanh(
+        jnp.einsum("bsd,dr->bsr", xw, params["decay_lora_a"].astype(x.dtype))),
+        params["decay_lora_b"].astype(x.dtype))
+    w = jnp.exp(-jnp.exp((params["decay_base"] + lora).astype(jnp.float32)))
+    return r, k, v, w, g                                   # w: (B,S,d) in (0,1)
+
+
+def _heads(t, H, hs):
+    return t.reshape(t.shape[0], t.shape[1], H, hs)
+
+
+def rwkv_apply(params, x, cfg: RWKVConfig, chunked: bool = True):
+    """Time-mix block. x: (B, S, d) -> (y, final_state (B,H,hs,hs))."""
+    B, S, d = x.shape
+    H, hs = cfg.num_heads, cfg.head_size
+    r, k, v, w, g = _rkvwg(params, x, _timeshift(x))
+    r, k, v = (_heads(t, H, hs) for t in (r, k, v))
+    w = _heads(w, H, hs)
+    bonus = params["bonus"].astype(jnp.float32)
+
+    if chunked:
+        y, state = _wkv_chunked(r, k, v, w, bonus, cfg.chunk)
+    else:
+        y, state = _wkv_sequential(r, k, v, w, bonus)
+    y = y.reshape(B, S, d)
+    # group-norm per head (ln_x) then gate + output proj
+    yf = y.astype(jnp.float32).reshape(B, S, H, hs)
+    mu = yf.mean(-1, keepdims=True)
+    var = yf.var(-1, keepdims=True)
+    yf = ((yf - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(B, S, d) * params["ln_x"]
+    y = yf.astype(x.dtype) * g
+    y = constrain(y, "batch", "seq", "heads")
+    return jnp.einsum("bsd,de->bse", y, params["w_o"].astype(x.dtype)), state
+
+
+def _wkv_sequential(r, k, v, w, bonus):
+    """Reference/baseline: scan over time. r,k,v,w: (B,S,H,hs)."""
+    B, S, H, hs = r.shape
+
+    def step(Sm, t):
+        rt, kt, vt, wt = t                                  # (B,H,hs)
+        kv = kt[..., :, None] * vt[..., None, :]            # (B,H,hs,hs)
+        out = jnp.einsum("bhk,bhkv->bhv", rt,
+                         Sm + bonus[..., None] * kv)
+        Sm = wt[..., None] * Sm + kv
+        return Sm, out
+
+    S0 = jnp.zeros((B, H, hs, hs), jnp.float32)
+    xs = tuple(t.transpose(1, 0, 2, 3).astype(jnp.float32) for t in (r, k, v, w))
+    Sf, ys = jax.lax.scan(step, S0, xs)
+    return ys.transpose(1, 0, 2, 3).reshape(B, S, H * hs), Sf
+
+
+def _wkv_chunked(r, k, v, w, bonus, Q):
+    """Chunk-parallel WKV: intra-chunk 'attention' matmul + carried state.
+
+    Within a chunk, out_t = r_t · (decay-weighted Σ_{s<t} k_s v_sᵀ + bonus
+    kv_t) decomposes into (a) a causal (Q x Q) pairwise-decay contraction
+    and (b) one state-carry matmul per chunk. Numerically safe: every
+    exponent is a log-decay difference over a *forward* interval, hence
+    <= 0 — no overflow regardless of decay magnitude (underflow -> 0 is
+    exact behaviour for fully-decayed history).
+    """
+    B, S, H, hs = r.shape
+    nq = -(-S // Q)
+    pad = nq * Q - S
+    def padq(t, value=0.0):
+        return jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                       constant_values=value)
+    # merge (B, H) into one axis. Hillclimb C tried sharding it over
+    # ('data','model') ("bh" rule) to split the 40 heads that don't divide
+    # the 16-way model axis: REFUTED — the per-layer reshard cost 30s of
+    # all-to-alls against a 5s memory saving (EXPERIMENTS.md §Perf). The
+    # merged dim therefore keeps the batch sharding (heads local), which
+    # still halves peak vs the unmerged baseline via better fusion.
+    def prep(t, value=0.0):
+        q = padq(t, value).reshape(B, nq, Q, H, hs).transpose(1, 0, 3, 2, 4)
+        q = q.reshape(nq, B * H, Q, hs).astype(jnp.float32)
+        return constrain(q, None, "batch", None, None)
+    rq, kq, vq = prep(r), prep(k), prep(v)
+    wq = prep(w, 1.0)    # pad decay with 1: phantom steps don't touch state
+    logw = jnp.log(jnp.maximum(wq, 1e-38))                  # (nq,BH,Q,hs)
+    cum = jnp.cumsum(logw, axis=2)                          # inclusive Σ_{u<=s}
+    bonus_m = jnp.tile(bonus, (B, 1))                       # (BH, hs)
+
+    causal = jnp.tril(jnp.ones((Q, Q), bool), -1)           # strict s < q
+
+    def chunk(Sm, blk):
+        rc, kc, vc, lw, cw = blk                            # (BH,Q,hs)
+        excl = cw - lw                                      # Σ_{u<q} log w_u
+        # pairwise coefficient: Π_{u in (s, q-1]} w_u = exp(excl_q - cum_s) <= 1
+        diff = excl[:, :, None, :] - cw[:, None, :, :]      # (BH,Q,Q,hs)
+        att = jnp.einsum("bqk,bsk,bqsk->bqs", rc, kc,
+                         jnp.exp(jnp.minimum(diff, 0.0)))
+        att = jnp.where(causal, att, 0.0)
+        intra = jnp.einsum("bqs,bsv->bqv", att, vc)
+        diag = jnp.einsum("bqk,bk,bqk,bqv->bqv", rc, bonus_m, kc, vc)
+        r_dec = rc * jnp.exp(excl)                          # excl <= 0: safe
+        carry = jnp.einsum("bqk,bkv->bqv", r_dec, Sm)
+        out = intra + diag + carry
+        # state: S' = diag(Π_chunk w) S + Σ_s (Π_{u>s} w_u) k_s v_sᵀ
+        total = cw[:, -1:]                                  # (BH,1,hs)
+        k_carry = kc * jnp.exp(total - cw)                  # total<=cw: safe
+        Sm = jnp.exp(total[:, 0])[:, :, None] * Sm + \
+            jnp.einsum("bqk,bqv->bkv", k_carry, vc)
+        return constrain(Sm, "batch", None, None), out
+
+    S0 = jnp.zeros((B * H, hs, hs), jnp.float32)
+    Sf, yq = jax.lax.scan(chunk, S0, (rq, kq, vq, logw, cum))
+    y = yq.reshape(nq, B, H, Q, hs).transpose(1, 0, 3, 2, 4)
+    y = y.reshape(B, nq * Q, H * hs)[:, :S]
+    return y, Sf.reshape(B, H, hs, hs)
+
+
+def rwkv_decode(params, x, state, cfg: RWKVConfig):
+    """Single-token step. state = (S (B,H,hs,hs), x_prev (B,1,d))."""
+    Sm, x_prev = state
+    B = x.shape[0]
+    H, hs = cfg.num_heads, cfg.head_size
+    r, k, v, w, g = _rkvwg(params, x, x_prev)
+    rt, kt, vt = (t.reshape(B, H, hs) for t in (r[:, 0], k[:, 0], v[:, 0]))
+    wt = w[:, 0].reshape(B, H, hs)
+    bonus = params["bonus"].astype(jnp.float32)
+    kv = kt[..., :, None].astype(jnp.float32) * vt[..., None, :].astype(jnp.float32)
+    out = jnp.einsum("bhk,bhkv->bhv", rt.astype(jnp.float32),
+                     Sm + bonus[..., None] * kv)
+    Sm = wt[..., None] * Sm + kv
+    y = out.reshape(B, 1, H * hs)
+    yf = y.reshape(B, 1, H, hs)
+    mu = yf.mean(-1, keepdims=True)
+    var = yf.var(-1, keepdims=True)
+    yf = ((yf - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(B, 1, H * hs) * params["ln_x"]
+    y = yf.astype(x.dtype) * g
+    out = jnp.einsum("bsd,de->bse", y, params["w_o"].astype(x.dtype))
+    return out, (Sm, x)
+
+
+def rwkv_channel_init(key, cfg: RWKVConfig):
+    b = ParamBuilder(key)
+    d, f = cfg.d_model, cfg.d_ff
+    b.w("maa_k", (d,), Axes("embed"), zero=True)
+    b.w("maa_r", (d,), Axes("embed"), zero=True)
+    b.w("w_k", (d, f), Axes("embed", "d_ff"), fan_in=d)
+    b.w("w_v", (f, d), Axes("d_ff", "embed"), fan_in=f)
+    b.w("w_r", (d, d), Axes("embed", "heads"), fan_in=d)
+    return b.build()
+
+
+def rwkv_channel_apply(params, x, x_prev=None):
+    xs = _timeshift(x, x_prev)
+    xk = x + (xs - x) * params["maa_k"].astype(x.dtype)
+    xr = x + (xs - x) * params["maa_r"].astype(x.dtype)
+    k = jnp.einsum("bsd,df->bsf", xk, params["w_k"].astype(x.dtype))
+    k = jnp.square(jax.nn.relu(k))
+    kv = jnp.einsum("bsf,fd->bsd", k, params["w_v"].astype(x.dtype))
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr,
+                                  params["w_r"].astype(x.dtype)))
+    return r * kv

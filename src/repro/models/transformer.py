@@ -1,0 +1,648 @@
+"""Unified model covering the 10 assigned architectures.
+
+One decoder (or encoder-decoder) skeleton, specialised per arch by config:
+layer *pattern units* (e.g. jamba's (m,m,m,a,m,m,m,m)) are scanned — params
+are stacked per repeating unit so the HLO is O(unit), not O(depth) — with
+heterogeneous kinds (attn/mamba/rwkv), per-position sliding windows
+(gemma2 local/global), MoE periods (jamba every-other, deepseek all-but-
+first), shared experts, MLA, qk-norm, softcap, M-RoPE, KV-head replication
+for TP, and encoder-decoder wiring (seamless-m4t) all driven by ModelConfig.
+
+Serving: attention layers hold (K, V) rings sharded over 'kv_seq' ('model'
+axis) — XLA SPMD turns the masked softmax over the sharded KV length into
+partial max/sum all-reduces, i.e. flash-decoding's log-sum-exp combine.
+Mamba/rwkv layers hold O(1) recurrent state — which is why only those archs
+run the long_500k cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import Axes, constrain
+from . import layers as L
+from .layers import AttnConfig, MLAConfig, ParamBuilder, apply_rope
+from .mamba import MambaConfig, mamba_apply, mamba_decode, mamba_init, mamba_init_state
+from .moe import MoEConfig, moe_apply, moe_init
+from .rwkv import (RWKVConfig, rwkv_apply, rwkv_channel_apply,
+                   rwkv_channel_init, rwkv_decode, rwkv_init)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int | None = None
+    # layer pattern: repeating unit of kinds; len must divide covered layers
+    pattern: tuple[str, ...] = ("attn",)
+    # attention flavour
+    attention: str = "gqa"                 # 'gqa' | 'mla'
+    qk_norm: bool = False
+    softcap: float | None = None
+    # per-position-in-unit sliding windows (None = global); len == len(pattern)
+    windows: tuple | None = None
+    use_rope: bool = True
+    rope_theta: float = 1e4
+    mrope_sections: tuple[int, ...] | None = None
+    kv_repeat: int = 1                     # replicate KV heads for TP
+    # MoE
+    moe: MoEConfig | None = None
+    moe_period: int = 1                    # MoE every Nth layer
+    first_dense: int = 0                   # leading dense layers (deepseek)
+    first_dense_ff: int | None = None
+    # alternative blocks
+    mla: MLAConfig | None = None
+    mamba: MambaConfig | None = None
+    rwkv: RWKVConfig | None = None
+    # encoder-decoder (seamless): encoder shares d_model/heads
+    encoder_layers: int = 0
+    frontend: str | None = None            # 'audio' | 'vision' stub marker
+    # numerics / runtime
+    norm: str = "rmsnorm"                  # 'rmsnorm' | 'layernorm'
+    gated_mlp: bool = True                 # False: classic 2-matrix FFN
+    act: str = "silu"
+    norm_eps: float = 1e-6
+    dtype: Any = jnp.bfloat16
+    tie_embeddings: bool = False
+    remat: str = "minimal"                 # 'none' | 'minimal' | 'dots'
+    blocked_threshold: int = 8192
+    block_k: int = 1024
+    logit_softcap: float | None = None     # gemma2 final softcap
+    loss_chunk: int = 512                  # fused/chunked cross-entropy: the
+    #                                        (B,S,V) logits tensor is never
+    #                                        materialised (see Model.loss)
+    unroll_units: bool = False             # roofline calibration: unroll the
+    #                                        layer scan (cost_analysis counts
+    #                                        a while body once)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    def attn_cfg(self, window=None) -> AttnConfig:
+        return AttnConfig(
+            d_model=self.d_model, num_heads=self.num_heads,
+            num_kv_heads=self.num_kv_heads, head_dim=self.hd,
+            qk_norm=self.qk_norm, softcap=self.softcap, window=window,
+            rope_theta=self.rope_theta, mrope_sections=self.mrope_sections,
+            block_k=self.block_k, blocked_threshold=self.blocked_threshold)
+
+    @property
+    def unit(self) -> tuple[str, ...]:
+        return self.pattern
+
+    @property
+    def num_units(self) -> int:
+        n = self.num_layers - self.first_dense
+        assert n % len(self.unit) == 0, \
+            f"{self.name}: {n} layers not divisible by unit {self.unit}"
+        return n // len(self.unit)
+
+    def is_moe_layer(self, layer_idx: int) -> bool:
+        return (self.moe is not None and layer_idx >= self.first_dense
+                and (layer_idx - self.first_dense) % self.moe_period == 0)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _norm_init(d):
+    return {"scale": jnp.ones((d,), jnp.float32)}, {"scale": Axes("embed")}
+
+
+def _layer_init(key, cfg: ModelConfig, kind: str, layer_idx: int,
+                cross: bool = False):
+    b = ParamBuilder(key)
+    k1, k2, k3 = jax.random.split(key, 3)
+    n1, a1 = _norm_init(cfg.d_model)
+    b.sub("norm1", n1, a1)
+    if kind == "attn":
+        if cfg.attention == "mla":
+            p, a = L.mla_init(k1, cfg.mla)
+        else:
+            p, a = L.gqa_init(k1, cfg.attn_cfg())
+        b.sub("attn", p, a)
+    elif kind == "mamba":
+        p, a = mamba_init(k1, cfg.mamba)
+        b.sub("mamba", p, a)
+    elif kind == "rwkv":
+        p, a = rwkv_init(k1, cfg.rwkv)
+        b.sub("rwkv", p, a)
+    else:
+        raise ValueError(kind)
+    if cross:
+        nc, ac = _norm_init(cfg.d_model)
+        b.sub("norm_cross", nc, ac)
+        pc, axc = L.gqa_init(k3, cfg.attn_cfg())
+        b.sub("cross", pc, axc)
+    n2, a2 = _norm_init(cfg.d_model)
+    b.sub("norm2", n2, a2)
+    if kind == "rwkv":
+        p, a = rwkv_channel_init(k2, cfg.rwkv)
+    elif cfg.is_moe_layer(layer_idx):
+        p, a = moe_init(k2, cfg.d_model, cfg.moe)
+    else:
+        p, a = L.mlp_init(k2, cfg.d_model, cfg.d_ff, gated=cfg.gated_mlp)
+    b.sub("ffn", p, a)
+    return b.build()
+
+
+def _stack_units(key, cfg: ModelConfig, num_units: int, unit_offset: int,
+                 cross: bool = False):
+    """Init each unit then tree-stack: leaves get a leading (G,) axis."""
+    keys = jax.random.split(key, num_units)
+
+    def unit_init(k):
+        ks = jax.random.split(k, len(cfg.unit))
+        ps, axs = {}, {}
+        for i, kind in enumerate(cfg.unit):
+            p, a = _layer_init(ks[i], cfg, kind, unit_offset + i, cross=cross)
+            ps[f"l{i}"] = p
+            axs[f"l{i}"] = a
+        return ps, axs
+
+    stacked = [unit_init(k)[0] for k in keys]
+    _, axes = unit_init(keys[0])
+    params = jax.tree.map(lambda *xs: jnp.stack(xs), *stacked)
+    axes = jax.tree.map(lambda a: Axes(None, *a), axes,
+                        is_leaf=lambda x: isinstance(x, Axes))
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# the model
+# ---------------------------------------------------------------------------
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ---------------- init ----------------
+    def init(self, key):
+        cfg = self.cfg
+        b = ParamBuilder(key)
+        b.w("embed", (cfg.vocab_size, cfg.d_model), Axes("vocab", "embed"),
+            fan_in=cfg.d_model)
+        if not cfg.tie_embeddings:
+            b.w("unembed", (cfg.d_model, cfg.vocab_size),
+                Axes("embed", "vocab"), fan_in=cfg.d_model)
+        kf, kd, ke = jax.random.split(b.key, 3)
+        if cfg.first_dense:
+            dense_cfg = dataclasses.replace(
+                cfg, moe=None, d_ff=cfg.first_dense_ff or cfg.d_ff)
+            for i in range(cfg.first_dense):
+                p, a = _layer_init(jax.random.fold_in(kd, i), dense_cfg,
+                                   "attn", i)
+                b.sub(f"dense{i}", p, a)
+        p, a = _stack_units(kf, cfg, cfg.num_units, cfg.first_dense,
+                            cross=bool(cfg.encoder_layers))
+        b.sub("units", p, a)
+        if cfg.encoder_layers:
+            enc_cfg = dataclasses.replace(cfg, moe=None, pattern=("attn",),
+                                          windows=None)
+            pe, ae = _stack_units(ke, enc_cfg, cfg.encoder_layers, 0)
+            b.sub("encoder", pe, ae)
+            ne, nea = _norm_init(cfg.d_model)
+            b.sub("enc_norm", ne, nea)
+        nf, nfa = _norm_init(cfg.d_model)
+        b.sub("final_norm", nf, nfa)
+        return b.build()
+
+    # ---------------- shared pieces ----------------
+    def _norm(self, p, x):
+        if self.cfg.norm == "layernorm":
+            dt = x.dtype
+            xf = x.astype(jnp.float32)
+            mu = xf.mean(-1, keepdims=True)
+            var = xf.var(-1, keepdims=True)
+            return (((xf - mu) * jax.lax.rsqrt(var + self.cfg.norm_eps))
+                    * p["scale"]).astype(dt)
+        return L.rmsnorm(p, x, self.cfg.norm_eps)
+
+    def _embed(self, params, tokens):
+        emb = params["embed"].astype(self.cfg.dtype)
+        return jnp.take(emb, tokens, axis=0) * math.sqrt(self.cfg.d_model)
+
+    def _logits(self, params, x):
+        w = (params["embed"].astype(self.cfg.dtype).T
+             if self.cfg.tie_embeddings
+             else params["unembed"].astype(self.cfg.dtype))
+        logits = jnp.einsum("bsd,dv->bsv", x, w).astype(jnp.float32)
+        if self.cfg.logit_softcap:
+            c = self.cfg.logit_softcap
+            logits = c * jnp.tanh(logits / c)
+        return constrain(logits, "batch", "seq", "vocab")
+
+    def _window_for(self, pos_in_unit: int):
+        return None if self.cfg.windows is None else self.cfg.windows[pos_in_unit]
+
+    def _self_attn(self, p, h, positions, window, causal=True):
+        cfg = self.cfg
+        if cfg.attention == "mla":
+            y, kv = L.mla_apply(p, h, positions, cfg.mla)
+            return y, kv
+        acfg = cfg.attn_cfg(window)
+        q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(h.dtype))
+        k = jnp.einsum("bsd,dhk->bshk", h, p["wk"].astype(h.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", h, p["wv"].astype(h.dtype))
+        if acfg.qk_norm:
+            q = L._qk_norm(q, p["q_norm"])
+            k = L._qk_norm(k, p["k_norm"])
+        if cfg.use_rope:
+            q = apply_rope(q, positions, acfg.rope_theta, acfg.mrope_sections)
+            k = apply_rope(k, positions, acfg.rope_theta, acfg.mrope_sections)
+        if cfg.kv_repeat > 1:
+            k = jnp.repeat(k, cfg.kv_repeat, axis=2)
+            v = jnp.repeat(v, cfg.kv_repeat, axis=2)
+        pos2d = positions if positions.ndim == 2 else positions[0]
+        out = L.attention(q, k, v, pos2d, pos2d, acfg, causal=causal)
+        y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(h.dtype))
+        return y, (k, v)
+
+    def _cross_attn(self, p, h, positions, enc_states, enc_pos):
+        cfg = self.cfg
+        acfg = cfg.attn_cfg()
+        q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(h.dtype))
+        k = jnp.einsum("bsd,dhk->bshk", enc_states, p["wk"].astype(h.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", enc_states, p["wv"].astype(h.dtype))
+        if cfg.kv_repeat > 1:
+            k = jnp.repeat(k, cfg.kv_repeat, axis=2)
+            v = jnp.repeat(v, cfg.kv_repeat, axis=2)
+        pos2d = positions if positions.ndim == 2 else positions[0]
+        out = L.attention(q, k, v, pos2d, enc_pos, acfg, causal=False)
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(h.dtype))
+
+    def _ffn(self, p, h, aux):
+        cfg = self.cfg
+        if "router" in p:
+            y, a = moe_apply(p, h, cfg.moe)
+            return y, aux + a
+        if "maa_k" in p:                                   # rwkv channel mix
+            return rwkv_channel_apply(p, h), aux
+        return L.mlp_apply(p, h, cfg.act), aux
+
+    # ---------------- training forward ----------------
+    def _unit_fwd(self, uparams, x, positions, enc_states=None, enc_pos=None):
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        for i, kind in enumerate(cfg.unit):
+            p = uparams[f"l{i}"]
+            h = self._norm(p["norm1"], x)
+            if kind == "attn":
+                y, _ = self._self_attn(p["attn"], h, positions,
+                                       self._window_for(i))
+            elif kind == "mamba":
+                y, _ = mamba_apply(p["mamba"], h, cfg.mamba)
+            else:
+                y, _ = rwkv_apply(p["rwkv"], h, cfg.rwkv)
+            x = x + y
+            if enc_states is not None:
+                hc = self._norm(p["norm_cross"], x)
+                x = x + self._cross_attn(p["cross"], hc, positions,
+                                         enc_states, enc_pos)
+            h = self._norm(p["norm2"], x)
+            y, aux = self._ffn(p["ffn"], h, aux)
+            x = x + y
+            x = constrain(x, "batch", "seq", "embed")
+        return x, aux
+
+    def _maybe_remat(self, fn):
+        if self.cfg.remat == "none":
+            return fn
+        if self.cfg.remat == "dots":
+            policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+            return jax.checkpoint(fn, policy=policy)
+        return jax.checkpoint(fn)
+
+    def _encode(self, params, batch):
+        cfg = self.cfg
+        x = batch["frames"].astype(cfg.dtype)              # (B, Se, d) stub
+        B, Se, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32), (B, Se))
+
+        def body(carry, up):
+            x = carry
+            p = up["l0"]
+            h = self._norm(p["norm1"], x)
+            y, _ = self._self_attn(p["attn"], h, pos, None, causal=False)
+            x = x + y
+            h = self._norm(p["norm2"], x)
+            y, _ = self._ffn(p["ffn"], h, jnp.zeros((), jnp.float32))
+            return constrain(x + y, "batch", "seq", "embed"), None
+
+        if cfg.unroll_units:
+            rb = self._maybe_remat(body)
+            for g in range(cfg.encoder_layers):
+                x, _ = rb(x, jax.tree.map(lambda t: t[g], params["encoder"]))
+        else:
+            x, _ = jax.lax.scan(self._maybe_remat(body), x, params["encoder"])
+        return self._norm(params["enc_norm"], x), pos
+
+    def _positions(self, batch, tokens):
+        B, S = tokens.shape
+        positions = batch.get("positions")
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        if self.cfg.mrope_sections is not None and "mrope_positions" in batch:
+            positions = batch["mrope_positions"]
+        return positions
+
+    def apply(self, params, batch):
+        x, aux = self.apply_hidden(params, batch)
+        return self._logits(params, x), aux
+
+    def _dense_layer_fwd(self, p, x, positions):
+        h = self._norm(p["norm1"], x)
+        y, _ = self._self_attn(p["attn"], h, positions, None)
+        x = x + y
+        h = self._norm(p["norm2"], x)
+        y, aux = self._ffn(p["ffn"], h, jnp.zeros((), jnp.float32))
+        return constrain(x + y, "batch", "seq", "embed"), aux
+
+    def apply_hidden(self, params, batch):
+        """Forward up to the final norm (no logits) — shared by loss()."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self._embed(params, tokens)
+        if "input_embeds" in batch:
+            ie = batch["input_embeds"].astype(x.dtype)
+            x = jnp.concatenate([ie, x[:, ie.shape[1]:]], axis=1)
+        positions = self._positions(batch, tokens)
+        enc_states = enc_pos = None
+        if cfg.encoder_layers:
+            enc_states, enc_pos = self._encode(params, batch)
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(cfg.first_dense):
+            x, a = self._dense_layer_fwd(params[f"dense{i}"], x, positions)
+            aux += a
+
+        def body(carry, up):
+            x, aux = carry
+            x, a = self._unit_fwd(up, x, positions, enc_states, enc_pos)
+            return (x, aux + a), None
+
+        if cfg.unroll_units:
+            rb = self._maybe_remat(body)
+            for g in range(cfg.num_units):
+                up = jax.tree.map(lambda t: t[g], params["units"])
+                (x, aux), _ = rb((x, aux), up)
+        else:
+            (x, aux), _ = jax.lax.scan(self._maybe_remat(body), (x, aux),
+                                       params["units"])
+        return self._norm(params["final_norm"], x), aux
+
+    def loss(self, params, batch):
+        """Chunked (fused) cross-entropy: logits are produced and reduced one
+        sequence chunk at a time inside a remat'd scan, so the (B, S, V)
+        tensor never exists — the train-cell memory spike of big-vocab archs
+        disappears (EXPERIMENTS.md §Perf, hillclimb A)."""
+        cfg = self.cfg
+        x, aux = self.apply_hidden(params, batch)
+        targets = batch["targets"]
+        B, S, D = x.shape
+        C = min(cfg.loss_chunk, S)
+        if S % C != 0:
+            C = S                                   # irregular: single chunk
+        nc = S // C
+        w = (params["embed"].astype(cfg.dtype).T if cfg.tie_embeddings
+             else params["unembed"].astype(cfg.dtype))
+
+        def chunk_nll(xc, tc):
+            logits = jnp.einsum("bsd,dv->bsv", xc, w).astype(jnp.float32)
+            if cfg.logit_softcap:
+                logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+            logits = constrain(logits, "batch", "seq", "vocab")
+            valid = tc >= 0
+            tgt = jnp.where(valid, tc, 0)
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+            return jnp.sum((logz - gold) * valid), jnp.sum(valid)
+
+        chunk_nll = jax.checkpoint(chunk_nll)
+        # python loop (not lax.scan): keeps every chunk's FLOPs visible to
+        # the roofline cost analysis (a scan body is counted once) while the
+        # accumulation chain + remat keep only one chunk's logits live.
+        tot = jnp.zeros((), jnp.float32)
+        n = jnp.zeros((), jnp.int32)
+        for i in range(nc):
+            s, k = chunk_nll(x[:, i * C:(i + 1) * C], targets[:, i * C:(i + 1) * C])
+            tot = tot + s
+            n = n + k
+        return tot / jnp.maximum(n, 1) + aux
+
+    # ---------------- serving: cache / prefill / decode ----------------
+    def init_cache(self, batch: int, max_len: int):
+        """Cache pytree + axes for one decode stream batch."""
+        cfg = self.cfg
+        G = cfg.num_units
+        caches, axes = {}, {}
+        Hk = cfg.num_kv_heads * cfg.kv_repeat
+        for i, kind in enumerate(cfg.unit):
+            if kind == "attn" and cfg.attention == "mla":
+                m = cfg.mla
+                caches[f"l{i}"] = {
+                    "c": jnp.zeros((G, batch, max_len, m.kv_lora_rank), cfg.dtype),
+                    "kr": jnp.zeros((G, batch, max_len, m.qk_rope_dim), cfg.dtype)}
+                axes[f"l{i}"] = {
+                    "c": Axes(None, "batch", "kv_seq", None),
+                    "kr": Axes(None, "batch", "kv_seq", None)}
+            elif kind == "attn":
+                # NOTE: caches hold the UNREPEATED kv heads — kv_repeat only
+                # exists so training activations shard over 'model'; decode
+                # shards the cache over 'kv_seq' instead, and GQA grouping
+                # attends to raw kv heads directly (4x less cache for
+                # kv_repeat=4 archs).
+                hkc = cfg.num_kv_heads
+                caches[f"l{i}"] = {
+                    "k": jnp.zeros((G, batch, max_len, hkc, cfg.hd), cfg.dtype),
+                    "v": jnp.zeros((G, batch, max_len, hkc, cfg.hd), cfg.dtype)}
+                axes[f"l{i}"] = {
+                    "k": Axes(None, "batch", "kv_seq", "kv_heads", None),
+                    "v": Axes(None, "batch", "kv_seq", "kv_heads", None)}
+            elif kind == "mamba":
+                mc = cfg.mamba
+                caches[f"l{i}"] = {
+                    "ssm": jnp.zeros((G, batch, mc.d_inner, mc.d_state), jnp.float32),
+                    "conv": jnp.zeros((G, batch, mc.d_conv - 1, mc.d_inner), cfg.dtype)}
+                axes[f"l{i}"] = {
+                    "ssm": Axes(None, "batch", "d_ff", None),
+                    "conv": Axes(None, "batch", None, "d_ff")}
+            else:  # rwkv
+                rc = cfg.rwkv
+                caches[f"l{i}"] = {
+                    "S": jnp.zeros((G, batch, rc.num_heads, rc.head_size,
+                                    rc.head_size), jnp.float32),
+                    "x_prev": jnp.zeros((G, batch, 1, cfg.d_model), cfg.dtype)}
+                axes[f"l{i}"] = {
+                    "S": Axes(None, "batch", None, None, None),
+                    "x_prev": Axes(None, "batch", None, "embed")}
+        return caches, axes
+
+    def _attn_decode(self, p, h, pos, cache, window):
+        """One-token attention against the (seq-sharded) cache."""
+        cfg = self.cfg
+        acfg = cfg.attn_cfg(window)
+        B = h.shape[0]
+        positions = jnp.full((B, 1), pos, jnp.int32)
+        if cfg.attention == "mla":
+            c_t, kr_t = L.mla_compress(p, h, positions, cfg.mla)
+            c = jax.lax.dynamic_update_slice(cache["c"], c_t, (0, pos, 0))
+            kr = jax.lax.dynamic_update_slice(cache["kr"], kr_t, (0, pos, 0))
+            pos_k = jnp.broadcast_to(
+                jnp.arange(c.shape[1], dtype=jnp.int32), (B, c.shape[1]))
+            y, _ = L.mla_apply(p, h, positions, cfg.mla, cache=(c, kr),
+                               pos_k=pos_k)
+            return y, {"c": c, "kr": kr}
+        q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(h.dtype))
+        k = jnp.einsum("bsd,dhk->bshk", h, p["wk"].astype(h.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", h, p["wv"].astype(h.dtype))
+        if acfg.qk_norm:
+            q = L._qk_norm(q, p["q_norm"])
+            k = L._qk_norm(k, p["k_norm"])
+        if cfg.use_rope:
+            mp = (jnp.broadcast_to(positions, (3, B, 1))
+                  if cfg.mrope_sections is not None else positions)
+            q = apply_rope(q, mp, acfg.rope_theta, acfg.mrope_sections)
+            k = apply_rope(k, mp, acfg.rope_theta, acfg.mrope_sections)
+        kc = jax.lax.dynamic_update_slice(cache["k"], k, (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache["v"], v, (0, pos, 0, 0))
+        kc = constrain(kc, "batch", "kv_seq", "kv_heads", None)
+        vc = constrain(vc, "batch", "kv_seq", "kv_heads", None)
+        S = kc.shape[1]
+        pos_k = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        out = L.attention(q, kc, vc, positions, pos_k,
+                          dataclasses.replace(acfg, blocked_threshold=1 << 30),
+                          causal=True)
+        y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(h.dtype))
+        return y, {"k": kc, "v": vc}
+
+    def decode_step(self, params, token, pos, caches, enc_states=None,
+                    enc_pos=None):
+        """token: (B, 1) int32; pos: scalar int32 — returns (logits, caches)."""
+        cfg = self.cfg
+        x = self._embed(params, token)
+        B = token.shape[0]
+        positions = jnp.full((B, 1), pos, jnp.int32)
+        # first_dense layers (deepseek layer 0) carry their own cache entries
+        # under caches["dense"] (see init_dense_cache).
+        dense_caches = caches.get("dense", {})
+        new_dense = {}
+        for i in range(cfg.first_dense):
+            p = params[f"dense{i}"]
+            h = self._norm(p["norm1"], x)
+            y, c = self._attn_decode(p["attn"], h, pos, dense_caches[f"d{i}"],
+                                     None)
+            x = x + y
+            h = self._norm(p["norm2"], x)
+            y, _ = self._ffn(p["ffn"], h, jnp.zeros((), jnp.float32))
+            x = x + y
+            new_dense[f"d{i}"] = c
+
+        def body(x, scanned):
+            up, cache = scanned
+            new_cache = {}
+            for i, kind in enumerate(cfg.unit):
+                p = up[f"l{i}"]
+                h = self._norm(p["norm1"], x)
+                if kind == "attn":
+                    y, c = self._attn_decode(p["attn"], h, pos, cache[f"l{i}"],
+                                             self._window_for(i))
+                elif kind == "mamba":
+                    y, st = mamba_decode(p["mamba"], h,
+                                         (cache[f"l{i}"]["ssm"],
+                                          cache[f"l{i}"]["conv"]),
+                                         cfg.mamba)
+                    c = {"ssm": st[0], "conv": st[1]}
+                else:
+                    y, st = rwkv_decode(p["rwkv"], h,
+                                        (cache[f"l{i}"]["S"],
+                                         cache[f"l{i}"]["x_prev"]),
+                                        cfg.rwkv)
+                    c = {"S": st[0], "x_prev": st[1]}
+                x = x + y
+                if enc_states is not None:
+                    hc = self._norm(p["norm_cross"], x)
+                    x = x + self._cross_attn(p["cross"], hc, positions,
+                                             enc_states, enc_pos)
+                h = self._norm(p["norm2"], x)
+                y, _ = self._ffn(p["ffn"], h, jnp.zeros((), jnp.float32))
+                x = x + y
+                new_cache[f"l{i}"] = c
+            return x, new_cache
+
+        unit_caches = {k: v for k, v in caches.items() if k != "dense"}
+        if cfg.unroll_units:
+            outs = []
+            for g in range(cfg.num_units):
+                sl = jax.tree.map(lambda t: t[g],
+                                  (params["units"], unit_caches))
+                x, nc = body(x, sl)
+                outs.append(nc)
+            new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        else:
+            x, new_caches = jax.lax.scan(body, x,
+                                         (params["units"], unit_caches))
+        x = self._norm(params["final_norm"], x)
+        logits = self._logits(params, x)
+        if cfg.first_dense:
+            new_caches = dict(new_caches)
+            new_caches["dense"] = new_dense
+        return logits, new_caches
+
+    def init_dense_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        out, axes = {}, {}
+        Hk = cfg.num_kv_heads
+        for i in range(cfg.first_dense):
+            if cfg.attention == "mla":
+                m = cfg.mla
+                out[f"d{i}"] = {
+                    "c": jnp.zeros((batch, max_len, m.kv_lora_rank), cfg.dtype),
+                    "kr": jnp.zeros((batch, max_len, m.qk_rope_dim), cfg.dtype)}
+                axes[f"d{i}"] = {"c": Axes("batch", "kv_seq", None),
+                                 "kr": Axes("batch", "kv_seq", None)}
+            else:
+                out[f"d{i}"] = {
+                    "k": jnp.zeros((batch, max_len, Hk, cfg.hd), cfg.dtype),
+                    "v": jnp.zeros((batch, max_len, Hk, cfg.hd), cfg.dtype)}
+                axes[f"d{i}"] = {"k": Axes("batch", "kv_seq", "kv_heads", None),
+                                 "v": Axes("batch", "kv_seq", "kv_heads", None)}
+        return out, axes
+
+
+def shapes_and_axes(model: Model):
+    """(ShapeDtypeStruct tree, Axes tree) without allocating parameters.
+
+    Axes are plain Python objects, so they can't ride through eval_shape's
+    return value — capture them during the trace instead."""
+    box = {}
+
+    def only_params(k):
+        p, a = model.init(k)
+        box["axes"] = a
+        return p
+
+    shapes = jax.eval_shape(only_params, jax.random.PRNGKey(0))
+    return shapes, box["axes"]
+
+
+def param_count(model: Model) -> int:
+    shapes, _ = shapes_and_axes(model)
+    return sum(int(math.prod(s.shape)) for s in jax.tree.leaves(shapes))
+
+
+__all__ = ["Model", "ModelConfig", "MoEConfig", "MLAConfig", "MambaConfig",
+           "RWKVConfig", "shapes_and_axes", "param_count"]

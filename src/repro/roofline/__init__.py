@@ -1,0 +1,5 @@
+from .analysis import (HW, collective_bytes, roofline_report, parse_cost,
+                       model_flops_6nd)
+
+__all__ = ["HW", "collective_bytes", "roofline_report", "parse_cost",
+           "model_flops_6nd"]

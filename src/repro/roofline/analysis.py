@@ -1,0 +1,117 @@
+"""Roofline terms from compiled dry-run artifacts (TPU v5e constants).
+
+  compute term    = HLO_FLOPs / (chips x 197 TFLOP/s bf16)
+  memory term     = HLO_bytes / (chips x 819 GB/s HBM)
+  collective term = collective_bytes / (chips x ~50 GB/s/link ICI)
+
+``cost_analysis()`` supplies FLOPs/bytes; collective bytes are parsed from
+the compiled HLO text (result-shape bytes of all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute).
+
+Scan caveat (measured, see tests/test_roofline.py): XLA's cost analysis
+counts a while-loop body ONCE regardless of trip count. Every launcher
+therefore passes ``scan_trips`` — the per-cell layer-scan trip count — and
+we scale the scanned fraction via two-point calibration when provided, or
+report the single-trip numbers with the multiplier attached.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    """TPU v5e per-chip."""
+    flops: float = 197e12          # bf16
+    hbm_bw: float = 819e9          # bytes/s
+    ici_bw: float = 50e9           # bytes/s/link
+    hbm_bytes: float = 16e9
+
+
+V5E = HW()
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """{collective op: summed result bytes} over the compiled module.
+
+    '-start' variants (async) are counted once ('-done' carries no shape
+    work). Bytes inside while-loop bodies are counted once per the scan
+    caveat; launchers scale by trip count.
+    """
+    out: dict[str, int] = {}
+    for shape_str, op in _COLL_RE.findall(hlo_text):
+        out[op] = out.get(op, 0) + _shape_bytes(shape_str)
+    return out
+
+
+def parse_cost(cost: dict) -> dict:
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+    }
+
+
+def model_flops_6nd(n_params: int, n_tokens: int,
+                    n_active: int | None = None) -> float:
+    """6·N·D (dense) or 6·N_active·D (MoE) — the useful-compute yardstick."""
+    return 6.0 * float(n_active if n_active is not None else n_params) \
+        * float(n_tokens)
+
+
+def roofline_report(flops: float, bytes_hbm: float, coll: dict[str, int],
+                    chips: int, hw: HW = V5E, model_flops: float = 0.0,
+                    per_device: bool = True) -> dict:
+    """Three roofline terms in seconds + dominant bottleneck.
+
+    ``per_device``: cost_analysis numbers on SPMD-partitioned modules are
+    already per-device (the module is the per-device program); collective
+    bytes parsed from HLO likewise. Set False if totals are global.
+    """
+    div = 1 if per_device else chips
+    coll_total = float(sum(coll.values()))
+    t_compute = flops / div / hw.flops
+    t_memory = bytes_hbm / div / hw.hbm_bw
+    t_coll = coll_total / div / hw.ici_bw
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    out = dict(terms)
+    out.update({
+        "dominant": dominant,
+        "collective_bytes": coll_total,
+        "hlo_flops_per_chip": flops / div,
+        "hlo_bytes_per_chip": bytes_hbm / div,
+        "model_flops": model_flops,
+        "useful_flops_ratio": (model_flops / chips / (flops / div)
+                               if flops else 0.0),
+        "bound_step_s": max(terms.values()),
+        "roofline_fraction": (t_compute / max(terms.values())
+                              if max(terms.values()) > 0 else 0.0),
+    })
+    return out

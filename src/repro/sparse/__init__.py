@@ -1,0 +1,6 @@
+from .matrix import SparseCSR, SparseCSC, from_dense, random_sparse
+from .spmm import spmsp_matmul
+from .ttv import CSFTensor, random_csf, ttv
+
+__all__ = ["SparseCSR", "SparseCSC", "from_dense", "random_sparse",
+           "spmsp_matmul", "CSFTensor", "random_csf", "ttv"]

@@ -1,0 +1,7 @@
+from .optimizer import adamw_init, adamw_update, OptConfig
+from .data import SyntheticLMData
+from .train_step import make_train_step, lr_schedule
+from .checkpoint import CheckpointManager
+
+__all__ = ["adamw_init", "adamw_update", "OptConfig", "SyntheticLMData",
+           "make_train_step", "lr_schedule", "CheckpointManager"]

@@ -1,0 +1,184 @@
+"""AdamW with ZeRO-1 sharding and optional 8-bit state (block-quantised).
+
+No optax in this container — implemented from scratch.
+
+* ZeRO-1: the optimizer-state shardings are the parameter shardings with an
+  extra ('data','pod') assignment on the first still-replicated, dividing
+  dimension (``zero_shardings``). XLA then keeps m/v fully sharded and
+  all-gathers nothing (the update is elementwise).
+
+* 8-bit state (``state_bits=8``): m and v are stored as int8 with per-block
+  float32 scales (block = last-dim groups of 128), dynamically dequantised
+  inside the update. This is what lets the 398B jamba config hold
+  master + m + v within 16 GB/chip on a single pod — see EXPERIMENTS.md
+  §Dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import (Axes, ShardingRules, is_axes,
+                                        logical_to_physical, named_sharding)
+
+BLOCK = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_bits: int = 32          # 32 | 8
+    master_weights: bool = False  # params ride bf16; fp32 master lives here
+    #                               (halves FSDP all-gather bytes + weight
+    #                               memory; §Perf hillclimb)
+
+
+# ---------------------------------------------------------------------------
+# 8-bit block quantisation
+# ---------------------------------------------------------------------------
+
+def _quantize(x: jax.Array):
+    """float -> (int8, scales). Blocks along the last dim (padded)."""
+    shape = x.shape
+    n = shape[-1] if shape else 1
+    nb = max(1, -(-n // BLOCK))
+    pad = nb * BLOCK - n
+    xp = jnp.pad(x.reshape(-1, n), ((0, 0), (0, pad)))
+    xb = xp.reshape(-1, nb, BLOCK)
+    scale = jnp.max(jnp.abs(xb), axis=-1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(-1, nb * BLOCK)[:, :n].reshape(shape), \
+        scale[..., 0].reshape(x.reshape(-1, n).shape[0], nb)
+
+
+def _dequantize(q: jax.Array, scale: jax.Array, shape, floor: bool = False):
+    """int8 blocks -> float. ``floor=True`` clamps magnitudes below half an
+    ULP up to scale/2 — used for the sqrt-second-moment so a tiny v can
+    never dequantise to 0 and explode the Adam step (the error direction is
+    then always a *smaller* step, never a larger one)."""
+    n = shape[-1] if shape else 1
+    nb = scale.shape[-1]
+    pad = nb * BLOCK - n
+    qp = jnp.pad(q.reshape(-1, n).astype(jnp.float32), ((0, 0), (0, pad)))
+    xb = qp.reshape(-1, nb, BLOCK)
+    if floor:
+        xb = jnp.maximum(jnp.abs(xb), 0.5)
+    x = xb * scale[..., None]
+    return x.reshape(-1, nb * BLOCK)[:, :n].reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# init / update
+# ---------------------------------------------------------------------------
+
+def adamw_init(params, cfg: OptConfig):
+    def leaf(p):
+        if cfg.state_bits == 8:
+            q, s = _quantize(jnp.zeros_like(p, jnp.float32))
+            out = {"m_q": q, "m_s": s, "v_q": q, "v_s": s}
+        else:
+            out = {"m": jnp.zeros_like(p, jnp.float32),
+                   "v": jnp.zeros_like(p, jnp.float32)}
+        if cfg.master_weights:
+            out["master"] = p.astype(jnp.float32)
+        return out
+    return {"mu": jax.tree.map(leaf, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, state, params, lr, cfg: OptConfig):
+    count = state["count"] + 1
+    # global-norm clip
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    c1 = 1 - cfg.b1 ** count.astype(jnp.float32)
+    c2 = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+    def leaf(g, mu, p):
+        g = g.astype(jnp.float32) * clip
+        if cfg.state_bits == 8:
+            m = _dequantize(mu["m_q"], mu["m_s"], g.shape)
+            # v rides in sqrt-space: quadratic dynamic-range compression +
+            # floored dequant => Adam denominator can never hit zero
+            v = jnp.square(_dequantize(mu["v_q"], mu["v_s"], g.shape,
+                                       floor=True))
+        else:
+            m, v = mu["m"], mu["v"]
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        upd = (m / c1) / (jnp.sqrt(v / c2) + cfg.eps)
+        base = mu["master"] if cfg.master_weights else p.astype(jnp.float32)
+        new_master = base - lr * (upd + cfg.weight_decay * base)
+        new_p = new_master.astype(p.dtype)
+        if cfg.state_bits == 8:
+            mq, ms = _quantize(m)
+            vq, vs = _quantize(jnp.sqrt(v))
+            out = {"m_q": mq, "m_s": ms, "v_q": vq, "v_s": vs}
+        else:
+            out = {"m": m, "v": v}
+        if cfg.master_weights:
+            out["master"] = new_master
+        return new_p, out
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_mu = tdef.flatten_up_to(state["mu"])
+    flat_p = tdef.flatten_up_to(params)
+    out = [leaf(g, mu, p) for g, mu, p in zip(flat_g, flat_mu, flat_p)]
+    new_params = tdef.unflatten([o[0] for o in out])
+    new_mu = tdef.unflatten([o[1] for o in out])
+    return new_params, {"mu": new_mu, "count": count}, gnorm
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1 sharding for the state
+# ---------------------------------------------------------------------------
+
+def zero_axes(axes: Axes, shape, mesh, rules: ShardingRules) -> Axes:
+    """Param logical axes -> state logical axes with ZeRO 'opt' on the first
+    dim that resolves to replicated and divides the opt axes product."""
+    spec = logical_to_physical(axes, mesh, rules, shape)
+    sizes = dict(mesh.shape)
+    opt_axes = rules.get("opt") or ()
+    opt_size = 1
+    for a in opt_axes:
+        opt_size *= sizes.get(a, 1)
+    out = list(axes)
+    for d, (name, resolved) in enumerate(zip(axes, tuple(spec) + (None,) * 9)):
+        if resolved is None and shape[d] % max(opt_size, 1) == 0 and opt_size > 1:
+            out[d] = "opt"
+            break
+    return Axes(*out)
+
+
+def opt_state_shardings(params_shapes, param_axes, mesh, rules: ShardingRules,
+                        cfg: OptConfig):
+    """NamedSharding tree matching adamw_init's structure."""
+    flat_s, _ = jax.tree.flatten(params_shapes)
+    flat_a = jax.tree.flatten(param_axes, is_leaf=is_axes)[0]
+
+    def one(sds, axes):
+        zaxes = zero_axes(axes, tuple(sds.shape), mesh, rules)
+        base = named_sharding(zaxes, mesh, rules, tuple(sds.shape))
+        if cfg.state_bits == 8:
+            # scales are 2D (rows, blocks): shard replicated (small)
+            rep = named_sharding(Axes(None, None), mesh, rules)
+            out = {"m_q": base, "m_s": rep, "v_q": base, "v_s": rep}
+        else:
+            out = {"m": base, "v": base}
+        if cfg.master_weights:
+            out["master"] = base
+        return out
+
+    leaves = [one(s, a) for s, a in zip(flat_s, flat_a)]
+    tdef = jax.tree.structure(params_shapes)
+    rep0 = named_sharding(Axes(), mesh, rules)
+    return {"mu": jax.tree.unflatten(tdef, leaves), "count": rep0}

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests see the 1 real device — the 512-device override lives ONLY in
+# launch/dryrun.py (spawned as a subprocess where needed).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

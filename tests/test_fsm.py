@@ -1,0 +1,87 @@
+"""FSM: MNI support vs brute-force oracle; downward closure; sFSM contrast."""
+import numpy as np
+import pytest
+
+from repro.graph import build_csr
+from repro.graph.generators import erdos_renyi, powerlaw_cluster
+from repro.mining.fsm import fsm, random_labels, sfsm
+from repro.mining.reference import fsm_oracle
+
+
+@pytest.mark.parametrize("seed,nlab", [(1, 2), (2, 3), (3, 4)])
+def test_fsm_matches_oracle(seed, nlab):
+    g = build_csr(erdos_renyi(22, 55, seed=seed), 22)
+    labels = random_labels(22, nlab, seed=seed)
+    got = fsm(g, labels, min_support=2)
+    want = fsm_oracle(g, labels, min_support=2, metric="mni")
+    assert got == want
+
+
+@pytest.mark.parametrize("seed", [1, 4])
+def test_sfsm_matches_oracle_modulo_closure_bug(seed):
+    """sFSM prunes with GRAMER's count-'support', which VIOLATES downward
+    closure — so (faithfully) it may miss patterns the exhaustive oracle
+    finds. Assert: every reported value is exact, and every miss is
+    explained by an infrequent-by-count sub-pattern (the paper's §VI-B
+    criticism, reproduced)."""
+    g = build_csr(powerlaw_cluster(20, 3, seed=seed), 20)
+    labels = random_labels(20, 3, seed=seed)
+    got = sfsm(g, labels, min_support=3)
+    want = fsm_oracle(g, labels, min_support=3, metric="count")
+    for k, v in got.items():
+        assert want.get(k) == v, k
+    all_counts = fsm_oracle(g, labels, min_support=0, metric="count")
+    from repro.mining.fsm import edge_key, wedge_key
+    for k in set(want) - set(got):
+        kind, lab = k
+        subs = []
+        if kind == "wedge":
+            la, lb, lc = lab
+            subs = [edge_key(la, lb), edge_key(lb, lc)]
+        elif kind == "triangle":
+            la, lb, lc = lab
+            subs = [edge_key(la, lb), edge_key(lb, lc), edge_key(la, lc),
+                    wedge_key(lb, la, lc), wedge_key(la, lb, lc),
+                    wedge_key(la, lc, lb)]
+        elif kind == "star3":
+            c, leaves = lab
+            subs = [edge_key(c, l) for l in leaves]
+            subs += [wedge_key(x, c, y)
+                     for i, x in enumerate(leaves) for y in leaves[i + 1:]]
+        elif kind == "path4":
+            a, b, c, d = lab
+            subs = [edge_key(a, b), edge_key(b, c), edge_key(c, d),
+                    wedge_key(a, b, c), wedge_key(b, c, d)]
+        assert any(all_counts.get(s, 0) < 3 for s in subs), \
+            f"{k} missed but all sub-patterns frequent"
+
+
+def test_downward_closure_property():
+    """MNI support of any 3-edge pattern <= support of its sub-patterns —
+    the property GRAMER's count-based support violates (§VI-B)."""
+    from repro.mining.fsm import edge_key, wedge_key
+    g = build_csr(erdos_renyi(24, 70, seed=9), 24)
+    labels = random_labels(24, 2, seed=9)
+    res = fsm(g, labels, min_support=1)
+    for key, sup in res.items():
+        kind, lab = key
+        if kind == "wedge":
+            la, lb, lc = lab
+            assert sup <= res[edge_key(la, lb)]
+            assert sup <= res[edge_key(lb, lc)]
+        if kind == "triangle":
+            la, lb, lc = lab
+            for x, y in [(la, lb), (lb, lc), (la, lc)]:
+                assert sup <= res[edge_key(x, y)]
+
+
+def test_sfsm_violates_downward_closure_somewhere():
+    """Embedding counts can EXCEED a sub-pattern's count (e.g. wedges per
+    edge) — demonstrating why the paper calls GRAMER's support wrong."""
+    g = build_csr(erdos_renyi(24, 80, seed=2), 24)
+    labels = np.zeros(24, dtype=np.int32)            # single label
+    res = sfsm(g, labels, min_support=1)
+    from repro.mining.fsm import edge_key, wedge_key
+    e = res[edge_key(0, 0)]
+    w = res.get(wedge_key(0, 0, 0), 0)
+    assert w > e                                     # more wedges than edges

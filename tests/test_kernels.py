@@ -1,0 +1,116 @@
+"""Pallas kernel sweeps vs the pure-jnp oracles (interpret mode on CPU).
+
+Shape/dtype sweeps per kernel + property tests; the kernels must agree
+bit-for-bit on integer outputs and to float32 tolerance on reductions.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.stream import SENTINEL
+from repro.kernels import ops, ref
+from repro.kernels.bitmap import keys_to_bitmap
+
+RNG = np.random.default_rng(7)
+
+
+def make_rows(batch, cap, hi=4000, rng=RNG, empty_prob=0.1):
+    out = np.full((batch, cap), SENTINEL, np.int32)
+    for i in range(batch):
+        if rng.random() < empty_prob:
+            continue
+        n = int(rng.integers(1, cap))
+        out[i, :n] = np.sort(rng.choice(hi, size=n, replace=False))
+    return out
+
+
+@pytest.mark.parametrize("cap_a,cap_b", [(128, 128), (128, 384), (256, 128),
+                                         (384, 640)])
+def test_intersect_count_sweep(cap_a, cap_b):
+    a = jnp.asarray(make_rows(6, cap_a))
+    b = jnp.asarray(make_rows(6, cap_b))
+    bounds = jnp.asarray(RNG.choice([SENTINEL, 100, 2000, 3999], size=6)
+                         .astype(np.int32))
+    got = ops.xinter_count(a, b, bounds, backend="pallas")
+    want = ref.intersect_count_ref(a, b, bounds)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("cap_a,cap_b", [(128, 256), (256, 256)])
+def test_intersect_rows_sweep(cap_a, cap_b):
+    a = jnp.asarray(make_rows(5, cap_a))
+    b = jnp.asarray(make_rows(5, cap_b))
+    bounds = jnp.asarray(RNG.choice([SENTINEL, 1500], size=5).astype(np.int32))
+    rows_p, n_p = ops.xinter(a, b, bounds, backend="pallas")
+    rows_x, n_x = ops.xinter(a, b, bounds, backend="xla")
+    np.testing.assert_array_equal(rows_p, rows_x)
+    np.testing.assert_array_equal(n_p, n_x)
+
+
+def test_intersect_identical_and_disjoint():
+    a = jnp.asarray(make_rows(3, 128, empty_prob=0))
+    same = ops.xinter_count(a, a, backend="pallas")
+    lens = np.sum(np.asarray(a) != SENTINEL, axis=1)
+    np.testing.assert_array_equal(np.asarray(same), lens)
+    b = jnp.asarray(np.where(np.asarray(a) != SENTINEL,
+                             np.asarray(a) + 100_000, SENTINEL).astype(np.int32))
+    np.testing.assert_array_equal(
+        np.asarray(ops.xinter_count(a, b, backend="pallas")), 0)
+
+
+def test_intersect_empty_rows():
+    a = jnp.full((2, 128), SENTINEL, jnp.int32)
+    b = jnp.asarray(make_rows(2, 128))
+    np.testing.assert_array_equal(
+        np.asarray(ops.xinter_count(a, b, backend="pallas")), 0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 2))
+def test_bound_property(bound):
+    a = jnp.asarray(make_rows(4, 128))
+    b = jnp.asarray(make_rows(4, 128))
+    bounds = jnp.full((4,), bound, jnp.int32)
+    got = np.asarray(ops.xinter_count(a, b, bounds, backend="pallas"))
+    want = np.asarray(ref.intersect_count_ref(a, b, bounds))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("op", ["mac", "max", "min"])
+def test_vinter_sweep(op):
+    a = jnp.asarray(make_rows(5, 256))
+    b = jnp.asarray(make_rows(5, 128))
+    va = jnp.asarray(RNG.normal(size=(5, 256)).astype(np.float32))
+    vb = jnp.asarray(RNG.normal(size=(5, 128)).astype(np.float32))
+    got = ops.xvinter_mac(a, va, b, vb, op=op, backend="pallas")
+    want = ref.vinter_ref(a, va, b, vb, op=op)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_bitmap_vs_merge():
+    a = jnp.asarray(make_rows(4, 256, hi=2000))
+    b = jnp.asarray(make_rows(4, 256, hi=2000))
+    wa, wb = keys_to_bitmap(a, 2000), keys_to_bitmap(b, 2000)
+    got = ops.xbitmap_count(wa, wb, backend="pallas")
+    want = ops.xinter_count(a, b, backend="xla")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_tile_schedule_visits_are_sound():
+    """Every matching key pair must fall inside the scheduled tile range."""
+    from repro.kernels.intersect import TA, TB, tile_schedule
+    a = jnp.asarray(make_rows(8, 512))
+    b = jnp.asarray(make_rows(8, 1024))
+    bounds = jnp.full((8,), SENTINEL, jnp.int32)
+    lo, nv = tile_schedule(a, b, bounds)
+    an, bn = np.asarray(a), np.asarray(b)
+    lo, nv = np.asarray(lo), np.asarray(nv)
+    for i in range(8):
+        common = np.intersect1d(an[i][an[i] != SENTINEL],
+                                bn[i][bn[i] != SENTINEL])
+        for k in common:
+            ti = np.searchsorted(an[i], k) // TA        # a-tile of k
+            tb = np.searchsorted(bn[i], k) // TB        # b-tile of k
+            assert lo[i, ti] <= tb < lo[i, ti] + nv[i, ti], (i, k)

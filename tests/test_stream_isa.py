@@ -1,0 +1,117 @@
+"""Stream ISA semantics: Table I instructions vs python-set oracles, plus
+the representation invariants I1-I4 (hypothesis property tests)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import isa
+from repro.core.stream import (LANE, SENTINEL, Stream, StreamTable,
+                               make_stream, round_capacity, stream_from_slice,
+                               to_host)
+
+sorted_sets = st.lists(st.integers(0, 10_000), max_size=300).map(
+    lambda xs: np.array(sorted(set(xs)), dtype=np.int32))
+bounds = st.one_of(st.none(), st.integers(0, 10_000))
+
+
+def check_invariants(s: Stream):
+    keys = np.asarray(s.keys)
+    n = int(s.length)
+    assert s.capacity % LANE == 0                       # I4
+    assert 0 <= n <= s.capacity                         # I3
+    assert np.all(keys[n:] == SENTINEL)                 # I2
+    if n > 1:
+        assert np.all(np.diff(keys[:n]) > 0)            # I1 strictly sorted
+
+
+@settings(max_examples=40, deadline=None)
+@given(sorted_sets, sorted_sets, bounds)
+def test_inter_matches_set_semantics(a, b, bound):
+    sa, sb = make_stream(a), make_stream(b)
+    out = isa.s_inter(sa, sb, bound)
+    check_invariants(out)
+    want = np.intersect1d(a, b)
+    if bound is not None:
+        want = want[want < bound]
+    np.testing.assert_array_equal(to_host(out), want)
+    assert int(isa.s_inter_c(sa, sb, bound)) == len(want)
+
+
+@settings(max_examples=40, deadline=None)
+@given(sorted_sets, sorted_sets, bounds)
+def test_sub_matches_set_semantics(a, b, bound):
+    sa, sb = make_stream(a), make_stream(b)
+    out = isa.s_sub(sa, sb, bound)
+    check_invariants(out)
+    want = np.setdiff1d(a, b)
+    if bound is not None:
+        want = want[want < bound]
+    np.testing.assert_array_equal(to_host(out), want)
+    assert int(isa.s_sub_c(sa, sb, bound)) == len(want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(sorted_sets, sorted_sets)
+def test_union_identity(a, b):
+    sa, sb = make_stream(a), make_stream(b)
+    assert int(isa.s_union_count(sa, sb)) == len(np.union1d(a, b))
+
+
+@settings(max_examples=25, deadline=None)
+@given(sorted_sets, sorted_sets)
+def test_vinter_mac_is_sparse_dot(a, b):
+    va = np.arange(len(a), dtype=np.float32) + 1
+    vb = 2.0 * (np.arange(len(b), dtype=np.float32) + 1)
+    sa, sb = make_stream(a, values=va), make_stream(b, values=vb)
+    got = float(isa.s_vinter(sa, sb, op="mac"))
+    da = dict(zip(a.tolist(), va))
+    db = dict(zip(b.tolist(), vb))
+    want = sum(da[k] * db[k] for k in set(da) & set(db))
+    assert got == pytest.approx(want, rel=1e-5)
+
+
+def test_vinter_max_min():
+    a = make_stream([1, 3, 5], values=[1., 10., 2.])
+    b = make_stream([3, 5, 7], values=[4., 1., 9.])
+    assert float(isa.s_vinter(a, b, op="max")) == pytest.approx(10. + 2.)
+    assert float(isa.s_vinter(a, b, op="min")) == pytest.approx(4. + 1.)
+
+
+def test_vinter_requires_values():
+    a, b = make_stream([1, 2]), make_stream([2, 3])
+    with pytest.raises(TypeError):
+        isa.s_vinter(a, b)
+
+
+def test_fetch_and_eos():
+    s = make_stream([10, 20, 30])
+    assert int(isa.s_fetch(s, 1)) == 20
+    assert int(isa.s_fetch(s, 3)) == SENTINEL     # EOS
+    assert int(isa.s_fetch(s, 1000)) == SENTINEL
+
+
+def test_stream_from_slice_is_s_read():
+    mem = np.arange(0, 100, 2, dtype=np.int32)    # sorted memory
+    s = stream_from_slice(np.asarray(mem), 5, 7, capacity=7)
+    np.testing.assert_array_equal(to_host(s), mem[5:12])
+    check_invariants(s)
+
+
+def test_stream_table_smt_semantics():
+    t = StreamTable(max_active=2)
+    s1 = t.register(make_stream([1]))
+    s2 = t.register(make_stream([2]))
+    with pytest.raises(RuntimeError):              # stall-on-full
+        t.register(make_stream([3]))
+    t.release(s1)                                  # S_FREE
+    with pytest.raises(KeyError):                  # use-after-free
+        t.get(s1)
+    t.register(make_stream([4]))                   # slot reusable
+    assert int(to_host(t.get(s2))[0]) == 2
+
+
+def test_round_capacity():
+    assert round_capacity(0) == LANE
+    assert round_capacity(1) == LANE
+    assert round_capacity(LANE) == LANE
+    assert round_capacity(LANE + 1) == 2 * LANE
