@@ -70,6 +70,40 @@ def modeled_tpu_triangle_time(g) -> float:
     return max(t_compute, t_mem)
 
 
+def wave_throughput_report(g, k: int = 4) -> dict:
+    """Before/after the device-resident rewrite: work items/s through the
+    expand -> compact -> next-wave loop on a warmed executable cache.
+
+    'host' routes every level through the np.nonzero + re-upload oracle;
+    'device' keeps the worklist on device (ops.xinter_compact) with only
+    the 3-scalar meta sync per level. Same counts by construction (tested
+    bit-identical in tests/test_wave_device.py)."""
+    from repro.mining.engine import WaveRunner
+    out = {}
+    for label, dc in (("host", False), ("device", True)):
+        runner = WaveRunner(g, device_compact=dc)
+        runner.clique(k)                    # warm-up: traces + compiles
+        warm = dict(runner.stats)
+        t0 = time.time()
+        count = runner.clique(k)
+        dt = time.time() - t0
+        items = runner.stats["items"] - warm["items"]
+        out[label] = {
+            "count": count, "seconds": round(dt, 4), "items": items,
+            "items_per_s": round(items / max(dt, 1e-9), 1),
+            # per-timed-run deltas: the warm-up pass must not inflate these
+            "host_compactions": (runner.stats["host_compactions"]
+                                 - warm["host_compactions"]),
+            "device_compactions": (runner.stats["device_compactions"]
+                                   - warm["device_compactions"]),
+            "exec_misses": runner.stats["exec_misses"] - warm["exec_misses"],
+        }
+    assert out["host"]["count"] == out["device"]["count"]
+    out["wave_speedup"] = round(
+        out["host"]["seconds"] / max(out["device"]["seconds"], 1e-9), 2)
+    return out
+
+
 def run(quick: bool = True):
     rows = []
     sets = BENCH_SETS[:6] if quick else BENCH_SETS
@@ -79,6 +113,17 @@ def run(quick: bool = True):
         t_tpu = modeled_tpu_triangle_time(g)
         print(f"[mining] {name:14s} modeled v5e triangle kernel floor: "
               f"{t_tpu*1e3:.2f} ms (schedule-derived)", flush=True)
+        wt = wave_throughput_report(g)
+        print(f"[mining] {name:14s} 4C wave loop: "
+              f"host {wt['host']['items_per_s']:.0f} items/s "
+              f"({wt['host']['host_compactions']} np.nonzero round-trips) | "
+              f"device {wt['device']['items_per_s']:.0f} items/s "
+              f"(0 host round-trips) | wave_speedup={wt['wave_speedup']}x",
+              flush=True)
+        rows.append(dict(dataset=name, app="4C-wave", **{
+            "host_items_per_s": wt["host"]["items_per_s"],
+            "device_items_per_s": wt["device"]["items_per_s"],
+            "wave_speedup": wt["wave_speedup"]}))
         for app, engine_fn, base_fn in APPS:
             if quick and app == "5C" and stats["avg_deg"] > 30:
                 continue                      # dense 5C: slow scalar baseline

@@ -81,6 +81,44 @@ def batch_sub(rows_a: jax.Array, rows_b: jax.Array, bounds=None,
     return rows, jnp.sum(keep, axis=1, dtype=jnp.int32)
 
 
+@partial(jax.jit, static_argnames=("out_items",))
+def batch_compact_items(rows: jax.Array, counts: jax.Array, out_items: int):
+    """Device-side worklist compaction — §IV-F's translation buffer on device.
+
+    Every valid key rows[i, j] (j < counts[i]) becomes a work item; items are
+    emitted in row-major (i, j) order — bit-identical to the host oracle's
+    ``np.nonzero`` order. Returns:
+
+      src    (out_items,) int32  source row index of each item (0 past total)
+      verts  (out_items,) int32  extension vertex / bound    (0 past total)
+      total  ()           int32  number of live items
+      maxc   ()           int32  max per-row survivor count (next capacity)
+
+    Padding items carry vert=0, i.e. bound 0: they contribute nothing
+    downstream, so callers never need a validity mask on the fast path.
+    Mechanism: masked sort of flattened slot indices (valid slots keep their
+    row-major index, dead slots get int32-max) — a single XLA sort, no host
+    round-trip.
+    """
+    B, cap = rows.shape
+    counts = counts.astype(jnp.int32)
+    col = jnp.arange(cap, dtype=jnp.int32)
+    valid = col[None, :] < counts[:, None]
+    flat_valid = valid.reshape(-1)
+    slot = jnp.arange(B * cap, dtype=jnp.int32)
+    key = jnp.where(flat_valid, slot, SENTINEL)
+    if out_items > key.shape[0]:   # chunk-rounded item buffer > B*cap
+        key = jnp.pad(key, (0, out_items - key.shape[0]),
+                      constant_values=SENTINEL)
+    order = jnp.sort(key)[:out_items]
+    total = jnp.sum(flat_valid, dtype=jnp.int32)
+    live = jnp.arange(out_items, dtype=jnp.int32) < total
+    safe = jnp.where(live, order, 0)
+    src = safe // cap
+    verts = jnp.where(live, rows.reshape(-1)[safe], 0).astype(jnp.int32)
+    return src, verts, total, jnp.max(counts)
+
+
 @partial(jax.jit, static_argnames=("op",))
 def batch_vinter(rows_a, vals_a, rows_b, vals_b, op: str = "mac") -> jax.Array:
     """Batched S_VINTER: per-row reduce over value pairs of intersected keys."""

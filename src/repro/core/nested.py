@@ -35,4 +35,6 @@ def s_nestinter(g, s: Stream, cap: int | None = None,
     bounds = s.keys if bound_by_key else None
     a = jnp.broadcast_to(s.keys[None, :], (rows.shape[0], s.capacity))
     counts = batch_inter_count(a, rows, bounds)
-    return jnp.sum(jnp.where(valid, counts, 0), dtype=jnp.int64)
+    # int32 explicitly: without jax_enable_x64 an int64 request is silently
+    # truncated (with a UserWarning); per-vertex counts fit int32 comfortably.
+    return jnp.sum(jnp.where(valid, counts, 0), dtype=jnp.int32)

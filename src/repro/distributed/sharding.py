@@ -30,6 +30,35 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
+def make_mesh_compat(axis_shapes, axis_names, *, devices=None) -> Mesh:
+    """``jax.make_mesh`` across jax versions.
+
+    jax >= 0.5 accepts (and on some versions wants) ``axis_types``; 0.4.x
+    does not have ``jax.sharding.AxisType`` at all. Everything in this repo
+    uses plain Auto axes, so the portable call simply omits the kwarg when
+    the enum is missing.
+    """
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if hasattr(jax.sharding, "AxisType"):
+        kwargs["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axis_names)
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def abstract_mesh(axis_shapes, axis_names):
+    """``jax.sharding.AbstractMesh`` across jax versions.
+
+    0.4.x takes a single ``((name, size), ...)`` tuple; newer jax takes
+    ``(axis_shapes, axis_names)``. Only axis sizes matter for resolution
+    logic, so either spelling yields an equivalent mesh here.
+    """
+    try:
+        return jax.sharding.AbstractMesh(tuple(axis_shapes), tuple(axis_names))
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(zip(axis_names, axis_shapes)))
+
+
 class Axes(tuple):
     """Logical axes annotation; subclassing tuple but treated as a pytree
     leaf in the axes trees (axes trees only ever contain Axes leaves, and we

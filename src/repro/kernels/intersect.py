@@ -100,6 +100,34 @@ def _mark_kernel(lo_ref, nv_ref, a_ref, b_ref, bound_ref, out_ref):
         out_ref[0, :] = out_ref[0, :] | hit.astype(jnp.int32)
 
 
+def _expand_kernel(lo_ref, nv_ref, a_ref, b_ref, bound_ref, mark_ref, cnt_ref):
+    """Fused mark + count: one pass over the tile schedule feeds both the
+    compaction mask and the survivor count (the device expand_compact path
+    needs both; issuing two kernels would double the B-tile DMA traffic)."""
+    bi, i, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    a = a_ref[0, :]
+    bt = b_ref[0, :]
+    bound = bound_ref[0, 0]
+    valid = (a != SENTINEL) & (a < bound)
+    hit = (jnp.sum(((a[:, None] == bt[None, :]) & valid[:, None])
+                   .astype(jnp.int32), axis=1) > 0)
+
+    @pl.when(j == 0)
+    def _init_mark():
+        mark_ref[0, :] = jnp.zeros_like(mark_ref[0, :])
+
+    @pl.when((i == 0) & (j == 0))
+    def _init_cnt():
+        cnt_ref[0, 0] = 0
+
+    @pl.when(j < nv_ref[bi, i])
+    def _acc():
+        # B-rows are sorted sets: an A-slot matches in at most one B-tile,
+        # so summing per-visit hits never double counts.
+        mark_ref[0, :] = mark_ref[0, :] | hit.astype(jnp.int32)
+        cnt_ref[0, 0] += jnp.sum(hit.astype(jnp.int32))
+
+
 def _common(a, b, bounds, max_visits):
     B, cap_a = a.shape
     cap_b = b.shape[1]
@@ -141,6 +169,39 @@ def intersect_count_pallas(a, b, bounds=None, max_visits=None, interpret=True):
         interpret=interpret,
     )(lo_t, nv, a, b, bounds.reshape(-1, 1))
     return out[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("max_visits", "interpret"))
+def intersect_expand_pallas(a, b, bounds=None, max_visits=None, interpret=True):
+    """Fused S_INTER mark + count in one schedule pass -> (mark, counts).
+
+    The device expand_compact path consumes both outputs; fusing them halves
+    the B-tile DMA traffic vs running the mark and count kernels separately.
+    """
+    bounds, lo_t, nv, grid, cap_b = _common(a, b, bounds, max_visits)
+    mark, cnt = pl.pallas_call(
+        _expand_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, TA), lambda bi, i, j, lo, nv: (bi, i)),
+                pl.BlockSpec((1, TB),
+                             lambda bi, i, j, lo, nv: _b_index(bi, i, j, lo, nv, cap_b)),
+                pl.BlockSpec((1, 1), lambda bi, i, j, lo, nv: (bi, 0)),
+            ],
+            out_specs=(
+                pl.BlockSpec((1, TA), lambda bi, i, j, lo, nv: (bi, i)),
+                pl.BlockSpec((1, 1), lambda bi, i, j, lo, nv: (bi, 0)),
+            ),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct(a.shape, jnp.int32),
+            jax.ShapeDtypeStruct((a.shape[0], 1), jnp.int32),
+        ),
+        interpret=interpret,
+    )(lo_t, nv, a, b, bounds.reshape(-1, 1))
+    return mark, cnt[:, 0]
 
 
 @functools.partial(jax.jit, static_argnames=("max_visits", "interpret"))

@@ -8,13 +8,17 @@ Public entry points used by the engine and the sparse layer. ``backend``:
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
-from repro.core.batch import batch_inter, batch_inter_count, batch_vinter
+from repro.core.batch import (batch_compact_items, batch_inter,
+                              batch_inter_count, batch_vinter)
 from repro.core.stream import SENTINEL
 from .bitmap import bitmap_and_count_pallas, bitmap_and_count_ref, keys_to_bitmap
-from .intersect import intersect_count_pallas, intersect_mark_pallas
+from .intersect import (intersect_count_pallas, intersect_expand_pallas,
+                        intersect_mark_pallas)
 from .svinter import vinter_pallas
 
 
@@ -52,6 +56,49 @@ def xinter(a, b, bounds=None, out_cap: int | None = None, backend: str = "auto")
     return rows, jnp.sum(mark, axis=1, dtype=jnp.int32)
 
 
+@functools.partial(jax.jit, static_argnames=("out_cap", "out_items"))
+def _xinter_compact_xla(a, b, bounds, out_cap: int, out_items: int):
+    rows, counts = batch_inter(a, b, bounds, out_cap=out_cap)
+    src, verts, total, maxc = batch_compact_items(rows, counts, out_items)
+    return rows, counts, src, verts, total, maxc
+
+
+@functools.partial(jax.jit, static_argnames=("out_cap", "out_items", "interpret"))
+def _xinter_compact_pallas(a, b, bounds, out_cap: int, out_items: int,
+                           interpret: bool):
+    mark, counts = intersect_expand_pallas(a, b, bounds, interpret=interpret)
+    masked = jnp.where(mark > 0, a, SENTINEL)
+    rows = jnp.sort(masked, axis=1)[:, :out_cap]
+    src, verts, total, maxc = batch_compact_items(rows, counts, out_items)
+    return rows, counts, src, verts, total, maxc
+
+
+def xinter_compact(a, b, bounds=None, out_cap: int | None = None,
+                   out_items: int | None = None, backend: str = "auto"):
+    """Fused bounded S_INTER + worklist compaction, fully device-resident.
+
+    One dispatch produces everything the next wavefront level needs:
+
+      rows   (B, out_cap)    per-source survivor streams S_{l+1}
+      counts (B,)            per-source survivor counts
+      src    (out_items,)    compacted item -> source row index
+      verts  (out_items,)    compacted item extension vertex (0 = padding)
+      total  ()              live item count   (host-synced at level bounds)
+      maxc   ()              max survivor count (sizes the next capacity)
+
+    This replaces the engine's host ``np.nonzero`` + re-upload round-trip:
+    the Pallas kernel owns the compare work, XLA owns the masked sort /
+    prefix-scatter, and only two scalars ever cross to the host.
+    """
+    backend = _resolve(backend)
+    cap = out_cap or min(a.shape[1], b.shape[1])
+    items = out_items or a.shape[0] * cap
+    if backend == "xla":
+        return _xinter_compact_xla(a, b, bounds, cap, items)
+    return _xinter_compact_pallas(a, b, bounds, cap, items,
+                                  interpret=not _on_tpu())
+
+
 def xvinter_mac(a_keys, a_vals, b_keys, b_vals, op: str = "mac",
                 backend: str = "auto"):
     """Batched S_VINTER (SVPU): reduce over value pairs of intersected keys."""
@@ -70,5 +117,5 @@ def xbitmap_count(a_words, b_words, backend: str = "auto"):
     return bitmap_and_count_pallas(a_words, b_words, interpret=not _on_tpu())
 
 
-__all__ = ["xinter", "xinter_count", "xvinter_mac", "xbitmap_count",
-           "keys_to_bitmap"]
+__all__ = ["xinter", "xinter_count", "xinter_compact", "xvinter_mac",
+           "xbitmap_count", "keys_to_bitmap"]

@@ -8,6 +8,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.distributed.sharding import make_mesh_compat
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """(16,16)=('data','model') single pod; (2,16,16)=('pod','data','model')
@@ -23,9 +25,7 @@ def make_production_mesh(*, multi_pod: bool = False):
         raise RuntimeError(
             f"mesh {shape} needs {need} devices, have {len(devs)} — run via "
             "launch/dryrun.py which sets xla_force_host_platform_device_count")
-    return jax.make_mesh(
-        shape, axes, devices=devs[:need],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes, devices=devs[:need])
 
 
 def make_host_mesh(model_parallel: int | None = None):
@@ -34,9 +34,7 @@ def make_host_mesh(model_parallel: int | None = None):
     n = len(jax.devices())
     mp = model_parallel or 1
     assert n % mp == 0
-    return jax.make_mesh(
-        (n // mp, mp), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh_compat((n // mp, mp), ("data", "model"))
 
 
 def mesh_chips(mesh) -> int:

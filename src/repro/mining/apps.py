@@ -16,28 +16,19 @@ Definitions (verified against brute-force oracles in tests):
 from __future__ import annotations
 
 import numpy as np
-import jax.numpy as jnp
 
-from repro.core.batch import batch_inter_count, batch_sub_count
-from repro.graph.csr import CSRGraph, padded_rows
+from repro.graph.csr import CSRGraph
 from .engine import (
-    Wave, choose_chunk, compact, directed_edges, edge_wave, expand,
-    expand_count, half_edges, pair_wave, wave_chunks,
+    Wave, WaveRunner, choose_chunk, compact, expand, half_edges, pair_wave,
 )
 
 
-def _sum_counts(counts, n) -> int:
-    return int(np.asarray(counts)[:n].sum())
-
-
-def triangle_count(g: CSRGraph, chunk: int | None = None) -> int:
+def triangle_count(g: CSRGraph, chunk: int | None = None,
+                   device_compact: bool = True) -> int:
     """Symmetry-broken triangle counting: one bounded intersection per half
     edge (v0 > v1), bound v1 => each triangle v0 > v1 > v2 counted once."""
-    chunk = chunk or choose_chunk(g.padded_max_degree)
-    total = 0
-    for wave, n in edge_wave(g, chunk):
-        total += _sum_counts(expand_count(g, wave), n)
-    return total
+    runner = WaveRunner(g, chunk, device_compact=device_compact)
+    return runner.count_edges(symmetric=True, bounded=True)
 
 
 def triangle_count_nested(g: CSRGraph, chunk: int | None = None) -> int:
@@ -46,10 +37,8 @@ def triangle_count_nested(g: CSRGraph, chunk: int | None = None) -> int:
     The per-vertex nested instruction flattens to one unbounded intersection
     per *directed* edge — exactly the µop stream §IV-F's translator emits,
     laid out as data parallelism."""
-    chunk = chunk or choose_chunk(g.padded_max_degree)
-    total = 0
-    for wave, n in edge_wave(g, chunk, symmetric=False):
-        total += _sum_counts(expand_count(g, wave, bounded=False), n)
+    runner = WaveRunner(g, chunk)
+    total = runner.count_edges(symmetric=False, bounded=False)
     assert total % 6 == 0
     return total // 6
 
@@ -67,26 +56,13 @@ def three_chain_count(g: CSRGraph, induced: bool = False,
     non_induced = int((deg * (deg - 1) // 2).sum())
     if not induced:
         return non_induced
-    chunk = chunk or choose_chunk(g.padded_max_degree)
-    total = 0
-    for rows_m, rows_a, ms, as_, n in pair_wave(g, directed_edges(g), chunk):
-        full = batch_sub_count(rows_m, rows_a)
-        below = batch_sub_count(rows_m, rows_a, jnp.asarray(as_))
-        per_edge = np.asarray(full - below - 1)[:n]
-        total += int(per_edge.sum())
-    return total
+    return WaveRunner(g, chunk).three_chain_induced()
 
 
 def tailed_triangle_count(g: CSRGraph, chunk: int | None = None) -> int:
     """Fig. 2b dataflow: per directed edge (v0,v1), BoundedIntersect(N0,N1,v0)
     yields the v2 < v0 candidates; each then has deg(v1) - 2 tails v3."""
-    chunk = chunk or choose_chunk(g.padded_max_degree)
-    deg = np.asarray(g.degrees, dtype=np.int64)
-    total = 0
-    for rows0, rows1, v0, v1, n in pair_wave(g, directed_edges(g), chunk):
-        c = np.asarray(batch_inter_count(rows0, rows1, jnp.asarray(v0)))[:n]
-        total += int((c.astype(np.int64) * (deg[v1[:n]] - 2)).sum())
-    return total
+    return WaveRunner(g, chunk).tailed_triangle()
 
 
 def three_motif(g: CSRGraph) -> dict[str, int]:
@@ -96,33 +72,20 @@ def three_motif(g: CSRGraph) -> dict[str, int]:
     return {"triangle": t, "chain": chains}
 
 
-def clique_count(g: CSRGraph, k: int, chunk: int | None = None) -> int:
+def clique_count(g: CSRGraph, k: int, chunk: int | None = None,
+                 device_compact: bool = True) -> int:
     """k-clique counting, k ∈ {3,4,5}: wavefront of bounded intersections.
 
     Level l work item: (prefix stream S_l, candidate v); next stream
-    S_{l+1} = S_l ∩ N(v) ∩ [0, v). Counting at the last level."""
+    S_{l+1} = S_l ∩ N(v) ∩ [0, v). Counting at the last level. The wave
+    worklists stay device-resident between levels (``WaveRunner``);
+    ``device_compact=False`` routes through the host np.nonzero oracle."""
     if k == 3:
-        return triangle_count(g, chunk)
+        return triangle_count(g, chunk, device_compact=device_compact)
     if k not in (4, 5):
         raise ValueError("clique_count supports k in {3,4,5}")
-    chunk = chunk or choose_chunk(g.padded_max_degree)
-    total = 0
-    for wave1, n in edge_wave(g, chunk):
-        rows2, counts2 = expand(g, wave1)
-        wave2 = compact(rows2, counts2, limit=n)
-        if wave2 is None:
-            continue
-        for w2, m in wave_chunks(wave2, chunk):
-            if k == 4:
-                total += _sum_counts(expand_count(g, w2), m)
-            else:
-                rows3, counts3 = expand(g, w2, out_cap=w2.rows.shape[1])
-                wave3 = compact(rows3, counts3, limit=m)
-                if wave3 is None:
-                    continue
-                for w3, p in wave_chunks(wave3, chunk):
-                    total += _sum_counts(expand_count(g, w3), p)
-    return total
+    runner = WaveRunner(g, chunk, device_compact=device_compact)
+    return runner.clique(k)
 
 
 def triangle_list(g: CSRGraph, chunk: int | None = None) -> np.ndarray:

@@ -1,4 +1,4 @@
-"""Wavefront pattern-enumeration engine: host-orchestrated, device-batched.
+"""Wavefront pattern-enumeration engine: device-resident, host-orchestrated.
 
 The paper's execution model is a core issuing stream instructions whose
 operands live in the S-Cache. The TPU translation keeps the *dataflow* —
@@ -8,11 +8,23 @@ instruction stream with level-synchronous waves:
   level 1: the half edge list (v1 < v0, straight from the CSR offset register)
   level l: for each surviving work item, S_l = S_{l-1} ∩ N(v) ∩ [0, v)
 
-Between levels the surviving (prefix, vertex) work items are *compacted on
-the host* (the translation buffer of §IV-F become a dense worklist), and the
-prefix capacity is re-derived from the actual max survivor length — the
-paper's Fig. 14 observation (clique streams are short) becomes an adaptive
-buffer size instead of a cache-residency win.
+Between levels the surviving (prefix, vertex) work items are compacted into
+a dense worklist (the translation buffer of §IV-F), and the prefix capacity
+is re-derived from the actual max survivor length — the paper's Fig. 14
+observation (clique streams are short) becomes an adaptive buffer size.
+
+Two compaction paths exist:
+
+  * **device (fast path, ``WaveRunner``)**: the expand's match mask is
+    compacted on-device (masked sort + prefix-sum scatter,
+    ``ops.xinter_compact``) into the next wave's (rows, verts) buffers;
+    only three level-boundary scalars (total, max count, max degree) ever
+    cross to the host. Executables are cached per (cap_a, cap_b, chunk) so
+    degree-bucketed shapes never retrace, and the level-1 edge feed is
+    double-buffered (chunk N+1 uploads while chunk N computes) — the
+    S-Cache residency win, restated as "operands never leave HBM".
+  * **host (oracle, ``compact``)**: ``np.nonzero`` + re-upload. Kept as the
+    semantic reference the device path is property-tested against.
 
 Work is chunked so device buffers stay bounded; padded tail items carry
 bound=0 so they contribute nothing (branch-free masking, no special cases).
@@ -23,11 +35,13 @@ import dataclasses
 from typing import Callable
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
-from repro.core.batch import batch_inter, batch_inter_count
+from repro.core.batch import batch_inter, batch_inter_count, batch_sub_count
 from repro.core.stream import LANE, SENTINEL, round_capacity
 from repro.graph.csr import CSRGraph, padded_rows
+from repro.kernels.ops import xinter_compact, xinter_count
 
 
 def half_edges(g: CSRGraph) -> np.ndarray:
@@ -80,11 +94,10 @@ def _pow2cap(n: int) -> int:
     return c
 
 
-def edge_wave(g: CSRGraph, chunk: int, symmetric: bool = True):
-    """Yield level-1 waves: (v0 rows are N(v0), vert = v1), bucketed by the
-    prefix vertex's degree so per-edge work is O(bucket) not O(max degree)
-    (<= 2x padding waste — the paper's Fig. 14 stream-length skew exploited
-    as static capacity classes; EXPERIMENTS.md §Perf mining iteration)."""
+def edge_chunks(g: CSRGraph, chunk: int, symmetric: bool = True):
+    """Host half of the level-1 feed: yields (cap, v0, v1, n) degree-bucketed
+    chunk-padded int32 vertex arrays *without* materialising neighbor rows —
+    row gathers happen on-device so the feed can be double-buffered."""
     edges = half_edges(g) if symmetric else directed_edges(g)
     if edges.shape[0] == 0:
         return
@@ -97,10 +110,19 @@ def edge_wave(g: CSRGraph, chunk: int, symmetric: bool = True):
         for lo in range(0, sel.shape[0], nb):
             sl = sel[lo: lo + nb]
             n = sl.shape[0]
-            v0 = _pad_to(sl[:, 0], nb, 0)
-            v1 = _pad_to(sl[:, 1], nb, 0)
-            rows, _ = padded_rows(g, jnp.asarray(v0), int(cap))
-            yield Wave(rows=rows, verts=v1), n
+            v0 = _pad_to(sl[:, 0].astype(np.int32), nb, 0)
+            v1 = _pad_to(sl[:, 1].astype(np.int32), nb, 0)
+            yield int(cap), v0, v1, n
+
+
+def edge_wave(g: CSRGraph, chunk: int, symmetric: bool = True):
+    """Yield level-1 waves: (v0 rows are N(v0), vert = v1), bucketed by the
+    prefix vertex's degree so per-edge work is O(bucket) not O(max degree)
+    (<= 2x padding waste — the paper's Fig. 14 stream-length skew exploited
+    as static capacity classes; EXPERIMENTS.md §Perf mining iteration)."""
+    for cap, v0, v1, n in edge_chunks(g, chunk, symmetric):
+        rows, _ = padded_rows(g, jnp.asarray(v0), cap)
+        yield Wave(rows=rows, verts=v1), n
 
 
 def _neighbor_cap(g: CSRGraph, verts: np.ndarray) -> int:
@@ -131,7 +153,12 @@ def expand(g: CSRGraph, wave: Wave, out_cap: int | None = None):
 
 def compact(rows: np.ndarray, counts: np.ndarray, limit: int | None = None,
             return_src: bool = False):
-    """Host compaction: expand (rows, counts) into the next Wave.
+    """Host compaction oracle: expand (rows, counts) into the next Wave.
+
+    The device fast path (``WaveRunner`` via ``ops.xinter_compact``) is
+    property-tested to produce item-for-item identical waves; this np.nonzero
+    form stays as the semantic reference and the ``return_src`` provider for
+    embedding enumeration (``apps.triangle_list``).
 
     Every valid key rows[i, j] (j < counts[i]) becomes a work item whose
     prefix is rows[i] and whose extension vertex/bound is that key. The
@@ -153,10 +180,9 @@ def compact(rows: np.ndarray, counts: np.ndarray, limit: int | None = None,
     return (wave, ii) if return_src else wave
 
 
-def pair_wave(g: CSRGraph, edges: np.ndarray, chunk: int):
-    """Yield degree-bucketed padded row pairs for an (N, 2) vertex-pair list:
-    (rows_a, rows_b, v0, v1, n_valid). Used by apps that intersect/subtract
-    two neighbor lists per edge (TT, induced TC)."""
+def pair_chunks(g: CSRGraph, edges: np.ndarray, chunk: int):
+    """Host half of the pair feed: yields (cap_a, cap_b, v0, v1, n) without
+    materialising rows (device gathers, double-bufferable)."""
     if edges.shape[0] == 0:
         return
     deg = np.asarray(g.degrees)
@@ -170,11 +196,19 @@ def pair_wave(g: CSRGraph, edges: np.ndarray, chunk: int):
         for lo in range(0, sel.shape[0], nb):
             sl = sel[lo: lo + nb]
             n = sl.shape[0]
-            v0 = _pad_to(sl[:, 0], nb, 0)
-            v1 = _pad_to(sl[:, 1], nb, 0)
-            rows_a, _ = padded_rows(g, jnp.asarray(v0), ca)
-            rows_b, _ = padded_rows(g, jnp.asarray(v1), cb)
-            yield rows_a, rows_b, v0, v1, n
+            v0 = _pad_to(sl[:, 0].astype(np.int32), nb, 0)
+            v1 = _pad_to(sl[:, 1].astype(np.int32), nb, 0)
+            yield ca, cb, v0, v1, n
+
+
+def pair_wave(g: CSRGraph, edges: np.ndarray, chunk: int):
+    """Yield degree-bucketed padded row pairs for an (N, 2) vertex-pair list:
+    (rows_a, rows_b, v0, v1, n_valid). Used by apps that intersect/subtract
+    two neighbor lists per edge (TT, induced TC)."""
+    for ca, cb, v0, v1, n in pair_chunks(g, edges, chunk):
+        rows_a, _ = padded_rows(g, jnp.asarray(v0), ca)
+        rows_b, _ = padded_rows(g, jnp.asarray(v1), cb)
+        yield rows_a, rows_b, v0, v1, n
 
 
 def wave_chunks(wave: Wave, chunk: int):
@@ -199,3 +233,262 @@ def choose_chunk(cap: int, budget_bytes: int = 64 << 20) -> int:
     per_row = cap * 4 * 4  # rows + neighbor rows + output + slack
     c = max(LANE, budget_bytes // max(per_row, 1))
     return int(min(DEFAULT_CHUNK * 4, (c // LANE) * LANE))
+
+
+# ---------------------------------------------------------------------------
+# WaveRunner — the device-resident wavefront pipeline
+# ---------------------------------------------------------------------------
+
+
+class WaveRunner:
+    """Device-resident wavefront orchestrator for the mining apps.
+
+    Three mechanisms turn the level-synchronous loop into a device pipeline:
+
+    * **executable cache** keyed by (kind, cap_a, cap_b, chunk): every
+      degree bucket / level capacity gets one jitted closure fusing the
+      neighbor gather with its intersection (the host loop never re-traces
+      a shape it has seen — ``stats['exec_hits']`` proves it);
+    * **fused expand_compact**: ``ops.xinter_compact`` leaves the next
+      wave's (rows, verts) work items on device; the only host traffic per
+      level is a 3-scalar sync (total, max survivor count, max extension
+      degree) that sizes the next level's static capacities;
+    * **double-buffered feeds**: the level-1 edge/pair chunks are
+      ``jax.device_put`` one chunk ahead of compute.
+
+    ``device_compact=False`` runs the same loop through the host
+    ``compact`` oracle (np.nonzero + re-upload) — the twin the fast path is
+    property-tested against, and the "before" leg of the wave-throughput
+    benchmark. ``record=True`` captures every wave's live (rows, verts)
+    into ``trace`` for those comparisons.
+    """
+
+    def __init__(self, g: CSRGraph, chunk: int | None = None,
+                 backend: str = "auto", device_compact: bool = True,
+                 record: bool = False):
+        self.g = g
+        self.chunk = chunk or choose_chunk(g.padded_max_degree)
+        self.backend = backend
+        self.device_compact = device_compact
+        self.record = record
+        self.trace: list[tuple[int, np.ndarray, np.ndarray]] = []
+        self._exec: dict[tuple, Callable] = {}
+        self.stats = {"exec_hits": 0, "exec_misses": 0, "host_syncs": 0,
+                      "device_compactions": 0, "host_compactions": 0,
+                      "items": 0}
+
+    # ------------------------------------------------------------------ cache
+    def _executable(self, key: tuple, build: Callable) -> Callable:
+        fn = self._exec.get(key)
+        if fn is None:
+            fn = self._exec[key] = build()
+            self.stats["exec_misses"] += 1
+        else:
+            self.stats["exec_hits"] += 1
+        return fn
+
+    def _rows_fn(self, cap: int):
+        def build():
+            @jax.jit
+            def fn(g, vs):
+                return padded_rows(g, vs, cap)[0]
+            return fn
+        return self._executable(("rows", cap), build)
+
+    def _count_fn(self, cap_a: int, capn: int, bounded: bool):
+        backend = self.backend
+
+        def build():
+            @jax.jit
+            def fn(g, rows, verts, n):
+                nbr, _ = padded_rows(g, verts, capn)
+                bounds = verts if bounded else None
+                counts = xinter_count(rows, nbr, bounds, backend=backend)
+                # explicit validity mask: unbounded counts (nested variant)
+                # are NOT self-masking on bound-0 padding items
+                live = jnp.arange(rows.shape[0], dtype=jnp.int32) < n
+                return jnp.sum(jnp.where(live, counts, 0), dtype=jnp.int32)
+            return fn
+        return self._executable(("count", cap_a, capn, bounded), build)
+
+    def _expand_fn(self, cap_a: int, capn: int, out_cap: int, out_items: int):
+        """Fused gather + bounded intersect + on-device compaction."""
+        backend = self.backend
+
+        def build():
+            @jax.jit
+            def fn(g, rows, verts):
+                nbr, _ = padded_rows(g, verts, capn)
+                rows2, counts2, src, verts2, total, maxc = xinter_compact(
+                    rows, nbr, bounds=verts, out_cap=out_cap,
+                    out_items=out_items, backend=backend)
+                live = jnp.arange(out_items, dtype=jnp.int32) < total
+                dmax = jnp.max(jnp.where(live, g.degrees[verts2], 0))
+                meta = jnp.stack([total, maxc, dmax])
+                return rows2, src, verts2, meta
+            return fn
+        return self._executable(
+            ("expand", cap_a, capn, out_cap, out_items), build)
+
+    def _expand_host_fn(self, cap_a: int, capn: int, out_cap: int):
+        """Oracle-path twin of ``_expand_fn``: expand only, compact on host."""
+        def build():
+            @jax.jit
+            def fn(g, rows, verts):
+                nbr, _ = padded_rows(g, verts, capn)
+                return batch_inter(rows, nbr, verts, out_cap=out_cap)
+            return fn
+        return self._executable(("expandh", cap_a, capn, out_cap), build)
+
+    def _chunk_fn(self, b: int, out_cap: int, cap2: int, chunk: int):
+        """Slice the compacted worklist into the next level's device wave."""
+        def build():
+            @jax.jit
+            def fn(rows2, src, verts2, lo):
+                s = jax.lax.dynamic_slice_in_dim(src, lo, chunk)
+                v = jax.lax.dynamic_slice_in_dim(verts2, lo, chunk)
+                return rows2[s, :cap2], v
+            return fn
+        return self._executable(("chunk", b, out_cap, cap2, chunk), build)
+
+    # ------------------------------------------------------------------ feeds
+    @staticmethod
+    def _double_buffered(chunks, put_idx: frozenset):
+        """Run one item ahead of the consumer, ``jax.device_put``-ing the
+        arrays at ``put_idx``: chunk N+1's upload dispatches (async) while
+        the consumer computes on chunk N."""
+        pending = None
+        for tup in chunks:
+            nxt = tuple(jax.device_put(x) if i in put_idx else x
+                        for i, x in enumerate(tup))
+            if pending is not None:
+                yield pending
+            pending = nxt
+        if pending is not None:
+            yield pending
+
+    def _edge_feed(self, symmetric: bool = True):
+        """Double-buffered level-1 feed: (cap, dv0, dv1, v1_host, n)."""
+        chunks = ((cap, v0, v1, v1, n) for cap, v0, v1, n
+                  in edge_chunks(self.g, self.chunk, symmetric))
+        return self._double_buffered(chunks, frozenset({1, 2}))
+
+    def _pair_feed(self, edges: np.ndarray):
+        """Double-buffered pair feed: (cap_a, cap_b, dv0, dv1, v1_host, n)."""
+        chunks = ((ca, cb, v0, v1, v1, n) for ca, cb, v0, v1, n
+                  in pair_chunks(self.g, edges, self.chunk))
+        return self._double_buffered(chunks, frozenset({2, 3}))
+
+    # ------------------------------------------------------------- wave loops
+    def _record(self, level: int, rows, verts, n: int) -> None:
+        if self.record:
+            self.trace.append((level, np.asarray(rows)[:n].copy(),
+                               np.asarray(verts)[:n].copy()))
+
+    def count_edges(self, symmetric: bool = True, bounded: bool = True) -> int:
+        """Σ over edges of |N(v0) ∩ N(v1) (∩ [0, v1))| — triangle / nested
+        triangle counting as one wave level."""
+        parts = []
+        for cap, dv0, dv1, v1h, n in self._edge_feed(symmetric):
+            rows = self._rows_fn(cap)(self.g, dv0)
+            self._record(1, rows, dv1, n)
+            capn = _neighbor_cap(self.g, v1h)
+            parts.append(self._count_fn(cap, capn, bounded)(self.g, rows,
+                                                            dv1, n))
+        self.stats["host_syncs"] += len(parts)
+        return sum(int(p) for p in parts)
+
+    def clique(self, k: int) -> int:
+        """k-clique counting on the wavefront, k >= 3."""
+        if k < 3:
+            raise ValueError("clique needs k >= 3")
+        parts = []
+        for cap, dv0, dv1, v1h, n in self._edge_feed(True):
+            rows = self._rows_fn(cap)(self.g, dv0)
+            self._record(1, rows, dv1, n)
+            capn = _neighbor_cap(self.g, v1h)
+            parts += self._descend(rows, dv1, capn, k - 2, n)
+        self.stats["host_syncs"] += len(parts)
+        return sum(int(p) for p in parts)
+
+    def _descend(self, rows, verts, capn: int, depth: int, n: int) -> list:
+        """One wavefront level: count at the last level, else expand +
+        compact + recurse over the next wave's chunks."""
+        cap_a = int(rows.shape[1])
+        if depth == 1:
+            return [self._count_fn(cap_a, capn, True)(self.g, rows, verts, n)]
+        out_cap = min(cap_a, capn)
+        b = int(rows.shape[0])
+        out_items = -(-b * out_cap // self.chunk) * self.chunk
+        if self.device_compact:
+            rows2, src, verts2, meta = self._expand_fn(
+                cap_a, capn, out_cap, out_items)(self.g, rows, verts)
+            total, maxc, dmax = (int(x) for x in np.asarray(meta))
+            self.stats["host_syncs"] += 1
+            self.stats["device_compactions"] += 1
+            self.stats["items"] += total
+            if total == 0:
+                return []
+            cap2 = round_capacity(maxc)
+            capn2 = _pow2cap(max(dmax, 1))
+            cfn = self._chunk_fn(b, out_cap, cap2, self.chunk)
+            parts = []
+            for lo in range(0, total, self.chunk):
+                crows, cverts = cfn(rows2, src, verts2, lo)
+                m = min(self.chunk, total - lo)
+                self._record(depth, crows, cverts, m)
+                parts += self._descend(crows, cverts, capn2, depth - 1, m)
+            return parts
+        # oracle path: same loop through host np.nonzero compaction
+        rows2, counts2 = self._expand_host_fn(
+            cap_a, capn, out_cap)(self.g, rows, verts)
+        wave = compact(np.asarray(rows2), np.asarray(counts2))
+        self.stats["host_syncs"] += 1
+        self.stats["host_compactions"] += 1
+        if wave is None:
+            return []
+        self.stats["items"] += len(wave)
+        capn2 = _neighbor_cap(self.g, wave.verts)
+        parts = []
+        for w, m in wave_chunks(wave, self.chunk):
+            crows = jnp.asarray(w.rows)
+            cverts = jnp.asarray(w.verts)
+            self._record(depth, crows, cverts, m)
+            parts += self._descend(crows, cverts, capn2, depth - 1, m)
+        return parts
+
+    # ------------------------------------------------------- pair-based apps
+    def _pair_counts_fn(self, ca: int, cb: int, kind: str):
+        def build():
+            @jax.jit
+            def fn(g, v0, v1):
+                rows_a, _ = padded_rows(g, v0, ca)
+                rows_b, _ = padded_rows(g, v1, cb)
+                if kind == "chain":
+                    full = batch_sub_count(rows_a, rows_b)
+                    below = batch_sub_count(rows_a, rows_b, v1)
+                    return full - below - 1
+                return batch_inter_count(rows_a, rows_b, v0)
+            return fn
+        return self._executable(("pair", ca, cb, kind), build)
+
+    def three_chain_induced(self) -> int:
+        """Per directed edge (m, a): |{b ∈ N(m): b > a, b ∉ N(a)}|."""
+        total = 0
+        for ca, cb, dm, da, ah, n in self._pair_feed(directed_edges(self.g)):
+            per_edge = self._pair_counts_fn(ca, cb, "chain")(self.g, dm, da)
+            total += int(np.asarray(per_edge)[:n].sum())
+            self.stats["host_syncs"] += 1
+        return total
+
+    def tailed_triangle(self) -> int:
+        """Fig. 2b: BoundedIntersect(N0, N1, v0) per directed edge, each
+        candidate v2 contributing deg(v1) - 2 tails."""
+        deg = np.asarray(self.g.degrees, dtype=np.int64)
+        total = 0
+        for ca, cb, dv0, dv1, v1h, n in self._pair_feed(directed_edges(self.g)):
+            c = self._pair_counts_fn(ca, cb, "tailed")(self.g, dv0, dv1)
+            c = np.asarray(c)[:n].astype(np.int64)
+            total += int((c * (deg[v1h[:n]] - 2)).sum())
+            self.stats["host_syncs"] += 1
+        return total

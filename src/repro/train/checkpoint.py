@@ -27,7 +27,9 @@ from repro.distributed.sharding import shard_params_tree
 
 
 def _flatten_with_paths(tree):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    # jax.tree.flatten_with_path only exists from jax 0.5; the tree_util
+    # spelling works on every version this repo supports.
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     keys = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
                      for k in path) for path, _ in flat]
     return keys, [v for _, v in flat], treedef

@@ -6,7 +6,7 @@ bit-for-bit on integer outputs and to float32 tolerance on reductions.
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.stream import SENTINEL
 from repro.kernels import ops, ref

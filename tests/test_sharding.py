@@ -5,17 +5,14 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed.sharding import (Axes, DEFAULT_RULES, FSDP_RULES,
-                                        logical_to_physical, mesh_context,
-                                        constrain)
+                                        abstract_mesh, logical_to_physical,
+                                        mesh_context, constrain)
 from repro.train.optimizer import OptConfig, zero_axes
 
 
 def mk_mesh(shape, names):
-    # fake mesh over 1 device is fine for resolution logic (sizes matter)
-    import jax.sharding
-    devs = np.asarray(jax.devices()[:1])
-    # build a Mesh-like object with desired axis sizes via abstract mesh
-    return jax.sharding.AbstractMesh(shape, names)
+    # abstract mesh: resolution logic only needs axis sizes, no devices
+    return abstract_mesh(shape, names)
 
 
 def test_divisibility_drop():

@@ -1,7 +1,7 @@
 """S_VINTER applications (paper §VI-I) vs dense oracles."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.sparse import from_dense, random_csf, spmsp_matmul, ttv
 

@@ -2,7 +2,7 @@
 the representation invariants I1-I4 (hypothesis property tests)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import isa
 from repro.core.stream import (LANE, SENTINEL, Stream, StreamTable,

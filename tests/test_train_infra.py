@@ -128,8 +128,8 @@ def test_compressed_mean_single_device():
     from repro.distributed.compression import compressed_mean
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.distributed.sharding import make_mesh_compat
+    mesh = make_mesh_compat((1,), ("pod",))
     x = jnp.asarray(np.random.default_rng(0).normal(size=(64,))
                     .astype(np.float32))
 
