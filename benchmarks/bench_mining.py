@@ -104,6 +104,34 @@ def wave_throughput_report(g, k: int = 4) -> dict:
     return out
 
 
+def plan_overhead_report(g) -> dict:
+    """Interpreter tax: the same clique/TT workloads through compiled
+    ``WavePlan``s vs the frozen pre-refactor hand-coded engine paths
+    (``benchmarks/handcoded_ref.py``), both on warmed executable caches.
+
+    The compiler's carry analysis + fused fast paths should make the plan
+    path issue the identical executable sequence, so the ratio isolates the
+    pure Python dispatch overhead of interpreting the plan."""
+    try:
+        from benchmarks.handcoded_ref import HandCodedRunner
+    except ImportError:                       # run as a script from benchmarks/
+        from handcoded_ref import HandCodedRunner
+    from repro.mining.engine import WaveRunner
+    out = {}
+    for app, plan_fn, hand_fn in [
+        ("4C", lambda r: r.clique(4), lambda r: r.clique(4)),
+        ("TT", lambda r: r.tailed_triangle(), lambda r: r.tailed_triangle()),
+    ]:
+        plan_r, hand_r = WaveRunner(g), HandCodedRunner(g)
+        res_p, t_p = _time(lambda: plan_fn(plan_r))
+        res_h, t_h = _time(lambda: hand_fn(hand_r))
+        assert res_p == res_h, (app, res_p, res_h)
+        out[app] = {"count": res_p, "plan_s": round(t_p, 4),
+                    "handcoded_s": round(t_h, 4),
+                    "plan_overhead": round(t_p / max(t_h, 1e-9), 3)}
+    return out
+
+
 def run(quick: bool = True):
     rows = []
     sets = BENCH_SETS[:6] if quick else BENCH_SETS
@@ -124,6 +152,14 @@ def run(quick: bool = True):
             "host_items_per_s": wt["host"]["items_per_s"],
             "device_items_per_s": wt["device"]["items_per_s"],
             "wave_speedup": wt["wave_speedup"]}))
+        po = plan_overhead_report(g)
+        print(f"[mining] {name:14s} plan vs hand-coded: "
+              + " | ".join(f"{a} {v['plan_s']:.3f}s vs {v['handcoded_s']:.3f}s "
+                           f"(overhead {v['plan_overhead']}x)"
+                           for a, v in po.items()), flush=True)
+        rows.append(dict(dataset=name, app="plan-overhead", **{
+            f"{a}_{k}": v[k] for a, v in po.items()
+            for k in ("plan_s", "handcoded_s", "plan_overhead")}))
         for app, engine_fn, base_fn in APPS:
             if quick and app == "5C" and stats["avg_deg"] > 30:
                 continue                      # dense 5C: slow scalar baseline

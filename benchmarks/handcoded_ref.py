@@ -1,0 +1,162 @@
+"""Frozen pre-refactor hand-coded wave paths (benchmark baseline only).
+
+A trimmed copy of the device-resident clique / tailed-triangle code exactly
+as it stood before the pattern-plan compiler landed: bespoke per-pattern
+engine methods (`clique`, `tailed_triangle`) with hand-scheduled
+expand/compact loops. ``bench_mining.plan_overhead_report`` times these
+against the same workloads run through compiled ``WavePlan``s so the
+interpreter's dispatch overhead is *measured*, not assumed. Not a library
+surface — nothing outside benchmarks imports this.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.stream import round_capacity
+from repro.graph.csr import padded_rows
+from repro.kernels.ops import xinter_count, xinter_compact
+from repro.mining.engine import (_neighbor_cap, _pow2cap, choose_chunk,
+                                 directed_edges, edge_chunks, pair_chunks)
+
+
+class HandCodedRunner:
+    """Pre-refactor WaveRunner: device compaction only, no record/oracle."""
+
+    def __init__(self, g, chunk: int | None = None, backend: str = "auto"):
+        self.g = g
+        self.chunk = chunk or choose_chunk(g.padded_max_degree)
+        self.backend = backend
+        self._exec: dict[tuple, Callable] = {}
+
+    def _executable(self, key: tuple, build: Callable) -> Callable:
+        fn = self._exec.get(key)
+        if fn is None:
+            fn = self._exec[key] = build()
+        return fn
+
+    def _rows_fn(self, cap: int):
+        def build():
+            @jax.jit
+            def fn(g, vs):
+                return padded_rows(g, vs, cap)[0]
+            return fn
+        return self._executable(("rows", cap), build)
+
+    def _count_fn(self, cap_a: int, capn: int, bounded: bool):
+        backend = self.backend
+
+        def build():
+            @jax.jit
+            def fn(g, rows, verts, n):
+                nbr, _ = padded_rows(g, verts, capn)
+                bounds = verts if bounded else None
+                counts = xinter_count(rows, nbr, bounds, backend=backend)
+                live = jnp.arange(rows.shape[0], dtype=jnp.int32) < n
+                return jnp.sum(jnp.where(live, counts, 0), dtype=jnp.int32)
+            return fn
+        return self._executable(("count", cap_a, capn, bounded), build)
+
+    def _expand_fn(self, cap_a: int, capn: int, out_cap: int, out_items: int):
+        backend = self.backend
+
+        def build():
+            @jax.jit
+            def fn(g, rows, verts):
+                nbr, _ = padded_rows(g, verts, capn)
+                rows2, counts2, src, verts2, total, maxc = xinter_compact(
+                    rows, nbr, bounds=verts, out_cap=out_cap,
+                    out_items=out_items, backend=backend)
+                live = jnp.arange(out_items, dtype=jnp.int32) < total
+                dmax = jnp.max(jnp.where(live, g.degrees[verts2], 0))
+                meta = jnp.stack([total, maxc, dmax])
+                return rows2, src, verts2, meta
+            return fn
+        return self._executable(
+            ("expand", cap_a, capn, out_cap, out_items), build)
+
+    def _chunk_fn(self, b: int, out_cap: int, cap2: int, chunk: int):
+        def build():
+            @jax.jit
+            def fn(rows2, src, verts2, lo):
+                s = jax.lax.dynamic_slice_in_dim(src, lo, chunk)
+                v = jax.lax.dynamic_slice_in_dim(verts2, lo, chunk)
+                return rows2[s, :cap2], v
+            return fn
+        return self._executable(("chunk", b, out_cap, cap2, chunk), build)
+
+    @staticmethod
+    def _double_buffered(chunks, put_idx: frozenset):
+        pending = None
+        for tup in chunks:
+            nxt = tuple(jax.device_put(x) if i in put_idx else x
+                        for i, x in enumerate(tup))
+            if pending is not None:
+                yield pending
+            pending = nxt
+        if pending is not None:
+            yield pending
+
+    def _edge_feed(self, symmetric: bool = True):
+        chunks = ((cap, v0, v1, v1, n) for cap, v0, v1, n
+                  in edge_chunks(self.g, self.chunk, symmetric))
+        return self._double_buffered(chunks, frozenset({1, 2}))
+
+    def _pair_feed(self, edges: np.ndarray):
+        chunks = ((ca, cb, v0, v1, v1, n) for ca, cb, v0, v1, n
+                  in pair_chunks(self.g, edges, self.chunk))
+        return self._double_buffered(chunks, frozenset({2, 3}))
+
+    def clique(self, k: int) -> int:
+        parts = []
+        for cap, dv0, dv1, v1h, n in self._edge_feed(True):
+            rows = self._rows_fn(cap)(self.g, dv0)
+            capn = _neighbor_cap(self.g, v1h)
+            parts += self._descend(rows, dv1, capn, k - 2, n)
+        return sum(int(p) for p in parts)
+
+    def _descend(self, rows, verts, capn: int, depth: int, n: int) -> list:
+        cap_a = int(rows.shape[1])
+        if depth == 1:
+            return [self._count_fn(cap_a, capn, True)(self.g, rows, verts, n)]
+        out_cap = min(cap_a, capn)
+        b = int(rows.shape[0])
+        out_items = -(-b * out_cap // self.chunk) * self.chunk
+        rows2, src, verts2, meta = self._expand_fn(
+            cap_a, capn, out_cap, out_items)(self.g, rows, verts)
+        total, maxc, dmax = (int(x) for x in np.asarray(meta))
+        if total == 0:
+            return []
+        cap2 = round_capacity(maxc)
+        capn2 = _pow2cap(max(dmax, 1))
+        cfn = self._chunk_fn(b, out_cap, cap2, self.chunk)
+        parts = []
+        for lo in range(0, total, self.chunk):
+            crows, cverts = cfn(rows2, src, verts2, lo)
+            m = min(self.chunk, total - lo)
+            parts += self._descend(crows, cverts, capn2, depth - 1, m)
+        return parts
+
+    def _pair_counts_fn(self, ca: int, cb: int):
+        backend = self.backend
+
+        def build():
+            @jax.jit
+            def fn(g, v0, v1):
+                rows_a, _ = padded_rows(g, v0, ca)
+                rows_b, _ = padded_rows(g, v1, cb)
+                return xinter_count(rows_a, rows_b, v0, backend=backend)
+            return fn
+        return self._executable(("pair", ca, cb), build)
+
+    def tailed_triangle(self) -> int:
+        deg = np.asarray(self.g.degrees, dtype=np.int64)
+        total = 0
+        for ca, cb, dv0, dv1, v1h, n in self._pair_feed(directed_edges(self.g)):
+            c = self._pair_counts_fn(ca, cb)(self.g, dv0, dv1)
+            c = np.asarray(c)[:n].astype(np.int64)
+            total += int((c * (deg[v1h[:n]] - 2)).sum())
+        return total

@@ -31,6 +31,14 @@ def _row_membership(a_row: jax.Array, b_row: jax.Array) -> jax.Array:
 _membership = jax.vmap(_row_membership)
 
 
+@jax.jit
+def batch_member_mark(rows_a: jax.Array, rows_b: jax.Array) -> jax.Array:
+    """mark[i, s] = A_i[s] ∈ B_i (and A_i[s] live) — the XLA twin of the
+    Pallas mark kernel; the plan interpreter composes several of these into
+    one keep-mask per level (multi-operand INTER/SUB µops, §IV-F)."""
+    return _membership(rows_a, rows_b)
+
+
 def _bounds(rows_a: jax.Array, bounds) -> jax.Array:
     if bounds is None:
         return jnp.full((rows_a.shape[0],), SENTINEL, jnp.int32)
@@ -79,6 +87,26 @@ def batch_sub(rows_a: jax.Array, rows_b: jax.Array, bounds=None,
     masked = jnp.where(keep, rows_a, SENTINEL)
     rows = jnp.sort(masked, axis=1)[:, :cap]
     return rows, jnp.sum(keep, axis=1, dtype=jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("out_cap", "out_items"))
+def batch_sub_compact(rows_a: jax.Array, rows_b: jax.Array, bounds,
+                      out_cap: int, out_items: int):
+    """Fused batched S_SUB + worklist compaction (device-resident SUB level).
+
+    Mirrors ``batch_inter`` + ``batch_compact_items`` but keeps the
+    complement: survivors are keys of A not present in B (and < bounds).
+    Returns (rows, counts, src, verts, total, maxc) with the same contract
+    as ``kernels.ops.xinter_compact``.
+    """
+    ub = _bounds(rows_a, bounds)
+    keep = (~_membership(rows_a, rows_b)) & (rows_a != SENTINEL) \
+        & (rows_a < ub[:, None])
+    masked = jnp.where(keep, rows_a, SENTINEL)
+    rows = jnp.sort(masked, axis=1)[:, :out_cap]
+    counts = jnp.sum(keep, axis=1, dtype=jnp.int32)
+    src, verts, total, maxc = batch_compact_items(rows, counts, out_items)
+    return rows, counts, src, verts, total, maxc
 
 
 @partial(jax.jit, static_argnames=("out_items",))

@@ -14,7 +14,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.batch import (batch_compact_items, batch_inter,
-                              batch_inter_count, batch_vinter)
+                              batch_inter_count, batch_member_mark,
+                              batch_sub_compact, batch_sub_count,
+                              batch_vinter)
 from repro.core.stream import SENTINEL
 from .bitmap import bitmap_and_count_pallas, bitmap_and_count_ref, keys_to_bitmap
 from .intersect import (intersect_count_pallas, intersect_expand_pallas,
@@ -99,6 +101,65 @@ def xinter_compact(a, b, bounds=None, out_cap: int | None = None,
                                   interpret=not _on_tpu())
 
 
+def xmark(a, b, backend: str = "auto"):
+    """Batched membership mask: mark[i, s] = A_i[s] ∈ B_i (live slots only).
+
+    The plan interpreter's multi-operand µop primitive: a level with several
+    INTER/SUB references AND-combines one mark per reference (the §IV-F
+    translation buffer issuing one stream instruction per operand pair).
+    Pallas path reuses the tile-skipping mark kernel; bounds are applied by
+    the caller so the same mark serves both INTER (mask) and SUB (~mask).
+    """
+    backend = _resolve(backend)
+    if backend == "xla":
+        return batch_member_mark(a, b)
+    return intersect_mark_pallas(a, b, None, interpret=not _on_tpu()) > 0
+
+
+def xsub_count(a, b, bounds=None, backend: str = "auto"):
+    """Batched bounded S_SUB.C: counts[i] = |{k ∈ A_i \\ B_i : k < bounds[i]}|."""
+    backend = _resolve(backend)
+    if backend == "xla":
+        return batch_sub_count(a, b, bounds)
+    mark = intersect_mark_pallas(a, b, None, interpret=not _on_tpu())
+    ub = jnp.full((a.shape[0],), SENTINEL, jnp.int32) if bounds is None \
+        else jnp.asarray(bounds, jnp.int32)
+    keep = (mark == 0) & (a != SENTINEL) & (a < ub[:, None])
+    return jnp.sum(keep, axis=1, dtype=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("out_cap", "out_items", "interpret"))
+def _xsub_compact_pallas(a, b, bounds, out_cap: int, out_items: int,
+                         interpret: bool):
+    # the mark kernel runs UNBOUNDED here: its bound operand masks matches,
+    # which is the wrong polarity for a complement (a key >= bound must be
+    # dropped whether or not it matched). Bound applied on the keep mask.
+    mark = intersect_mark_pallas(a, b, None, interpret=interpret)
+    ub = jnp.full((a.shape[0],), SENTINEL, jnp.int32) if bounds is None \
+        else jnp.asarray(bounds, jnp.int32)
+    keep = (mark == 0) & (a != SENTINEL) & (a < ub[:, None])
+    masked = jnp.where(keep, a, SENTINEL)
+    rows = jnp.sort(masked, axis=1)[:, :out_cap]
+    counts = jnp.sum(keep, axis=1, dtype=jnp.int32)
+    src, verts, total, maxc = batch_compact_items(rows, counts, out_items)
+    return rows, counts, src, verts, total, maxc
+
+
+def xsub_compact(a, b, bounds=None, out_cap: int | None = None,
+                 out_items: int | None = None, backend: str = "auto"):
+    """Fused bounded S_SUB + worklist compaction — ``xinter_compact``'s twin
+    for SUB levels (induced non-edge constraints), same output contract:
+    (rows, counts, src, verts, total, maxc), fully device-resident.
+    """
+    backend = _resolve(backend)
+    cap = out_cap or a.shape[1]
+    items = out_items or a.shape[0] * cap
+    if backend == "xla":
+        return batch_sub_compact(a, b, bounds, cap, items)
+    return _xsub_compact_pallas(a, b, bounds, cap, items,
+                                interpret=not _on_tpu())
+
+
 def xvinter_mac(a_keys, a_vals, b_keys, b_vals, op: str = "mac",
                 backend: str = "auto"):
     """Batched S_VINTER (SVPU): reduce over value pairs of intersected keys."""
@@ -117,5 +178,5 @@ def xbitmap_count(a_words, b_words, backend: str = "auto"):
     return bitmap_and_count_pallas(a_words, b_words, interpret=not _on_tpu())
 
 
-__all__ = ["xinter", "xinter_count", "xinter_compact", "xvinter_mac",
-           "xbitmap_count", "keys_to_bitmap"]
+__all__ = ["xinter", "xinter_count", "xinter_compact", "xmark", "xsub_count",
+           "xsub_compact", "xvinter_mac", "xbitmap_count", "keys_to_bitmap"]

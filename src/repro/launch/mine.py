@@ -17,7 +17,13 @@ from repro.graph.datasets import DATASETS, dataset_stats
 from repro.mining import apps, baseline, exhaustive
 from repro.mining.fsm import fsm, random_labels, sfsm
 
-APPS = ["T", "TS", "TC", "TT", "TM", "4C", "5C", "FSM", "sFSM"]
+from repro.mining.plan import FOUR_MOTIFS
+
+# per-pattern 4-motif codes (each one compiled WavePlan, zero engine code)
+PATTERN_APPS = {"DM": "diamond", "CY": "4-cycle", "PW": "paw",
+                "P4": "4-path", "S4": "4-star"}
+APPS = ["T", "TS", "TC", "TT", "TM", "4C", "5C", "4M",
+        *PATTERN_APPS, "FSM", "sFSM"]
 
 
 def run_app(app: str, g, support: int = 100, labels=None):
@@ -35,6 +41,10 @@ def run_app(app: str, g, support: int = 100, labels=None):
         return apps.clique_count(g, 4)
     if app == "5C":
         return apps.clique_count(g, 5)
+    if app == "4M":
+        return apps.four_motif(g)
+    if app in PATTERN_APPS:
+        return apps.pattern_count(g, FOUR_MOTIFS[PATTERN_APPS[app]])
     if app in ("FSM", "sFSM"):
         fn = fsm if app == "FSM" else sfsm
         res = fn(g, labels, support)

@@ -1,17 +1,24 @@
 from .apps import (
     clique_count,
+    four_motif,
+    pattern_count,
+    pattern_embeddings,
     tailed_triangle_count,
     three_chain_count,
     three_motif,
     triangle_count,
     triangle_count_nested,
+    triangle_list,
 )
+from .plan import FOUR_MOTIFS, Pattern, WavePlan, compile_pattern, pattern
 from .fsm import fsm, sfsm
 from .exhaustive import exhaustive_count
 from . import reference
 
 __all__ = [
     "triangle_count", "triangle_count_nested", "three_chain_count",
-    "tailed_triangle_count", "three_motif", "clique_count",
+    "tailed_triangle_count", "three_motif", "clique_count", "four_motif",
+    "pattern_count", "pattern_embeddings", "triangle_list",
+    "Pattern", "WavePlan", "compile_pattern", "pattern", "FOUR_MOTIFS",
     "fsm", "sfsm", "exhaustive_count", "reference",
 ]

@@ -1,9 +1,17 @@
-"""The paper's seven mining applications on the wavefront engine (§VI-B).
+"""The paper's mining applications (§VI-B) + 4-motif mining, as patterns.
+
+Every app is now a *declarative pattern definition* compiled by
+``mining.plan`` and interpreted by ``mining.engine.WaveRunner.run`` — no app
+has engine code of its own. The only hand-written paths left are genuine
+closed forms (non-induced three-chain = Σ C(deg, 2)) and the host
+``triangle_list_host`` oracle the device enumeration is property-tested
+against.
 
 All counts are exact and each embedding is counted once (symmetry breaking
-via the bounded-intersection R3 operand, Fig. 2b), except the explicitly
-paper-faithful *nested* variants which reproduce the Fig. 4a unbounded
-S_NESTINTER dataflow and divide by the automorphism count.
+via the compiled upper/lower-bound restrictions, Fig. 2b's R3 operand),
+except the explicitly paper-faithful *nested* variants which reproduce the
+Fig. 4a unbounded S_NESTINTER dataflow and divide by the automorphism count
+(``Pattern.div``).
 
 Definitions (verified against brute-force oracles in tests):
   triangle           unordered vertex triples, mutually adjacent
@@ -12,35 +20,49 @@ Definitions (verified against brute-force oracles in tests):
   tailed triangle    triangle {v0,v1,v2} + edge (v1,v3), v3 ∉ {v0,v2}; the
                      pattern automorphism (v0<->v2) is broken with v2 < v0
   k-clique           complete subgraphs of size k, counted once
+  4-motif            induced counts of the six connected 4-vertex motifs
+                     (4-path, 4-star, 4-cycle, paw, diamond, 4-clique)
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.graph.csr import CSRGraph
-from .engine import (
-    Wave, WaveRunner, choose_chunk, compact, expand, half_edges, pair_wave,
-)
+from .engine import Wave, WaveRunner, choose_chunk, compact, expand, \
+    half_edges, pair_wave
+from .plan import (FOUR_MOTIFS, Pattern, TAILED_TRIANGLE,
+                   THREE_CHAIN_INDUCED, TRIANGLE, TRIANGLE_NESTED,
+                   clique_pattern, compile_pattern)
+
+
+def pattern_count(g: CSRGraph, pat: Pattern, chunk: int | None = None,
+                  device_compact: bool = True) -> int:
+    """Count embeddings of any declarative ``Pattern`` on the wave engine."""
+    runner = WaveRunner(g, chunk, device_compact=device_compact)
+    return runner.run(compile_pattern(pat))
+
+
+def pattern_embeddings(g: CSRGraph, pat: Pattern, chunk: int | None = None,
+                       device_compact: bool = True) -> np.ndarray:
+    """Enumerate embeddings of ``pat`` as an (N, k) matrix (emit plan)."""
+    runner = WaveRunner(g, chunk, device_compact=device_compact)
+    return runner.run(compile_pattern(pat, emit=True))
 
 
 def triangle_count(g: CSRGraph, chunk: int | None = None,
                    device_compact: bool = True) -> int:
     """Symmetry-broken triangle counting: one bounded intersection per half
     edge (v0 > v1), bound v1 => each triangle v0 > v1 > v2 counted once."""
-    runner = WaveRunner(g, chunk, device_compact=device_compact)
-    return runner.count_edges(symmetric=True, bounded=True)
+    return pattern_count(g, TRIANGLE, chunk, device_compact)
 
 
 def triangle_count_nested(g: CSRGraph, chunk: int | None = None) -> int:
     """Paper-faithful Fig. 4a: Σ_v S_NESTINTER(N(v)) counts each triangle 6x.
 
     The per-vertex nested instruction flattens to one unbounded intersection
-    per *directed* edge — exactly the µop stream §IV-F's translator emits,
-    laid out as data parallelism."""
-    runner = WaveRunner(g, chunk)
-    total = runner.count_edges(symmetric=False, bounded=False)
-    assert total % 6 == 0
-    return total // 6
+    per *directed* edge — exactly the µop stream §IV-F's translator emits —
+    and ``TRIANGLE_NESTED.div`` divides the automorphisms out at retire."""
+    return pattern_count(g, TRIANGLE_NESTED, chunk)
 
 
 def three_chain_count(g: CSRGraph, induced: bool = False,
@@ -49,20 +71,20 @@ def three_chain_count(g: CSRGraph, induced: bool = False,
 
     non-induced: Σ_m C(deg m, 2) — closed form (no intersection needed; the
     stream engine is exercised by the induced variant).
-    induced: per directed edge (m, a), |{b ∈ N(m): b > a, b ∉ N(a)}| via two
-    S_SUB.C calls (unbounded minus bounded-at-a minus the element a itself).
+    induced: the compiled SUB + lower-bound plan (b ∈ N(m), b ∉ N(a), b > a).
     """
     deg = np.asarray(g.degrees, dtype=np.int64)
     non_induced = int((deg * (deg - 1) // 2).sum())
     if not induced:
         return non_induced
-    return WaveRunner(g, chunk).three_chain_induced()
+    return pattern_count(g, THREE_CHAIN_INDUCED, chunk)
 
 
 def tailed_triangle_count(g: CSRGraph, chunk: int | None = None) -> int:
     """Fig. 2b dataflow: per directed edge (v0,v1), BoundedIntersect(N0,N1,v0)
-    yields the v2 < v0 candidates; each then has deg(v1) - 2 tails v3."""
-    return WaveRunner(g, chunk).tailed_triangle()
+    yields the v2 < v0 candidates; the tail level folds into the closed-form
+    deg(v1) - 2 multiplier at compile time."""
+    return pattern_count(g, TAILED_TRIANGLE, chunk)
 
 
 def three_motif(g: CSRGraph) -> dict[str, int]:
@@ -74,24 +96,38 @@ def three_motif(g: CSRGraph) -> dict[str, int]:
 
 def clique_count(g: CSRGraph, k: int, chunk: int | None = None,
                  device_compact: bool = True) -> int:
-    """k-clique counting, k ∈ {3,4,5}: wavefront of bounded intersections.
+    """k-clique counting, k >= 3: the compiled chain-restricted plan. Every
+    level reuses the parent's survivor stream (the compiler's carry
+    analysis), so the interpreter issues the exact executable sequence the
+    old hand-coded engine did. ``device_compact=False`` routes the same plan
+    through the host np.nonzero oracle."""
+    if k < 3:
+        raise ValueError("clique_count needs k >= 3")
+    return pattern_count(g, clique_pattern(k), chunk, device_compact)
 
-    Level l work item: (prefix stream S_l, candidate v); next stream
-    S_{l+1} = S_l ∩ N(v) ∩ [0, v). Counting at the last level. The wave
-    worklists stay device-resident between levels (``WaveRunner``);
-    ``device_compact=False`` routes through the host np.nonzero oracle."""
-    if k == 3:
-        return triangle_count(g, chunk, device_compact=device_compact)
-    if k not in (4, 5):
-        raise ValueError("clique_count supports k in {3,4,5}")
-    runner = WaveRunner(g, chunk, device_compact=device_compact)
-    return runner.clique(k)
+
+def four_motif(g: CSRGraph, chunk: int | None = None) -> dict[str, int]:
+    """4-motif mining: induced counts of all six connected 4-vertex motifs,
+    each from its compiled plan — zero per-pattern engine code."""
+    runner = WaveRunner(g, chunk)
+    return {name: runner.run(compile_pattern(p))
+            for name, p in FOUR_MOTIFS.items()}
 
 
 def triangle_list(g: CSRGraph, chunk: int | None = None) -> np.ndarray:
     """Enumerate all triangles as (T, 3) vertex triples (v0 > v1 > v2).
 
-    Used by FSM (labelled support needs embeddings, not counts)."""
+    Used by FSM (labelled support needs embeddings, not counts). Runs the
+    triangle *emit* plan: compaction happens on device via
+    ``ops.xinter_compact``'s src output, and only the compacted embedding
+    matrix crosses to the host."""
+    return pattern_embeddings(g, TRIANGLE, chunk)
+
+
+def triangle_list_host(g: CSRGraph, chunk: int | None = None) -> np.ndarray:
+    """Host-compaction oracle for ``triangle_list`` (np.nonzero +
+    ``compact(return_src=True)``) — kept as the property-test reference for
+    the device emit path."""
     chunk = chunk or choose_chunk(g.padded_max_degree)
     out = []
     for rows0, rows1, v0, v1, n in pair_wave(g, half_edges(g), chunk):

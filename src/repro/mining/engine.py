@@ -3,10 +3,14 @@
 The paper's execution model is a core issuing stream instructions whose
 operands live in the S-Cache. The TPU translation keeps the *dataflow* —
 (prefix stream) x (neighbor list) bounded intersections — but replaces the
-instruction stream with level-synchronous waves:
+instruction stream with level-synchronous waves driven by a compiled
+``mining.plan.WavePlan`` (the §IV-F translator, run ahead of time):
 
-  level 1: the half edge list (v1 < v0, straight from the CSR offset register)
-  level l: for each surviving work item, S_l = S_{l-1} ∩ N(v) ∩ [0, v)
+  level 1: the edge list (half edges v1 < v0 when the plan's restrictions
+           break that symmetry, straight from the CSR offset register)
+  level l: for each surviving work item, the plan's LevelOp masks one base
+           stream by the INTER/SUB/bound/injectivity refs it declares
+           (the clique special case is S_l = S_{l-1} ∩ N(v) ∩ [0, v))
 
 Between levels the surviving (prefix, vertex) work items are compacted into
 a dense worklist (the translation buffer of §IV-F), and the prefix capacity
@@ -38,10 +42,13 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.batch import batch_inter, batch_inter_count, batch_sub_count
+from repro.core.batch import (batch_compact_items, batch_inter,
+                              batch_inter_count)
 from repro.core.stream import LANE, SENTINEL, round_capacity
 from repro.graph.csr import CSRGraph, padded_rows
-from repro.kernels.ops import xinter_compact, xinter_count
+from repro.kernels.ops import (xinter_compact, xinter_count, xmark,
+                               xsub_compact, xsub_count)
+from .plan import LevelOp, WavePlan, clique_pattern, compile_pattern, pattern
 
 
 def half_edges(g: CSRGraph) -> np.ndarray:
@@ -236,38 +243,70 @@ def choose_chunk(cap: int, budget_bytes: int = 64 << 20) -> int:
 
 
 # ---------------------------------------------------------------------------
-# WaveRunner — the device-resident wavefront pipeline
+# WaveRunner — the stream-program interpreter over the device wave pipeline
 # ---------------------------------------------------------------------------
+
+# count_edges back-compat surface: the four (symmetric, bounded) triangle
+# stream shapes as one-level plans
+_EDGE_COUNT_PATTERNS = {
+    (True, True): pattern("edges-sym-bounded", 3, [(0, 1), (0, 2), (1, 2)],
+                          restrictions=[(1, 0), (2, 1)]),
+    (True, False): pattern("edges-sym", 3, [(0, 1), (0, 2), (1, 2)],
+                           restrictions=[(1, 0)]),
+    (False, True): pattern("edges-bounded", 3, [(0, 1), (0, 2), (1, 2)],
+                           restrictions=[(2, 1)]),
+    (False, False): pattern("edges", 3, [(0, 1), (0, 2), (1, 2)]),
+}
 
 
 class WaveRunner:
-    """Device-resident wavefront orchestrator for the mining apps.
+    """Stream-program interpreter: executes any compiled ``WavePlan`` on the
+    device-resident wavefront pipeline.
 
-    Three mechanisms turn the level-synchronous loop into a device pipeline:
+    ``run(plan)`` is the single generic entry point — the §IV-F translator's
+    software half. Each ``LevelOp`` lowers to one cached jitted executable
+    that gathers the neighbor streams it references, AND-combines their
+    membership marks (INTER) / complements (SUB) over the base stream, applies
+    bound and injectivity masks, and either counts, materialises + compacts
+    (``ops.xinter_compact`` / ``ops.xsub_compact`` fused fast paths when the
+    level is a single bounded stream op), or emits embeddings. Per-pattern
+    engine methods are gone: ``clique``/``count_edges``/... below are thin
+    plan wrappers kept for the benchmark/test surface.
 
-    * **executable cache** keyed by (kind, cap_a, cap_b, chunk): every
-      degree bucket / level capacity gets one jitted closure fusing the
-      neighbor gather with its intersection (the host loop never re-traces
-      a shape it has seen — ``stats['exec_hits']`` proves it);
-    * **fused expand_compact**: ``ops.xinter_compact`` leaves the next
-      wave's (rows, verts) work items on device; the only host traffic per
-      level is a 3-scalar sync (total, max survivor count, max extension
-      degree) that sizes the next level's static capacities;
-    * **double-buffered feeds**: the level-1 edge/pair chunks are
-      ``jax.device_put`` one chunk ahead of compute.
+    Mechanisms shared by every plan:
 
-    ``device_compact=False`` runs the same loop through the host
+    * **executable cache** keyed by (kind, LevelOp, capacities, chunk):
+      LevelOps hash by value, so recompiling a pattern — or two patterns
+      sharing a level shape — reuses traces (``stats['exec_hits']``);
+    * **fused expand_compact**: survivors are compacted on device; the only
+      per-level host traffic is the meta sync (total, max survivor count,
+      max degree per forwarded column) that sizes the next level's static
+      capacities;
+    * **prefix-column forwarding**: the compiler's liveness fields
+      (``out_cols``/``gather_refs``) tell the interpreter which matched
+      vertices deeper levels reference; columns are gathered through the
+      compacted ``src`` indices on device, never round-tripping to host;
+    * **double-buffered feeds**: level-1 edge chunks upload one ahead of
+      compute;
+    * **per-chunk device partial sums**: count levels reduce to one scalar
+      per chunk on device (synced in a deferred batch at the end of
+      ``run``) — no count vectors ever cross to the host.
+
+    ``device_compact=False`` routes every expand through the host
     ``compact`` oracle (np.nonzero + re-upload) — the twin the fast path is
-    property-tested against, and the "before" leg of the wave-throughput
-    benchmark. ``record=True`` captures every wave's live (rows, verts)
-    into ``trace`` for those comparisons.
+    property-tested against. ``record=True`` captures each wave's live
+    (carry-or-prefix-columns, verts) into ``trace`` for those comparisons.
     """
 
     def __init__(self, g: CSRGraph, chunk: int | None = None,
                  backend: str = "auto", device_compact: bool = True,
                  record: bool = False):
         self.g = g
-        self.chunk = chunk or choose_chunk(g.padded_max_degree)
+        # chunk <= 2^15 is the exactness envelope of the (hi, lo) int32
+        # per-chunk count partials (see _plan_count_fn): a 2^15-item chunk of
+        # 16-bit low words sums below 2^31. choose_chunk already stays under
+        # it; explicit larger requests are clamped, never silently wrapped.
+        self.chunk = min(chunk or choose_chunk(g.padded_max_degree), 1 << 15)
         self.backend = backend
         self.device_compact = device_compact
         self.record = record
@@ -295,62 +334,6 @@ class WaveRunner:
             return fn
         return self._executable(("rows", cap), build)
 
-    def _count_fn(self, cap_a: int, capn: int, bounded: bool):
-        backend = self.backend
-
-        def build():
-            @jax.jit
-            def fn(g, rows, verts, n):
-                nbr, _ = padded_rows(g, verts, capn)
-                bounds = verts if bounded else None
-                counts = xinter_count(rows, nbr, bounds, backend=backend)
-                # explicit validity mask: unbounded counts (nested variant)
-                # are NOT self-masking on bound-0 padding items
-                live = jnp.arange(rows.shape[0], dtype=jnp.int32) < n
-                return jnp.sum(jnp.where(live, counts, 0), dtype=jnp.int32)
-            return fn
-        return self._executable(("count", cap_a, capn, bounded), build)
-
-    def _expand_fn(self, cap_a: int, capn: int, out_cap: int, out_items: int):
-        """Fused gather + bounded intersect + on-device compaction."""
-        backend = self.backend
-
-        def build():
-            @jax.jit
-            def fn(g, rows, verts):
-                nbr, _ = padded_rows(g, verts, capn)
-                rows2, counts2, src, verts2, total, maxc = xinter_compact(
-                    rows, nbr, bounds=verts, out_cap=out_cap,
-                    out_items=out_items, backend=backend)
-                live = jnp.arange(out_items, dtype=jnp.int32) < total
-                dmax = jnp.max(jnp.where(live, g.degrees[verts2], 0))
-                meta = jnp.stack([total, maxc, dmax])
-                return rows2, src, verts2, meta
-            return fn
-        return self._executable(
-            ("expand", cap_a, capn, out_cap, out_items), build)
-
-    def _expand_host_fn(self, cap_a: int, capn: int, out_cap: int):
-        """Oracle-path twin of ``_expand_fn``: expand only, compact on host."""
-        def build():
-            @jax.jit
-            def fn(g, rows, verts):
-                nbr, _ = padded_rows(g, verts, capn)
-                return batch_inter(rows, nbr, verts, out_cap=out_cap)
-            return fn
-        return self._executable(("expandh", cap_a, capn, out_cap), build)
-
-    def _chunk_fn(self, b: int, out_cap: int, cap2: int, chunk: int):
-        """Slice the compacted worklist into the next level's device wave."""
-        def build():
-            @jax.jit
-            def fn(rows2, src, verts2, lo):
-                s = jax.lax.dynamic_slice_in_dim(src, lo, chunk)
-                v = jax.lax.dynamic_slice_in_dim(verts2, lo, chunk)
-                return rows2[s, :cap2], v
-            return fn
-        return self._executable(("chunk", b, out_cap, cap2, chunk), build)
-
     # ------------------------------------------------------------------ feeds
     @staticmethod
     def _double_buffered(chunks, put_idx: frozenset):
@@ -373,122 +356,422 @@ class WaveRunner:
                   in edge_chunks(self.g, self.chunk, symmetric))
         return self._double_buffered(chunks, frozenset({1, 2}))
 
-    def _pair_feed(self, edges: np.ndarray):
-        """Double-buffered pair feed: (cap_a, cap_b, dv0, dv1, v1_host, n)."""
-        chunks = ((ca, cb, v0, v1, v1, n) for ca, cb, v0, v1, n
-                  in pair_chunks(self.g, edges, self.chunk))
-        return self._double_buffered(chunks, frozenset({2, 3}))
+    # ------------------------------------------------------------- plan parts
+    @staticmethod
+    def _in_cols(op: LevelOp) -> tuple[int, ...]:
+        """Prefix columns whose *values* the level executable consumes."""
+        cols = set(op.val_refs()) | {c for c in op.gather_refs
+                                     if c < op.level}
+        if op.kind == "emit":
+            cols |= {c for c in op.out_cols if c < op.level}
+        return tuple(sorted(cols))
 
-    # ------------------------------------------------------------- wave loops
+    @staticmethod
+    def _fused_shape(op: LevelOp) -> str | None:
+        """'inter'/'sub' when one fused bounded kernel covers the level."""
+        if op.lb or op.exclude:
+            return None
+        if len(op.inter) == 1 and not op.sub:
+            return "inter"
+        if len(op.sub) == 1 and not op.inter:
+            return "sub"
+        return None
+
+    def _mask_ops(self, op: LevelOp, caps: dict):
+        """Traced general path: AND-combine one membership mark per INTER/SUB
+        reference plus bound / injectivity masks — the multi-µop level."""
+        backend = self.backend
+
+        def keep_of(g, base, get, n):
+            keep = base != SENTINEL
+            for j in op.inter:
+                nbr, _ = padded_rows(g, get[j], caps[j])
+                keep = keep & xmark(base, nbr, backend=backend)
+            for j in op.sub:
+                nbr, _ = padded_rows(g, get[j], caps[j])
+                keep = keep & ~xmark(base, nbr, backend=backend)
+            if op.ub:
+                ub = get[op.ub[0]]
+                for u in op.ub[1:]:
+                    ub = jnp.minimum(ub, get[u])
+                keep = keep & (base < ub[:, None])
+            if op.lb:
+                lb = get[op.lb[0]]
+                for w in op.lb[1:]:
+                    lb = jnp.maximum(lb, get[w])
+                keep = keep & (base > lb[:, None])
+            for e in op.exclude:
+                keep = keep & (base != get[e][:, None])
+            live = jnp.arange(base.shape[0], dtype=jnp.int32) < n
+            return keep & live[:, None]
+        return keep_of
+
+    @staticmethod
+    def _min_ub(op: LevelOp, get):
+        ub = get[op.ub[0]]
+        for u in op.ub[1:]:
+            ub = jnp.minimum(ub, get[u])
+        return ub
+
+    def _plan_count_fn(self, op: LevelOp, caps_sig: tuple, cap_base: int):
+        """Terminal count level -> one tiny device sync per chunk.
+
+        The per-chunk sum is returned as an exact (hi, lo) int32 pair —
+        Σ(count >> 16) and Σ(count & 0xffff) — reassembled in Python ints at
+        ``run``'s deferred sync. With chunk <= 2^15 neither partial can wrap,
+        so the only remaining envelope is per *item*: a tail-folded count
+        (survivors x degree factor) must stay below 2^31, which holds
+        whenever maxc * max_degree < 2^31 (the old host path multiplied in
+        int64 but pulled the whole count vector to do it).
+        """
+        backend = self.backend
+        in_cols = self._in_cols(op)
+        caps = dict(caps_sig)
+        fused = self._fused_shape(op)
+        keep_of = self._mask_ops(op, caps)
+
+        def build():
+            @jax.jit
+            def fn(g, vals, carry, n):
+                get = dict(zip(in_cols, vals))
+                base = carry if op.use_carry else \
+                    padded_rows(g, get[op.base], caps[op.base])[0]
+                if fused:
+                    ub = self._min_ub(op, get) if op.ub else None
+                    ref = op.inter[0] if fused == "inter" else op.sub[0]
+                    nbr, _ = padded_rows(g, get[ref], caps[ref])
+                    cfun = xinter_count if fused == "inter" else xsub_count
+                    counts = cfun(base, nbr, ub, backend=backend)
+                    live = jnp.arange(base.shape[0], dtype=jnp.int32) < n
+                    counts = jnp.where(live, counts, 0)
+                else:
+                    counts = jnp.sum(keep_of(g, base, get, n), axis=1,
+                                     dtype=jnp.int32)
+                if op.tail is not None:
+                    col, c = op.tail
+                    counts = counts * (g.degrees[get[col]].astype(jnp.int32)
+                                       - c)
+                return jnp.stack([jnp.sum(counts >> 16, dtype=jnp.int32),
+                                  jnp.sum(counts & 0xFFFF, dtype=jnp.int32)])
+            return fn
+        return self._executable(("pcount", op, caps_sig, cap_base), build)
+
+    def _survivor_core(self, op: LevelOp, caps: dict, out_cap: int,
+                       out_items: int):
+        """Traced core shared by expand/emit: survivors -> compacted items.
+
+        Fast path: a single bounded INTER/SUB level is one fused
+        ``xinter_compact``/``xsub_compact`` dispatch (requires ``ub`` so the
+        bound-0 padding convention kills dead rows inside the kernel);
+        otherwise the general mark composition feeds the same masked-sort +
+        ``batch_compact_items`` epilogue.
+        """
+        backend = self.backend
+        fused = self._fused_shape(op) if op.ub else None
+        keep_of = self._mask_ops(op, caps)
+
+        def core(g, get, base, n):
+            if fused:
+                ub = self._min_ub(op, get)
+                ref = op.inter[0] if fused == "inter" else op.sub[0]
+                nbr, _ = padded_rows(g, get[ref], caps[ref])
+                cfun = xinter_compact if fused == "inter" else xsub_compact
+                rows2, _, src, verts, total, maxc = cfun(
+                    base, nbr, ub, out_cap=out_cap, out_items=out_items,
+                    backend=backend)
+            else:
+                keep = keep_of(g, base, get, n)
+                masked = jnp.where(keep, base, SENTINEL)
+                rows2 = jnp.sort(masked, axis=1)[:, :out_cap]
+                counts = jnp.sum(keep, axis=1, dtype=jnp.int32)
+                src, verts, total, maxc = batch_compact_items(
+                    rows2, counts, out_items)
+            return rows2, src, verts, total, maxc
+        return core
+
+    def _plan_expand_fn(self, op: LevelOp, caps_sig: tuple, cap_base: int,
+                        out_cap: int, out_items: int):
+        """Fused gather + level masks + on-device compaction + meta.
+
+        meta = [total, max survivor count] + [max degree of column c over
+        live items, for c in op.gather_refs] — the only host sync per level.
+        """
+        in_cols = self._in_cols(op)
+        caps = dict(caps_sig)
+        core = self._survivor_core(op, caps, out_cap, out_items)
+
+        def build():
+            @jax.jit
+            def fn(g, vals, carry, n):
+                get = dict(zip(in_cols, vals))
+                base = carry if op.use_carry else \
+                    padded_rows(g, get[op.base], caps[op.base])[0]
+                rows2, src, verts, total, maxc = core(g, get, base, n)
+                live = jnp.arange(out_items, dtype=jnp.int32) < total
+                metas = [total, maxc]
+                for c in op.gather_refs:
+                    cv = verts if c == op.level else get[c][src]
+                    metas.append(jnp.max(jnp.where(live, g.degrees[cv], 0)))
+                return rows2, src, verts, jnp.stack(metas)
+            return fn
+        return self._executable(
+            ("pexpand", op, caps_sig, cap_base, out_cap, out_items), build)
+
+    def _plan_expand_host_fn(self, op: LevelOp, caps_sig: tuple,
+                             cap_base: int, out_cap: int):
+        """Oracle-path twin: masks + materialise only; compaction on host."""
+        in_cols = self._in_cols(op)
+        caps = dict(caps_sig)
+        keep_of = self._mask_ops(op, caps)
+
+        def build():
+            @jax.jit
+            def fn(g, vals, carry, n):
+                get = dict(zip(in_cols, vals))
+                base = carry if op.use_carry else \
+                    padded_rows(g, get[op.base], caps[op.base])[0]
+                keep = keep_of(g, base, get, n)
+                masked = jnp.where(keep, base, SENTINEL)
+                rows2 = jnp.sort(masked, axis=1)[:, :out_cap]
+                return rows2, jnp.sum(keep, axis=1, dtype=jnp.int32)
+            return fn
+        return self._executable(
+            ("pexpandh", op, caps_sig, cap_base, out_cap), build)
+
+    def _plan_emit_fn(self, op: LevelOp, caps_sig: tuple, cap_base: int,
+                      out_cap: int, out_items: int):
+        """Terminal emit level: compacted embeddings stay device-side until
+        one bulk pull per chunk (FSM's triangle feed; ROADMAP item)."""
+        in_cols = self._in_cols(op)
+        caps = dict(caps_sig)
+        core = self._survivor_core(op, caps, out_cap, out_items)
+
+        def build():
+            @jax.jit
+            def fn(g, vals, carry, n):
+                get = dict(zip(in_cols, vals))
+                base = carry if op.use_carry else \
+                    padded_rows(g, get[op.base], caps[op.base])[0]
+                _, src, verts, total, _ = core(g, get, base, n)
+                live = jnp.arange(out_items, dtype=jnp.int32) < total
+                cols_out = [verts if c == op.level
+                            else jnp.where(live, get[c][src], 0)
+                            for c in op.out_cols]
+                return jnp.stack(cols_out, axis=1), total
+            return fn
+        return self._executable(
+            ("pemit", op, caps_sig, cap_base, out_cap, out_items), build)
+
+    def _plan_chunk_fn(self, op: LevelOp, b: int, out_cap: int, cap2: int,
+                       chunk: int):
+        """Slice the compacted worklist into the next level's device wave:
+        forwarded prefix columns gather through ``src`` (zeroed past the live
+        count so padding items carry bound-0 everywhere), the new vertex
+        column comes from ``verts``, and the survivor streams become the next
+        carry when the compiler proved reuse."""
+        carry_out = op.carry_out
+
+        def build():
+            @jax.jit
+            def fn(rows2, src, verts2, colvals, lo, m):
+                s = jax.lax.dynamic_slice_in_dim(src, lo, chunk)
+                v = jax.lax.dynamic_slice_in_dim(verts2, lo, chunk)
+                valid = jnp.arange(chunk, dtype=jnp.int32) < m
+                v = jnp.where(valid, v, 0)
+                outs = tuple(jnp.where(valid, cv[s], 0) for cv in colvals)
+                if carry_out:
+                    return outs, v, rows2[s, :cap2]
+                return outs, v
+            return fn
+        return self._executable(("pchunk", op, b, out_cap, cap2, chunk),
+                                build)
+
+    # ------------------------------------------------------- the interpreter
     def _record(self, level: int, rows, verts, n: int) -> None:
         if self.record:
             self.trace.append((level, np.asarray(rows)[:n].copy(),
                                np.asarray(verts)[:n].copy()))
 
-    def count_edges(self, symmetric: bool = True, bounded: bool = True) -> int:
-        """Σ over edges of |N(v0) ∩ N(v1) (∩ [0, v1))| — triangle / nested
-        triangle counting as one wave level."""
-        parts = []
-        for cap, dv0, dv1, v1h, n in self._edge_feed(symmetric):
-            rows = self._rows_fn(cap)(self.g, dv0)
-            self._record(1, rows, dv1, n)
-            capn = _neighbor_cap(self.g, v1h)
-            parts.append(self._count_fn(cap, capn, bounded)(self.g, rows,
-                                                            dv1, n))
-        self.stats["host_syncs"] += len(parts)
-        return sum(int(p) for p in parts)
+    @staticmethod
+    def _wave_repr(cols2: dict, out_cols, carry2, vch):
+        """Trace representative for a wave chunk (device/host comparable)."""
+        if carry2 is not None:
+            return carry2
+        if out_cols:
+            return np.stack([np.asarray(cols2[c]) for c in out_cols], axis=1)
+        return vch
 
-    def clique(self, k: int) -> int:
-        """k-clique counting on the wavefront, k >= 3."""
-        if k < 3:
-            raise ValueError("clique needs k >= 3")
-        parts = []
-        for cap, dv0, dv1, v1h, n in self._edge_feed(True):
-            rows = self._rows_fn(cap)(self.g, dv0)
-            self._record(1, rows, dv1, n)
-            capn = _neighbor_cap(self.g, v1h)
-            parts += self._descend(rows, dv1, capn, k - 2, n)
-        self.stats["host_syncs"] += len(parts)
-        return sum(int(p) for p in parts)
+    def run(self, plan: WavePlan):
+        """Execute a compiled ``WavePlan``.
 
-    def _descend(self, rows, verts, capn: int, depth: int, n: int) -> list:
-        """One wavefront level: count at the last level, else expand +
-        compact + recurse over the next wave's chunks."""
-        cap_a = int(rows.shape[1])
-        if depth == 1:
-            return [self._count_fn(cap_a, capn, True)(self.g, rows, verts, n)]
-        out_cap = min(cap_a, capn)
-        b = int(rows.shape[0])
+        Counting plans return a Python int (divided by ``plan.div``); emit
+        plans return the (N, k) int32 embedding matrix in matching order.
+        """
+        emitting = plan.ops[-1].kind == "emit"
+        op0 = plan.ops[0]
+        outs: list = []
+        for cap0, dv0, dv1, v1h, n in self._edge_feed(plan.symmetric):
+            caps = {0: cap0}
+            if 1 in op0.row_refs():
+                caps[1] = _neighbor_cap(self.g, v1h)
+            if self.record:
+                self._record(1, self._rows_fn(cap0)(self.g, dv0), dv1, n)
+            outs += self._plan_descend(plan, 0, {0: dv0, 1: dv1}, caps,
+                                       None, n)
+        self.stats["host_syncs"] += len(outs)
+        if emitting:
+            if not outs:
+                return np.zeros((0, plan.k), dtype=np.int32)
+            return np.concatenate(outs, axis=0).astype(np.int32)
+        total = 0
+        for p in outs:                      # (hi, lo) int32 pairs, exact
+            hi, lo = (int(x) for x in np.asarray(p))
+            total += (hi << 16) + lo
+        if plan.div > 1:
+            assert total % plan.div == 0, (plan.pattern.name, total, plan.div)
+            total //= plan.div
+        return total
+
+    def _plan_descend(self, plan: WavePlan, oi: int, cols: dict, caps: dict,
+                      carry, n: int) -> list:
+        """Execute plan.ops[oi] on one wave chunk; recurse over survivors."""
+        op = plan.ops[oi]
+        caps_sig = tuple(sorted((c, caps[c]) for c in op.row_refs()))
+        cap_base = int(carry.shape[1]) if op.use_carry else caps[op.base]
+        vals = tuple(cols[c] for c in self._in_cols(op))
+        carry_in = carry if op.use_carry else np.int32(0)
+        if op.kind == "count":
+            fn = self._plan_count_fn(op, caps_sig, cap_base)
+            return [fn(self.g, vals, carry_in, n)]
+        b = int(carry.shape[0]) if op.use_carry else int(cols[op.base].shape[0])
+        out_cap = min([cap_base] + [caps[j] for j in op.inter])
         out_items = -(-b * out_cap // self.chunk) * self.chunk
+        if op.kind == "emit":
+            return self._plan_emit(op, caps_sig, cap_base, out_cap,
+                                   out_items, cols, vals, carry_in, n)
         if self.device_compact:
-            rows2, src, verts2, meta = self._expand_fn(
-                cap_a, capn, out_cap, out_items)(self.g, rows, verts)
-            total, maxc, dmax = (int(x) for x in np.asarray(meta))
-            self.stats["host_syncs"] += 1
+            return self._plan_expand_device(plan, oi, caps_sig, cap_base,
+                                            out_cap, out_items, b, cols,
+                                            vals, carry_in, n)
+        return self._plan_expand_host(plan, oi, caps_sig, cap_base, out_cap,
+                                      cols, vals, carry_in, n)
+
+    def _plan_emit(self, op, caps_sig, cap_base, out_cap, out_items, cols,
+                   vals, carry_in, n) -> list:
+        if self.device_compact:
+            fn = self._plan_emit_fn(op, caps_sig, cap_base, out_cap,
+                                    out_items)
+            emb, total = fn(self.g, vals, carry_in, n)
+            total = int(total)
             self.stats["device_compactions"] += 1
             self.stats["items"] += total
             if total == 0:
                 return []
-            cap2 = round_capacity(maxc)
-            capn2 = _pow2cap(max(dmax, 1))
-            cfn = self._chunk_fn(b, out_cap, cap2, self.chunk)
-            parts = []
-            for lo in range(0, total, self.chunk):
-                crows, cverts = cfn(rows2, src, verts2, lo)
-                m = min(self.chunk, total - lo)
-                self._record(depth, crows, cverts, m)
-                parts += self._descend(crows, cverts, capn2, depth - 1, m)
-            return parts
-        # oracle path: same loop through host np.nonzero compaction
-        rows2, counts2 = self._expand_host_fn(
-            cap_a, capn, out_cap)(self.g, rows, verts)
-        wave = compact(np.asarray(rows2), np.asarray(counts2))
-        self.stats["host_syncs"] += 1
+            return [np.asarray(emb)[:total]]
+        hfn = self._plan_expand_host_fn(op, caps_sig, cap_base, out_cap)
+        rows2, counts2 = hfn(self.g, vals, carry_in, n)
+        wave, ii = compact(np.asarray(rows2), np.asarray(counts2),
+                           return_src=True)
         self.stats["host_compactions"] += 1
         if wave is None:
             return []
         self.stats["items"] += len(wave)
-        capn2 = _neighbor_cap(self.g, wave.verts)
-        parts = []
-        for w, m in wave_chunks(wave, self.chunk):
-            crows = jnp.asarray(w.rows)
-            cverts = jnp.asarray(w.verts)
-            self._record(depth, crows, cverts, m)
-            parts += self._descend(crows, cverts, capn2, depth - 1, m)
+        cols_out = [wave.verts if c == op.level else np.asarray(cols[c])[ii]
+                    for c in op.out_cols]
+        return [np.stack(cols_out, axis=1)]
+
+    def _plan_expand_device(self, plan, oi, caps_sig, cap_base, out_cap,
+                            out_items, b, cols, vals, carry_in, n) -> list:
+        op, nxt = plan.ops[oi], plan.ops[oi + 1]
+        fn = self._plan_expand_fn(op, caps_sig, cap_base, out_cap, out_items)
+        rows2, src, verts2, meta = fn(self.g, vals, carry_in, n)
+        meta = [int(x) for x in np.asarray(meta)]
+        total, maxc, dmaxs = meta[0], meta[1], meta[2:]
+        self.stats["host_syncs"] += 1
+        self.stats["device_compactions"] += 1
+        self.stats["items"] += total
+        if total == 0:
+            return []
+        caps2 = {c: _pow2cap(max(d, 1))
+                 for c, d in zip(op.gather_refs, dmaxs)}
+        cap2 = round_capacity(maxc) if op.carry_out else 0
+        cfn = self._plan_chunk_fn(op, b, out_cap, cap2, self.chunk)
+        fwdvals = tuple(cols[c] for c in op.out_cols if c < op.level)
+        parts: list = []
+        for lo in range(0, total, self.chunk):
+            m = min(self.chunk, total - lo)
+            if op.carry_out:
+                outs, vch, carry2 = cfn(rows2, src, verts2, fwdvals, lo, m)
+            else:
+                outs, vch = cfn(rows2, src, verts2, fwdvals, lo, m)
+                carry2 = None
+            cols2 = dict(zip([c for c in op.out_cols if c < op.level], outs))
+            if op.level in op.out_cols:
+                cols2[op.level] = vch
+            self._record(nxt.level,
+                         self._wave_repr(cols2, op.out_cols, carry2, vch),
+                         vch, m)
+            parts += self._plan_descend(plan, oi + 1, cols2, caps2, carry2, m)
         return parts
 
-    # ------------------------------------------------------- pair-based apps
-    def _pair_counts_fn(self, ca: int, cb: int, kind: str):
-        def build():
-            @jax.jit
-            def fn(g, v0, v1):
-                rows_a, _ = padded_rows(g, v0, ca)
-                rows_b, _ = padded_rows(g, v1, cb)
-                if kind == "chain":
-                    full = batch_sub_count(rows_a, rows_b)
-                    below = batch_sub_count(rows_a, rows_b, v1)
-                    return full - below - 1
-                return batch_inter_count(rows_a, rows_b, v0)
-            return fn
-        return self._executable(("pair", ca, cb, kind), build)
+    def _plan_expand_host(self, plan, oi, caps_sig, cap_base, out_cap, cols,
+                          vals, carry_in, n) -> list:
+        """Oracle twin: same masks, np.nonzero compaction + re-upload."""
+        op, nxt = plan.ops[oi], plan.ops[oi + 1]
+        hfn = self._plan_expand_host_fn(op, caps_sig, cap_base, out_cap)
+        rows2, counts2 = hfn(self.g, vals, carry_in, n)
+        wave, ii = compact(np.asarray(rows2), np.asarray(counts2),
+                           return_src=True)
+        self.stats["host_syncs"] += 1
+        self.stats["host_compactions"] += 1
+        if wave is None:
+            return []
+        total = len(wave)
+        self.stats["items"] += total
+        fwd = [c for c in op.out_cols if c < op.level]
+        hostcols = {c: np.asarray(cols[c])[ii] for c in fwd}
+        caps2 = {c: _neighbor_cap(self.g, wave.verts if c == op.level
+                                  else hostcols[c])
+                 for c in op.gather_refs}
+        parts: list = []
+        for lo in range(0, total, self.chunk):
+            m = min(self.chunk, total - lo)
+            sl = slice(lo, lo + self.chunk)
+            cols2 = {c: jnp.asarray(_pad_to(hostcols[c][sl], self.chunk, 0))
+                     for c in fwd}
+            vch = jnp.asarray(_pad_to(wave.verts[sl], self.chunk, 0))
+            if op.level in op.out_cols:
+                cols2[op.level] = vch
+            carry2 = None
+            if op.carry_out:
+                carry2 = jnp.asarray(
+                    _pad_to(wave.rows[sl], self.chunk, SENTINEL))
+            self._record(nxt.level,
+                         self._wave_repr(cols2, op.out_cols, carry2, vch),
+                         vch, m)
+            parts += self._plan_descend(plan, oi + 1, cols2, caps2, carry2, m)
+        return parts
+
+    # ----------------------------------------------- plan wrappers (compat)
+    def count_edges(self, symmetric: bool = True, bounded: bool = True) -> int:
+        """Σ over edges of |N(v0) ∩ N(v1) (∩ [0, v1))| — triangle / nested
+        triangle counting as a one-level plan."""
+        return self.run(compile_pattern(
+            _EDGE_COUNT_PATTERNS[(symmetric, bounded)]))
+
+    def clique(self, k: int) -> int:
+        """k-clique counting, k >= 3 (compiled chain-restricted plan)."""
+        if k < 3:
+            raise ValueError("clique needs k >= 3")
+        return self.run(compile_pattern(clique_pattern(k)))
 
     def three_chain_induced(self) -> int:
         """Per directed edge (m, a): |{b ∈ N(m): b > a, b ∉ N(a)}|."""
-        total = 0
-        for ca, cb, dm, da, ah, n in self._pair_feed(directed_edges(self.g)):
-            per_edge = self._pair_counts_fn(ca, cb, "chain")(self.g, dm, da)
-            total += int(np.asarray(per_edge)[:n].sum())
-            self.stats["host_syncs"] += 1
-        return total
+        from .plan import THREE_CHAIN_INDUCED
+        return self.run(compile_pattern(THREE_CHAIN_INDUCED))
 
     def tailed_triangle(self) -> int:
-        """Fig. 2b: BoundedIntersect(N0, N1, v0) per directed edge, each
-        candidate v2 contributing deg(v1) - 2 tails."""
-        deg = np.asarray(self.g.degrees, dtype=np.int64)
-        total = 0
-        for ca, cb, dv0, dv1, v1h, n in self._pair_feed(directed_edges(self.g)):
-            c = self._pair_counts_fn(ca, cb, "tailed")(self.g, dv0, dv1)
-            c = np.asarray(c)[:n].astype(np.int64)
-            total += int((c * (deg[v1h[:n]] - 2)).sum())
-            self.stats["host_syncs"] += 1
-        return total
+        """Fig. 2b: BoundedIntersect(N0, N1, v0) per directed edge; the tail
+        level compiles away into the closed-form deg(v1) - 2 multiplier."""
+        from .plan import TAILED_TRIANGLE
+        return self.run(compile_pattern(TAILED_TRIANGLE))

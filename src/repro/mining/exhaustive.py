@@ -21,8 +21,18 @@ PATTERN_CHECKS = {
     "3-chain": (3, lambda adj, vs: _num_edges(adj, vs) == 2),
     "4-clique": (4, lambda adj, vs: _num_edges(adj, vs) == 6),
     "5-clique": (5, lambda adj, vs: _num_edges(adj, vs) == 10),
+    # 4-vertex induced motifs (ESU enumerates connected sets, so 3 edges =>
+    # a tree: star iff some vertex touches all others, else path)
     "tailed-triangle": (4, lambda adj, vs: _num_edges(adj, vs) == 4 and _has_triangle(adj, vs)),
+    "diamond": (4, lambda adj, vs: _num_edges(adj, vs) == 5),
+    "4-cycle": (4, lambda adj, vs: _num_edges(adj, vs) == 4 and not _has_triangle(adj, vs)),
+    "4-star": (4, lambda adj, vs: _num_edges(adj, vs) == 3 and _max_deg_in(adj, vs) == 3),
+    "4-path": (4, lambda adj, vs: _num_edges(adj, vs) == 3 and _max_deg_in(adj, vs) == 2),
 }
+
+
+def _max_deg_in(adj, vs) -> int:
+    return max(sum(1 for v in vs if v != u and v in adj[u]) for u in vs)
 
 
 def _num_edges(adj, vs) -> int:

@@ -16,9 +16,11 @@ all its (k-1)-edge sub-patterns were frequent.
 
 Engineering: domains are boolean masks over V computed vectorised from
 neighbor-label count tables; triangles come from the wavefront engine's
-``triangle_list``; only path-4 domains use a per-edge host loop (FSM support
-calculation is host-dominated — the paper's own observation for why FSM sees
-the smallest speedup, Fig. 9).
+``triangle_list`` — the compiled triangle *emit* plan, whose worklists are
+compacted on device (``ops.xinter_compact`` src output) so the embedding
+feed never round-trips through host ``np.nonzero``; only path-4 domains use
+a per-edge host loop (FSM support calculation is host-dominated — the
+paper's own observation for why FSM sees the smallest speedup, Fig. 9).
 """
 from __future__ import annotations
 

@@ -1,0 +1,370 @@
+"""Pattern-plan compiler: declarative patterns -> stream-op level programs.
+
+This module is the software twin of the paper's nested-intersection
+translator (§IV-F). There, S_NESTINTER is decoded into a *translation
+buffer* holding a µop sequence — one bounded stream instruction per
+candidate extension, each naming its operand streams (R1/R2), its bound
+register (R3) and whether it counts or materialises. Here a ``Pattern``
+(adjacency matrix + AutoMine-style symmetry-breaking restrictions) is
+compiled once, on the host, into a ``WavePlan`` whose per-level ``LevelOp``
+records play exactly that role for the wavefront engine
+(``mining.engine.WaveRunner.run``):
+
+  paper §IV-F translation buffer          ``LevelOp`` field
+  --------------------------------        ---------------------------------
+  µop opcode (S_INTER / S_SUB)            ``inter`` / ``sub`` column lists
+  R1 operand (running stream)             ``use_carry`` / ``base`` column
+  R2 operand (neighbor stream S_READ)     each column in ``inter``/``sub``
+  R3 bound register (early termination)   ``ub`` (+ ``lb``, beyond-paper)
+  count vs materialise disposition        ``kind``: count / expand / emit
+  closed-form retire (stream len reuse)   ``tail`` degree-factor multiplier
+
+A ``LevelOp`` for level ``l`` selects candidates for pattern vertex v_l out
+of one *base* stream — either the parent level's materialised survivor
+stream (``use_carry``, the S-Cache-resident operand reuse of §IV-D) or a
+freshly gathered neighbor list N(v_base) — by AND-ing membership masks:
+
+  keep = base∈N(v_j) ∀j∈inter  ∧  base∉N(v_j) ∀j∈sub
+         ∧ base < min(v_u: u∈ub) ∧ base > max(v_w: w∈lb) ∧ base ≠ v_e ∀e∈exclude
+
+``sub`` columns realise *induced* (non-edge) constraints; ``ub``/``lb``
+realise the declared symmetry-breaking restrictions; ``exclude`` keeps the
+embedding injective where neither adjacency nor an order constraint already
+implies it.  The compiler additionally performs:
+
+  * **carry reuse** — level l starts from the parent's survivor stream when
+    every constraint that defined the parent stream is implied by level l's
+    own constraint set (clique chains hit this on every level, which is how
+    the generic interpreter reproduces the hand-coded clique schedule
+    executable-for-executable);
+  * **tail folding** — a final level whose candidate set is one neighbor
+    list minus statically-known members collapses to a closed-form
+    ``deg(v_b) - c`` multiplier fused into the previous level's count (the
+    paper's stream-length reuse; tailed-triangle's ``deg(v1) - 2``);
+  * **liveness** — ``out_cols`` / ``gather_refs`` record which prefix
+    columns deeper levels still reference, so the engine forwards (and
+    meta-sizes) only those.
+
+Nothing in this module touches a device: a ``WavePlan`` is a pure host
+datum, and compiling the same ``Pattern`` twice yields structurally equal
+(hashable) ops, so ``WaveRunner``'s executable cache keys on them directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+__all__ = [
+    "Pattern", "LevelOp", "WavePlan", "compile_pattern", "pattern",
+    "clique_pattern", "TRIANGLE", "TRIANGLE_NESTED", "THREE_CHAIN_INDUCED",
+    "TAILED_TRIANGLE", "PAW_INDUCED", "DIAMOND", "CYCLE4", "PATH4", "STAR4",
+    "FOUR_MOTIFS",
+]
+
+
+# ---------------------------------------------------------------------------
+# declarative pattern model
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Pattern:
+    """A vertex pattern in matching order (AutoMine-style schedule).
+
+    ``adj``          k×k symmetric boolean adjacency (no self loops); index
+                     i is the i-th matched vertex.
+    ``restrictions`` symmetry-breaking constraints ``(i, j)`` ≡ v_i < v_j;
+                     must be consistent with some total order (acyclic) and
+                     any constraint between vertices 0 and 1 must be
+                     ``(1, 0)`` (the engine's half-edge feed yields v1 < v0).
+    ``induced``      non-edges of ``adj`` become S_SUB constraints.
+    ``div``          residual automorphism count the raw total over-counts
+                     by when the restrictions break symmetry only partially
+                     (the Fig. 4a nested-triangle stream divides by 6).
+    """
+
+    name: str
+    adj: tuple[tuple[bool, ...], ...]
+    restrictions: tuple[tuple[int, int], ...] = ()
+    induced: bool = False
+    div: int = 1
+
+    @property
+    def k(self) -> int:
+        return len(self.adj)
+
+
+def pattern(name: str, k: int, edges, restrictions=(), induced: bool = False,
+            div: int = 1) -> Pattern:
+    """Build a validated ``Pattern`` from an edge list over vertices 0..k-1."""
+    adj = [[False] * k for _ in range(k)]
+    for i, j in edges:
+        if i == j:
+            raise ValueError(f"{name}: self loop ({i},{j})")
+        adj[i][j] = adj[j][i] = True
+    p = Pattern(name=name, adj=tuple(tuple(r) for r in adj),
+                restrictions=tuple((int(i), int(j)) for i, j in restrictions),
+                induced=induced, div=div)
+    _validate(p)
+    return p
+
+
+def clique_pattern(k: int) -> Pattern:
+    """k-clique: complete adjacency, descending chain v_{i+1} < v_i."""
+    return pattern(f"{k}-clique", k, itertools.combinations(range(k), 2),
+                   restrictions=[(i + 1, i) for i in range(k - 1)])
+
+
+# ---------------------------------------------------------------------------
+# compiled plan model
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LevelOp:
+    """One translation-buffer entry: how to extend prefixes to vertex ``level``.
+
+    All column references are prefix indices < ``level``. Hashable by value:
+    the engine's executable cache keys on (op, capacities, chunk).
+    """
+
+    level: int
+    use_carry: bool               # base = parent's materialised survivors
+    base: int                     # else base = N(v_base) (column in inter set)
+    inter: tuple[int, ...]        # S_INTER refs beyond the base
+    sub: tuple[int, ...]          # S_SUB refs (induced non-edges)
+    ub: tuple[int, ...]           # candidate < min over these columns (R3)
+    lb: tuple[int, ...]           # candidate > max over these columns
+    exclude: tuple[int, ...]      # explicit injectivity: candidate != v_e
+    kind: str                     # 'expand' | 'count' | 'emit'
+    tail: tuple[int, int] | None  # (col, c): weight each count by deg(v_col)-c
+    out_cols: tuple[int, ...]     # prefix columns forwarded to deeper levels
+    gather_refs: tuple[int, ...]  # columns deeper levels gather rows for
+    carry_out: bool               # next level starts from our survivors
+
+    def row_refs(self) -> tuple[int, ...]:
+        """Columns whose neighbor rows this op gathers."""
+        refs = (() if self.use_carry else (self.base,)) + self.inter + self.sub
+        return tuple(sorted(set(refs)))
+
+    def val_refs(self) -> tuple[int, ...]:
+        """Columns whose *values* this op reads (gather starts, bounds, ...)."""
+        refs = set(self.row_refs()) | set(self.ub) | set(self.lb) \
+            | set(self.exclude)
+        if self.tail is not None:
+            refs.add(self.tail[0])
+        return tuple(sorted(refs))
+
+
+@dataclasses.dataclass(frozen=True)
+class WavePlan:
+    """A compiled stream program: level-1 feed spec + one op per level ≥ 2."""
+
+    pattern: Pattern
+    symmetric: bool               # half-edge feed (v1 < v0) vs directed
+    ops: tuple[LevelOp, ...]
+    div: int = 1
+
+    @property
+    def k(self) -> int:
+        return self.pattern.k
+
+
+# ---------------------------------------------------------------------------
+# the compiler
+# ---------------------------------------------------------------------------
+
+
+def _closure(k: int, restrictions) -> set[tuple[int, int]]:
+    """Transitive closure of the strict order v_i < v_j; raises on cycles."""
+    less = set(restrictions)
+    changed = True
+    while changed:
+        changed = False
+        for (a, b), (c, d) in itertools.product(tuple(less), tuple(less)):
+            if b == c and (a, d) not in less:
+                less.add((a, d))
+                changed = True
+    for i in range(k):
+        if (i, i) in less:
+            raise ValueError("restrictions contain a cycle")
+    return less
+
+
+def _validate(p: Pattern) -> None:
+    k = p.k
+    if k < 3:
+        raise ValueError("patterns need k >= 3 (k=2 is the edge feed itself)")
+    for i in range(k):
+        if p.adj[i][i]:
+            raise ValueError("self loop in pattern adjacency")
+        for j in range(k):
+            if p.adj[i][j] != p.adj[j][i]:
+                raise ValueError("pattern adjacency must be symmetric")
+    if not p.adj[0][1]:
+        raise ValueError("matching order must start on an edge (v0, v1)")
+    for l in range(2, k):
+        if not any(p.adj[l][j] for j in range(l)):
+            raise ValueError(
+                f"{p.name}: vertex {l} not adjacent to any earlier vertex "
+                "(matching order must keep the pattern connected)")
+    for i, j in p.restrictions:
+        if not (0 <= i < k and 0 <= j < k and i != j):
+            raise ValueError(f"bad restriction ({i},{j})")
+    if (0, 1) in p.restrictions:
+        raise ValueError(
+            "restriction between v0 and v1 must be (1, 0): the half-edge "
+            "feed enumerates v1 < v0")
+
+
+def compile_pattern(p: Pattern, emit: bool = False) -> WavePlan:
+    """Lower a ``Pattern`` to a ``WavePlan`` (§IV-F translation, on host).
+
+    ``emit=True`` compiles an enumeration program: the final level
+    materialises embeddings instead of counting (FSM's triangle feed).
+    """
+    _validate(p)
+    k = p.k
+    less = _closure(k, p.restrictions)
+    # v1 < v0 (declared or implied) => the half-edge feed already enumerates
+    # exactly the valid (v0, v1) pairs; otherwise feed all directed edges
+    symmetric = (1, 0) in less
+    # effective constraint sets per level (for carry implication checks)
+    eff_i: dict[int, set] = {}
+    eff_s: dict[int, set] = {}
+    eff_ub: dict[int, set] = {}
+    eff_lb: dict[int, set] = {}
+    raw_ops: list[dict] = []
+    for l in range(2, k):
+        I = {j for j in range(l) if p.adj[l][j]}
+        S = {j for j in range(l) if not p.adj[l][j]} if p.induced else set()
+        ub = {j for (i, j) in p.restrictions if i == l and j < l}
+        lb = {j for (j, i) in p.restrictions if i == l and j < l}
+        ordered = {j for j in range(l) if (l, j) in less or (j, l) in less}
+        exclude = {j for j in range(l) if j not in I and j not in ordered}
+        eff_i[l], eff_s[l], eff_ub[l], eff_lb[l] = I, S, ub, lb
+        # ---- carry reuse: is the parent's survivor stream a superset? ----
+        use_carry = False
+        if l > 2:
+            pi, ps, pub, plb = eff_i[l - 1], eff_s[l - 1], eff_ub[l - 1], \
+                eff_lb[l - 1]
+            ub_ok = all(any(u2 == u or (u2, u) in less for u2 in ub)
+                        for u in pub)
+            lb_ok = all(any(w2 == w or (w, w2) in less for w2 in lb)
+                        for w in plb)
+            use_carry = (raw_ops[-1]["kind"] == "expand" and pi <= I
+                         and ps <= S and ub_ok and lb_ok)
+        if use_carry:
+            inter = I - eff_i[l - 1]
+            sub = S - eff_s[l - 1]
+            base = -1
+        else:
+            inter = set(I)
+            base = min(inter)
+            inter.discard(base)
+            sub = set(S)
+        raw_ops.append(dict(
+            level=l, use_carry=use_carry, base=base,
+            inter=tuple(sorted(inter)), sub=tuple(sorted(sub)),
+            ub=tuple(sorted(ub)), lb=tuple(sorted(lb)),
+            exclude=tuple(sorted(exclude)),
+            kind=("emit" if emit else "count") if l == k - 1 else "expand",
+            tail=None))
+    # ---- tail folding: closed-form final level -> degree multiplier ----
+    last = raw_ops[-1]
+    if (not emit and len(raw_ops) >= 2 and last["kind"] == "count"
+            and not last["sub"] and not last["ub"] and not last["lb"]
+            and last["use_carry"] is False and not last["inter"]):
+        l, b = last["level"], last["base"]
+        # every earlier vertex must be statically a member of N(v_b), so the
+        # exclusion count is a compile-time constant (non-induced only:
+        # an induced pattern would have sub refs and fail the guard above)
+        if b <= l - 2 and all(p.adj[j][b] for j in range(l) if j != b):
+            raw_ops.pop()
+            raw_ops[-1]["kind"] = "count"
+            raw_ops[-1]["tail"] = (b, l - 1)
+    # ---- liveness: which columns do deeper levels still touch? ----
+    ops: list[LevelOp] = []
+    for idx, ro in enumerate(raw_ops):
+        deeper = raw_ops[idx + 1:]
+        needed: set[int] = set()
+        rows_needed: set[int] = set()
+        for d in deeper:
+            drows = (set() if d["use_carry"] else {d["base"]}) \
+                | set(d["inter"]) | set(d["sub"])
+            dvals = drows | set(d["ub"]) | set(d["lb"]) | set(d["exclude"])
+            if d["tail"] is not None:
+                dvals.add(d["tail"][0])
+            needed |= {c for c in dvals if c <= ro["level"]}
+            rows_needed |= {c for c in drows if c <= ro["level"]}
+        if emit:
+            needed |= set(range(ro["level"] + 1))   # embeddings output all
+        ops.append(LevelOp(
+            level=ro["level"], use_carry=ro["use_carry"], base=ro["base"],
+            inter=ro["inter"], sub=ro["sub"], ub=ro["ub"], lb=ro["lb"],
+            exclude=ro["exclude"], kind=ro["kind"], tail=ro["tail"],
+            out_cols=tuple(sorted(needed)),
+            gather_refs=tuple(sorted(rows_needed)),
+            carry_out=(idx + 1 < len(raw_ops)
+                       and raw_ops[idx + 1]["use_carry"])))
+    return WavePlan(pattern=p, symmetric=symmetric, ops=tuple(ops),
+                    div=1 if emit else p.div)
+
+
+# ---------------------------------------------------------------------------
+# canned patterns — the paper's apps + the 4-motif family, declaratively
+# ---------------------------------------------------------------------------
+
+# triangle, each counted once: v2 < v1 < v0 (§VI-B "T")
+TRIANGLE = pattern("triangle", 3, [(0, 1), (0, 2), (1, 2)],
+                   restrictions=[(1, 0), (2, 1)])
+
+# paper-faithful Fig. 4a S_NESTINTER stream: unbounded, every triangle
+# reached 6x, one division at retire ("TS")
+TRIANGLE_NESTED = pattern("triangle-nested", 3, [(0, 1), (0, 2), (1, 2)],
+                          div=6)
+
+# induced three-chain a—m—b with (a,b) ∉ E; v0 = center m, leaf order
+# broken with v2 > v1 — a *lower* bound level ("TC")
+THREE_CHAIN_INDUCED = pattern("three-chain-induced", 3, [(0, 1), (0, 2)],
+                              restrictions=[(1, 2)], induced=True)
+
+# non-induced tailed triangle (paper "TT"): triangle {0,1,2} + tail (1,3);
+# the wing swap v0<->v2 broken with v2 < v0. The tail level folds to the
+# closed-form deg(v1) - 2 multiplier at compile time.
+TAILED_TRIANGLE = pattern("tailed-triangle", 4,
+                          [(0, 1), (0, 2), (1, 2), (1, 3)],
+                          restrictions=[(2, 0)])
+
+# induced paw — the 4-motif variant of TT (tail vertex adjacent to v1 only)
+PAW_INDUCED = pattern("paw", 4, [(0, 1), (0, 2), (1, 2), (1, 3)],
+                      restrictions=[(2, 0)], induced=True)
+
+# diamond: two triangles sharing edge (0,1); wings 2,3 non-adjacent.
+# Aut = {swap 0,1} x {swap 2,3}, broken by v1 < v0 and v3 < v2.
+DIAMOND = pattern("diamond", 4, [(0, 1), (0, 2), (1, 2), (0, 3), (1, 3)],
+                  restrictions=[(1, 0), (3, 2)], induced=True)
+
+# 4-cycle 0-1-2-3-0: v0 the largest vertex, v2 its opposite, and v0's two
+# cycle neighbors ordered v3 < v1 — dihedral group (order 8) fully broken.
+CYCLE4 = pattern("4-cycle", 4, [(0, 1), (1, 2), (2, 3), (0, 3)],
+                 restrictions=[(1, 0), (2, 0), (3, 1)], induced=True)
+
+# 4-path a—b—c—d matched middle-edge-first (v0=b, v1=c, v2=a, v3=d);
+# path reversal (v0<->v1, v2<->v3) broken by v1 < v0.
+PATH4 = pattern("4-path", 4, [(0, 1), (0, 2), (1, 3)],
+                restrictions=[(1, 0)], induced=True)
+
+# 4-star: center v0, interchangeable leaves ordered v3 < v2 < v1.
+STAR4 = pattern("4-star", 4, [(0, 1), (0, 2), (0, 3)],
+                restrictions=[(2, 1), (3, 2)], induced=True)
+
+# the six connected 4-vertex motifs (induced counts)
+FOUR_MOTIFS: dict[str, Pattern] = {
+    "4-clique": clique_pattern(4),
+    "diamond": DIAMOND,
+    "4-cycle": CYCLE4,
+    "paw": PAW_INDUCED,
+    "4-path": PATH4,
+    "4-star": STAR4,
+}

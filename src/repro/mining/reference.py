@@ -55,6 +55,66 @@ def motif3(g: CSRGraph) -> dict[str, int]:
             "chain": three_chain_count(g, induced=True)}
 
 
+# degree-multiset signature of each connected 4-vertex induced subgraph
+_MOTIF4_SIG = {
+    (1, 1, 2, 2): "4-path", (1, 1, 1, 3): "4-star", (2, 2, 2, 2): "4-cycle",
+    (1, 2, 2, 3): "paw", (2, 2, 3, 3): "diamond", (3, 3, 3, 3): "4-clique",
+}
+
+
+def four_motif_counts(g: CSRGraph) -> dict[str, int]:
+    """Brute-force induced 4-motif census: classify every vertex quadruple
+    by the degree multiset of its induced subgraph (unique per motif; the
+    disconnected shapes — incl. triangle+isolated (0,2,2,2) — drop out).
+    Vectorised over all C(n,4) combinations: small graphs only."""
+    n = g.num_vertices
+    A = np.zeros((n, n), dtype=bool)
+    e = edge_list(g)
+    A[e[:, 0], e[:, 1]] = True
+    quads = np.array(list(itertools.combinations(range(n), 4)), dtype=np.int64)
+    if quads.size == 0:
+        return {m: 0 for m in _MOTIF4_SIG.values()}
+    deg = np.zeros((quads.shape[0], 4), dtype=np.int8)
+    for i, j in itertools.combinations(range(4), 2):
+        hit = A[quads[:, i], quads[:, j]]
+        deg[:, i] += hit
+        deg[:, j] += hit
+    deg.sort(axis=1)
+    out = {m: 0 for m in _MOTIF4_SIG.values()}
+    sigs, counts = np.unique(deg, axis=0, return_counts=True)
+    for sig, c in zip(sigs, counts):
+        m = _MOTIF4_SIG.get(tuple(int(x) for x in sig))
+        if m is not None:
+            out[m] = int(c)
+    return out
+
+
+def pattern_count_oracle(g: CSRGraph, pat) -> int:
+    """Count embeddings of a ``mining.plan.Pattern`` by brute force.
+
+    Enumerates every injective vertex mapping (itertools.permutations),
+    checks pattern edges (plus non-edges when ``pat.induced``) and the
+    declared symmetry-breaking restrictions, then divides by ``pat.div`` —
+    the semantic definition every compiled ``WavePlan`` must reproduce.
+    Exponential: tiny graphs only.
+    """
+    n = g.num_vertices
+    A = np.zeros((n, n), dtype=bool)
+    e = edge_list(g)
+    A[e[:, 0], e[:, 1]] = True
+    k = pat.k
+    pairs = [(i, j, pat.adj[i][j]) for i in range(k) for j in range(i + 1, k)]
+    total = 0
+    for vs in itertools.permutations(range(n), k):
+        ok = all(A[vs[i], vs[j]] == want if pat.induced
+                 else (not want or A[vs[i], vs[j]])
+                 for i, j, want in pairs)
+        if ok and all(vs[i] < vs[j] for i, j in pat.restrictions):
+            total += 1
+    assert total % pat.div == 0
+    return total // pat.div
+
+
 def fsm_oracle(g: CSRGraph, labels: np.ndarray, min_support: int,
                metric: str = "mni") -> dict:
     """Brute-force FSM oracle (tiny labelled graphs only).

@@ -77,6 +77,38 @@ def test_bound_property(bound):
     np.testing.assert_array_equal(got, want)
 
 
+@pytest.mark.parametrize("cap_a,cap_b", [(128, 128), (256, 128)])
+def test_mark_pallas_matches_xla(cap_a, cap_b):
+    a = jnp.asarray(make_rows(5, cap_a))
+    b = jnp.asarray(make_rows(5, cap_b))
+    got = ops.xmark(a, b, backend="pallas")
+    want = ops.xmark(a, b, backend="xla")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("bounded", [False, True])
+def test_sub_count_pallas_matches_xla(bounded):
+    a = jnp.asarray(make_rows(6, 256))
+    b = jnp.asarray(make_rows(6, 128))
+    bounds = jnp.asarray(RNG.choice([SENTINEL, 100, 2000], size=6)
+                         .astype(np.int32)) if bounded else None
+    got = ops.xsub_count(a, b, bounds, backend="pallas")
+    want = ops.xsub_count(a, b, bounds, backend="xla")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_sub_compact_pallas_matches_xla():
+    a = jnp.asarray(make_rows(6, 256, hi=800))
+    b = jnp.asarray(make_rows(6, 128, hi=800))
+    bounds = jnp.asarray(RNG.integers(0, 800, 6).astype(np.int32))
+    outs_p = ops.xsub_compact(a, b, bounds, out_cap=256, out_items=512,
+                              backend="pallas")
+    outs_x = ops.xsub_compact(a, b, bounds, out_cap=256, out_items=512,
+                              backend="xla")
+    for got, want in zip(outs_p, outs_x):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 @pytest.mark.parametrize("op", ["mac", "max", "min"])
 def test_vinter_sweep(op):
     a = jnp.asarray(make_rows(5, 256))
