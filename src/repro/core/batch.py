@@ -45,24 +45,35 @@ def _bounds(rows_a: jax.Array, bounds) -> jax.Array:
     return jnp.asarray(bounds, jnp.int32)
 
 
+def _lbounds(rows_a: jax.Array, lbounds) -> jax.Array:
+    """Per-row exclusive lower bound; -1 = unbounded (vertex ids are >= 0)."""
+    if lbounds is None:
+        return jnp.full((rows_a.shape[0],), -1, jnp.int32)
+    return jnp.asarray(lbounds, jnp.int32)
+
+
 @jax.jit
-def batch_inter_count(rows_a: jax.Array, rows_b: jax.Array, bounds=None) -> jax.Array:
-    """counts[i] = |{k in A_i ∩ B_i : k < bounds[i]}| — batched S_INTER.C."""
-    ub = _bounds(rows_a, bounds)
-    keep = _membership(rows_a, rows_b) & (rows_a < ub[:, None])
+def batch_inter_count(rows_a: jax.Array, rows_b: jax.Array, bounds=None,
+                      lbounds=None) -> jax.Array:
+    """counts[i] = |{k in A_i ∩ B_i : lbounds[i] < k < bounds[i]}| —
+    batched S_INTER.C (ub = R3 operand, lb = the beyond-paper twin)."""
+    ub, lb = _bounds(rows_a, bounds), _lbounds(rows_a, lbounds)
+    keep = _membership(rows_a, rows_b) & (rows_a < ub[:, None]) \
+        & (rows_a > lb[:, None])
     return jnp.sum(keep, axis=1, dtype=jnp.int32)
 
 
 @partial(jax.jit, static_argnames=("out_cap",))
 def batch_inter(rows_a: jax.Array, rows_b: jax.Array, bounds=None,
-                out_cap: int | None = None):
+                out_cap: int | None = None, lbounds=None):
     """Batched S_INTER. Returns (rows, counts) with rows (B, out_cap).
 
     out_cap defaults to min(capA, capB) — the paper's §IV-D dependency bound
     reused to size the output statically.
     """
-    ub = _bounds(rows_a, bounds)
-    keep = _membership(rows_a, rows_b) & (rows_a < ub[:, None])
+    ub, lb = _bounds(rows_a, bounds), _lbounds(rows_a, lbounds)
+    keep = _membership(rows_a, rows_b) & (rows_a < ub[:, None]) \
+        & (rows_a > lb[:, None])
     cap = out_cap or min(rows_a.shape[1], rows_b.shape[1])
     masked = jnp.where(keep, rows_a, SENTINEL)
     rows = jnp.sort(masked, axis=1)[:, :cap]
@@ -70,19 +81,23 @@ def batch_inter(rows_a: jax.Array, rows_b: jax.Array, bounds=None,
 
 
 @jax.jit
-def batch_sub_count(rows_a: jax.Array, rows_b: jax.Array, bounds=None) -> jax.Array:
-    """counts[i] = |{k in A_i \\ B_i : k < bounds[i]}| — batched S_SUB.C."""
-    ub = _bounds(rows_a, bounds)
-    keep = (~_membership(rows_a, rows_b)) & (rows_a != SENTINEL) & (rows_a < ub[:, None])
+def batch_sub_count(rows_a: jax.Array, rows_b: jax.Array, bounds=None,
+                    lbounds=None) -> jax.Array:
+    """counts[i] = |{k in A_i \\ B_i : lbounds[i] < k < bounds[i]}| —
+    batched S_SUB.C."""
+    ub, lb = _bounds(rows_a, bounds), _lbounds(rows_a, lbounds)
+    keep = (~_membership(rows_a, rows_b)) & (rows_a != SENTINEL) \
+        & (rows_a < ub[:, None]) & (rows_a > lb[:, None])
     return jnp.sum(keep, axis=1, dtype=jnp.int32)
 
 
 @partial(jax.jit, static_argnames=("out_cap",))
 def batch_sub(rows_a: jax.Array, rows_b: jax.Array, bounds=None,
-              out_cap: int | None = None):
+              out_cap: int | None = None, lbounds=None):
     """Batched S_SUB. Returns (rows, counts), rows (B, out_cap or capA)."""
-    ub = _bounds(rows_a, bounds)
-    keep = (~_membership(rows_a, rows_b)) & (rows_a != SENTINEL) & (rows_a < ub[:, None])
+    ub, lb = _bounds(rows_a, bounds), _lbounds(rows_a, lbounds)
+    keep = (~_membership(rows_a, rows_b)) & (rows_a != SENTINEL) \
+        & (rows_a < ub[:, None]) & (rows_a > lb[:, None])
     cap = out_cap or rows_a.shape[1]
     masked = jnp.where(keep, rows_a, SENTINEL)
     rows = jnp.sort(masked, axis=1)[:, :cap]
@@ -91,7 +106,7 @@ def batch_sub(rows_a: jax.Array, rows_b: jax.Array, bounds=None,
 
 @partial(jax.jit, static_argnames=("out_cap", "out_items"))
 def batch_sub_compact(rows_a: jax.Array, rows_b: jax.Array, bounds,
-                      out_cap: int, out_items: int):
+                      out_cap: int, out_items: int, lbounds=None):
     """Fused batched S_SUB + worklist compaction (device-resident SUB level).
 
     Mirrors ``batch_inter`` + ``batch_compact_items`` but keeps the
@@ -99,9 +114,9 @@ def batch_sub_compact(rows_a: jax.Array, rows_b: jax.Array, bounds,
     Returns (rows, counts, src, verts, total, maxc) with the same contract
     as ``kernels.ops.xinter_compact``.
     """
-    ub = _bounds(rows_a, bounds)
+    ub, lb = _bounds(rows_a, bounds), _lbounds(rows_a, lbounds)
     keep = (~_membership(rows_a, rows_b)) & (rows_a != SENTINEL) \
-        & (rows_a < ub[:, None])
+        & (rows_a < ub[:, None]) & (rows_a > lb[:, None])
     masked = jnp.where(keep, rows_a, SENTINEL)
     rows = jnp.sort(masked, axis=1)[:, :out_cap]
     counts = jnp.sum(keep, axis=1, dtype=jnp.int32)

@@ -42,34 +42,45 @@ TA = 128  # A-tile keys (paper slot = 64 keys; we use the TPU lane width)
 TB = 128  # B-tile keys
 
 
-def tile_schedule(a: jax.Array, b: jax.Array, bounds: jax.Array):
+def tile_schedule(a: jax.Array, b: jax.Array, bounds: jax.Array,
+                  lbounds: jax.Array | None = None):
     """Per (row, A-tile) overlap table: (lo_tile, n_visits), both (B, nA).
 
-    lo = first B-tile containing a key >= the A-tile's minimum;
-    n  = #B-tiles holding keys in [tile_min, min(tile_max, bound-1)].
+    lo = first B-tile containing a key >= max(tile_min, lbound+1);
+    n  = #B-tiles holding keys in [that, min(tile_max, bound-1)].
+
+    ``lbounds`` is the per-row exclusive *lower* bound (the plan's
+    ``LevelOp.lb``, e.g. three-chain's b > a): A-tiles entirely <= lbound
+    are skipped whole, mirroring the R3 upper-bound early termination.
     """
     cap_b = b.shape[1]
     a_lo = a[:, ::TA]                                   # (B, nA) tile minima
     a_hi = a[:, TA - 1:: TA]                            # (B, nA) tile maxima
-    lo_idx = jax.vmap(jnp.searchsorted)(b, a_lo)
+    eff_lo = a_lo if lbounds is None else \
+        jnp.maximum(a_lo, lbounds[:, None] + 1)
+    lo_idx = jax.vmap(jnp.searchsorted)(b, eff_lo)
     eff_hi = jnp.minimum(a_hi, bounds[:, None] - 1)
     hi_idx = jax.vmap(lambda bb, x: jnp.searchsorted(bb, x, side="right"))(b, eff_hi)
     lo_t = (lo_idx // TB).astype(jnp.int32)
     hi_t = ((hi_idx + TB - 1) // TB).astype(jnp.int32)
     nv = jnp.maximum(hi_t - lo_t, 0)
-    # whole-tile early termination: A-tile entirely >= bound or all-sentinel
+    # whole-tile early termination: A-tile entirely >= bound, entirely
+    # <= lbound, or all-sentinel
     dead = (a_lo >= jnp.minimum(bounds[:, None], SENTINEL))
+    if lbounds is not None:
+        dead = dead | (a_hi <= lbounds[:, None])
     nv = jnp.where(dead, 0, nv).astype(jnp.int32)
     lo_t = jnp.minimum(lo_t, max(cap_b // TB - 1, 0))
     return lo_t, nv
 
 
-def _count_kernel(lo_ref, nv_ref, a_ref, b_ref, bound_ref, out_ref):
+def _count_kernel(lo_ref, nv_ref, a_ref, b_ref, bound_ref, lbound_ref,
+                  out_ref):
     bi, i, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
     a = a_ref[0, :]
     bt = b_ref[0, :]
     bound = bound_ref[0, 0]
-    valid = (a != SENTINEL) & (a < bound)
+    valid = (a != SENTINEL) & (a < bound) & (a > lbound_ref[0, 0])
     m = (a[:, None] == bt[None, :]) & valid[:, None]
     cnt = jnp.sum(m.astype(jnp.int32))
 
@@ -82,12 +93,12 @@ def _count_kernel(lo_ref, nv_ref, a_ref, b_ref, bound_ref, out_ref):
         out_ref[0, 0] += cnt
 
 
-def _mark_kernel(lo_ref, nv_ref, a_ref, b_ref, bound_ref, out_ref):
+def _mark_kernel(lo_ref, nv_ref, a_ref, b_ref, bound_ref, lbound_ref, out_ref):
     bi, i, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
     a = a_ref[0, :]
     bt = b_ref[0, :]
     bound = bound_ref[0, 0]
-    valid = (a != SENTINEL) & (a < bound)
+    valid = (a != SENTINEL) & (a < bound) & (a > lbound_ref[0, 0])
     hit = (jnp.sum(((a[:, None] == bt[None, :]) & valid[:, None])
                    .astype(jnp.int32), axis=1) > 0)
 
@@ -100,7 +111,8 @@ def _mark_kernel(lo_ref, nv_ref, a_ref, b_ref, bound_ref, out_ref):
         out_ref[0, :] = out_ref[0, :] | hit.astype(jnp.int32)
 
 
-def _expand_kernel(lo_ref, nv_ref, a_ref, b_ref, bound_ref, mark_ref, cnt_ref):
+def _expand_kernel(lo_ref, nv_ref, a_ref, b_ref, bound_ref, lbound_ref,
+                   mark_ref, cnt_ref):
     """Fused mark + count: one pass over the tile schedule feeds both the
     compaction mask and the survivor count (the device expand_compact path
     needs both; issuing two kernels would double the B-tile DMA traffic)."""
@@ -108,7 +120,7 @@ def _expand_kernel(lo_ref, nv_ref, a_ref, b_ref, bound_ref, mark_ref, cnt_ref):
     a = a_ref[0, :]
     bt = b_ref[0, :]
     bound = bound_ref[0, 0]
-    valid = (a != SENTINEL) & (a < bound)
+    valid = (a != SENTINEL) & (a < bound) & (a > lbound_ref[0, 0])
     hit = (jnp.sum(((a[:, None] == bt[None, :]) & valid[:, None])
                    .astype(jnp.int32), axis=1) > 0)
 
@@ -128,19 +140,22 @@ def _expand_kernel(lo_ref, nv_ref, a_ref, b_ref, bound_ref, mark_ref, cnt_ref):
         cnt_ref[0, 0] += jnp.sum(hit.astype(jnp.int32))
 
 
-def _common(a, b, bounds, max_visits):
+def _common(a, b, bounds, max_visits, lbounds=None):
     B, cap_a = a.shape
     cap_b = b.shape[1]
     assert cap_a % TA == 0 and cap_b % TB == 0, "streams are LANE-padded"
     if bounds is None:
         bounds = jnp.full((B,), SENTINEL, jnp.int32)
     bounds = jnp.asarray(bounds, jnp.int32)
-    lo_t, nv = tile_schedule(a, b, bounds)
+    if lbounds is None:
+        lbounds = jnp.full((B,), -1, jnp.int32)   # ids >= 0: no-op bound
+    lbounds = jnp.asarray(lbounds, jnp.int32)
+    lo_t, nv = tile_schedule(a, b, bounds, lbounds)
     if max_visits is None:
         max_visits = cap_b // TB          # static worst case (merge bound
         #                                   tightens this when known on host)
     grid = (B, cap_a // TA, int(max_visits))
-    return bounds, lo_t, nv, grid, cap_b
+    return bounds, lbounds, lo_t, nv, grid, cap_b
 
 
 def _b_index(bi, i, j, lo, nv, cap_b):
@@ -149,9 +164,12 @@ def _b_index(bi, i, j, lo, nv, cap_b):
 
 
 @functools.partial(jax.jit, static_argnames=("max_visits", "interpret"))
-def intersect_count_pallas(a, b, bounds=None, max_visits=None, interpret=True):
-    """counts[i] = |{k ∈ A_i ∩ B_i : k < bounds[i]}| (paper S_INTER.C)."""
-    bounds, lo_t, nv, grid, cap_b = _common(a, b, bounds, max_visits)
+def intersect_count_pallas(a, b, bounds=None, max_visits=None, interpret=True,
+                           lbounds=None):
+    """counts[i] = |{k ∈ A_i ∩ B_i : lbounds[i] < k < bounds[i]}|
+    (paper S_INTER.C; the lower bound is the beyond-paper lb operand)."""
+    bounds, lbounds, lo_t, nv, grid, cap_b = _common(a, b, bounds, max_visits,
+                                                     lbounds)
     out = pl.pallas_call(
         _count_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -162,23 +180,26 @@ def intersect_count_pallas(a, b, bounds=None, max_visits=None, interpret=True):
                 pl.BlockSpec((1, TB),
                              lambda bi, i, j, lo, nv: _b_index(bi, i, j, lo, nv, cap_b)),
                 pl.BlockSpec((1, 1), lambda bi, i, j, lo, nv: (bi, 0)),
+                pl.BlockSpec((1, 1), lambda bi, i, j, lo, nv: (bi, 0)),
             ],
             out_specs=pl.BlockSpec((1, 1), lambda bi, i, j, lo, nv: (bi, 0)),
         ),
         out_shape=jax.ShapeDtypeStruct((a.shape[0], 1), jnp.int32),
         interpret=interpret,
-    )(lo_t, nv, a, b, bounds.reshape(-1, 1))
+    )(lo_t, nv, a, b, bounds.reshape(-1, 1), lbounds.reshape(-1, 1))
     return out[:, 0]
 
 
 @functools.partial(jax.jit, static_argnames=("max_visits", "interpret"))
-def intersect_expand_pallas(a, b, bounds=None, max_visits=None, interpret=True):
+def intersect_expand_pallas(a, b, bounds=None, max_visits=None, interpret=True,
+                            lbounds=None):
     """Fused S_INTER mark + count in one schedule pass -> (mark, counts).
 
     The device expand_compact path consumes both outputs; fusing them halves
     the B-tile DMA traffic vs running the mark and count kernels separately.
     """
-    bounds, lo_t, nv, grid, cap_b = _common(a, b, bounds, max_visits)
+    bounds, lbounds, lo_t, nv, grid, cap_b = _common(a, b, bounds, max_visits,
+                                                     lbounds)
     mark, cnt = pl.pallas_call(
         _expand_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -188,6 +209,7 @@ def intersect_expand_pallas(a, b, bounds=None, max_visits=None, interpret=True):
                 pl.BlockSpec((1, TA), lambda bi, i, j, lo, nv: (bi, i)),
                 pl.BlockSpec((1, TB),
                              lambda bi, i, j, lo, nv: _b_index(bi, i, j, lo, nv, cap_b)),
+                pl.BlockSpec((1, 1), lambda bi, i, j, lo, nv: (bi, 0)),
                 pl.BlockSpec((1, 1), lambda bi, i, j, lo, nv: (bi, 0)),
             ],
             out_specs=(
@@ -200,16 +222,18 @@ def intersect_expand_pallas(a, b, bounds=None, max_visits=None, interpret=True):
             jax.ShapeDtypeStruct((a.shape[0], 1), jnp.int32),
         ),
         interpret=interpret,
-    )(lo_t, nv, a, b, bounds.reshape(-1, 1))
+    )(lo_t, nv, a, b, bounds.reshape(-1, 1), lbounds.reshape(-1, 1))
     return mark, cnt[:, 0]
 
 
 @functools.partial(jax.jit, static_argnames=("max_visits", "interpret"))
-def intersect_mark_pallas(a, b, bounds=None, max_visits=None, interpret=True):
-    """mark[i, s] = 1 iff A_i[s] ∈ B_i and A_i[s] < bounds[i].
+def intersect_mark_pallas(a, b, bounds=None, max_visits=None, interpret=True,
+                          lbounds=None):
+    """mark[i, s] = 1 iff A_i[s] ∈ B_i and lbounds[i] < A_i[s] < bounds[i].
 
     S_INTER materialisation = sort-compact A over this mask (ops.xinter)."""
-    bounds, lo_t, nv, grid, cap_b = _common(a, b, bounds, max_visits)
+    bounds, lbounds, lo_t, nv, grid, cap_b = _common(a, b, bounds, max_visits,
+                                                     lbounds)
     out = pl.pallas_call(
         _mark_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -220,10 +244,11 @@ def intersect_mark_pallas(a, b, bounds=None, max_visits=None, interpret=True):
                 pl.BlockSpec((1, TB),
                              lambda bi, i, j, lo, nv: _b_index(bi, i, j, lo, nv, cap_b)),
                 pl.BlockSpec((1, 1), lambda bi, i, j, lo, nv: (bi, 0)),
+                pl.BlockSpec((1, 1), lambda bi, i, j, lo, nv: (bi, 0)),
             ],
             out_specs=pl.BlockSpec((1, TA), lambda bi, i, j, lo, nv: (bi, i)),
         ),
         out_shape=jax.ShapeDtypeStruct(a.shape, jnp.int32),
         interpret=interpret,
-    )(lo_t, nv, a, b, bounds.reshape(-1, 1))
+    )(lo_t, nv, a, b, bounds.reshape(-1, 1), lbounds.reshape(-1, 1))
     return out

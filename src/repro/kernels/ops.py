@@ -34,15 +34,18 @@ def _resolve(backend: str) -> str:
     return backend
 
 
-def xinter_count(a, b, bounds=None, backend: str = "auto"):
-    """Batched bounded S_INTER.C."""
+def xinter_count(a, b, bounds=None, backend: str = "auto", lbounds=None):
+    """Batched bounded S_INTER.C (``lbounds`` = exclusive lower bound; both
+    bounds ride the Pallas tile schedule, so out-of-range tiles never DMA)."""
     backend = _resolve(backend)
     if backend == "xla":
-        return batch_inter_count(a, b, bounds)
-    return intersect_count_pallas(a, b, bounds, interpret=not _on_tpu())
+        return batch_inter_count(a, b, bounds, lbounds=lbounds)
+    return intersect_count_pallas(a, b, bounds, interpret=not _on_tpu(),
+                                  lbounds=lbounds)
 
 
-def xinter(a, b, bounds=None, out_cap: int | None = None, backend: str = "auto"):
+def xinter(a, b, bounds=None, out_cap: int | None = None, backend: str = "auto",
+           lbounds=None):
     """Batched bounded S_INTER -> (rows, counts).
 
     Pallas path: the kernel produces the match mask (the O(n·m) compare hot
@@ -50,8 +53,9 @@ def xinter(a, b, bounds=None, out_cap: int | None = None, backend: str = "auto")
     data movement in the compiler's hands, compute in the kernel's."""
     backend = _resolve(backend)
     if backend == "xla":
-        return batch_inter(a, b, bounds, out_cap=out_cap)
-    mark = intersect_mark_pallas(a, b, bounds, interpret=not _on_tpu())
+        return batch_inter(a, b, bounds, out_cap=out_cap, lbounds=lbounds)
+    mark = intersect_mark_pallas(a, b, bounds, interpret=not _on_tpu(),
+                                 lbounds=lbounds)
     cap = out_cap or min(a.shape[1], b.shape[1])
     masked = jnp.where(mark > 0, a, SENTINEL)
     rows = jnp.sort(masked, axis=1)[:, :cap]
@@ -59,16 +63,17 @@ def xinter(a, b, bounds=None, out_cap: int | None = None, backend: str = "auto")
 
 
 @functools.partial(jax.jit, static_argnames=("out_cap", "out_items"))
-def _xinter_compact_xla(a, b, bounds, out_cap: int, out_items: int):
-    rows, counts = batch_inter(a, b, bounds, out_cap=out_cap)
+def _xinter_compact_xla(a, b, bounds, out_cap: int, out_items: int, lbounds):
+    rows, counts = batch_inter(a, b, bounds, out_cap=out_cap, lbounds=lbounds)
     src, verts, total, maxc = batch_compact_items(rows, counts, out_items)
     return rows, counts, src, verts, total, maxc
 
 
 @functools.partial(jax.jit, static_argnames=("out_cap", "out_items", "interpret"))
 def _xinter_compact_pallas(a, b, bounds, out_cap: int, out_items: int,
-                           interpret: bool):
-    mark, counts = intersect_expand_pallas(a, b, bounds, interpret=interpret)
+                           interpret: bool, lbounds):
+    mark, counts = intersect_expand_pallas(a, b, bounds, interpret=interpret,
+                                           lbounds=lbounds)
     masked = jnp.where(mark > 0, a, SENTINEL)
     rows = jnp.sort(masked, axis=1)[:, :out_cap]
     src, verts, total, maxc = batch_compact_items(rows, counts, out_items)
@@ -76,7 +81,8 @@ def _xinter_compact_pallas(a, b, bounds, out_cap: int, out_items: int,
 
 
 def xinter_compact(a, b, bounds=None, out_cap: int | None = None,
-                   out_items: int | None = None, backend: str = "auto"):
+                   out_items: int | None = None, backend: str = "auto",
+                   lbounds=None):
     """Fused bounded S_INTER + worklist compaction, fully device-resident.
 
     One dispatch produces everything the next wavefront level needs:
@@ -96,9 +102,9 @@ def xinter_compact(a, b, bounds=None, out_cap: int | None = None,
     cap = out_cap or min(a.shape[1], b.shape[1])
     items = out_items or a.shape[0] * cap
     if backend == "xla":
-        return _xinter_compact_xla(a, b, bounds, cap, items)
+        return _xinter_compact_xla(a, b, bounds, cap, items, lbounds)
     return _xinter_compact_pallas(a, b, bounds, cap, items,
-                                  interpret=not _on_tpu())
+                                  interpret=not _on_tpu(), lbounds=lbounds)
 
 
 def xmark(a, b, backend: str = "auto"):
@@ -116,28 +122,36 @@ def xmark(a, b, backend: str = "auto"):
     return intersect_mark_pallas(a, b, None, interpret=not _on_tpu()) > 0
 
 
-def xsub_count(a, b, bounds=None, backend: str = "auto"):
-    """Batched bounded S_SUB.C: counts[i] = |{k ∈ A_i \\ B_i : k < bounds[i]}|."""
-    backend = _resolve(backend)
-    if backend == "xla":
-        return batch_sub_count(a, b, bounds)
-    mark = intersect_mark_pallas(a, b, None, interpret=not _on_tpu())
+def _sub_window(a, bounds, lbounds):
+    """The complement's value window (lbound, bound) as a keep mask.
+
+    SUB bounds live OUTSIDE the mark kernel: the kernel's bound operand masks
+    *matches*, which is the wrong polarity for a complement (an out-of-window
+    key must be dropped whether or not it matched)."""
     ub = jnp.full((a.shape[0],), SENTINEL, jnp.int32) if bounds is None \
         else jnp.asarray(bounds, jnp.int32)
-    keep = (mark == 0) & (a != SENTINEL) & (a < ub[:, None])
+    lb = jnp.full((a.shape[0],), -1, jnp.int32) if lbounds is None \
+        else jnp.asarray(lbounds, jnp.int32)
+    return (a != SENTINEL) & (a < ub[:, None]) & (a > lb[:, None])
+
+
+def xsub_count(a, b, bounds=None, backend: str = "auto", lbounds=None):
+    """Batched bounded S_SUB.C:
+    counts[i] = |{k ∈ A_i \\ B_i : lbounds[i] < k < bounds[i]}|."""
+    backend = _resolve(backend)
+    if backend == "xla":
+        return batch_sub_count(a, b, bounds, lbounds=lbounds)
+    mark = intersect_mark_pallas(a, b, None, interpret=not _on_tpu())
+    keep = (mark == 0) & _sub_window(a, bounds, lbounds)
     return jnp.sum(keep, axis=1, dtype=jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("out_cap", "out_items", "interpret"))
 def _xsub_compact_pallas(a, b, bounds, out_cap: int, out_items: int,
-                         interpret: bool):
-    # the mark kernel runs UNBOUNDED here: its bound operand masks matches,
-    # which is the wrong polarity for a complement (a key >= bound must be
-    # dropped whether or not it matched). Bound applied on the keep mask.
+                         interpret: bool, lbounds):
+    # the mark kernel runs UNBOUNDED here (see _sub_window on polarity)
     mark = intersect_mark_pallas(a, b, None, interpret=interpret)
-    ub = jnp.full((a.shape[0],), SENTINEL, jnp.int32) if bounds is None \
-        else jnp.asarray(bounds, jnp.int32)
-    keep = (mark == 0) & (a != SENTINEL) & (a < ub[:, None])
+    keep = (mark == 0) & _sub_window(a, bounds, lbounds)
     masked = jnp.where(keep, a, SENTINEL)
     rows = jnp.sort(masked, axis=1)[:, :out_cap]
     counts = jnp.sum(keep, axis=1, dtype=jnp.int32)
@@ -146,7 +160,8 @@ def _xsub_compact_pallas(a, b, bounds, out_cap: int, out_items: int,
 
 
 def xsub_compact(a, b, bounds=None, out_cap: int | None = None,
-                 out_items: int | None = None, backend: str = "auto"):
+                 out_items: int | None = None, backend: str = "auto",
+                 lbounds=None):
     """Fused bounded S_SUB + worklist compaction — ``xinter_compact``'s twin
     for SUB levels (induced non-edge constraints), same output contract:
     (rows, counts, src, verts, total, maxc), fully device-resident.
@@ -155,9 +170,9 @@ def xsub_compact(a, b, bounds=None, out_cap: int | None = None,
     cap = out_cap or a.shape[1]
     items = out_items or a.shape[0] * cap
     if backend == "xla":
-        return batch_sub_compact(a, b, bounds, cap, items)
+        return batch_sub_compact(a, b, bounds, cap, items, lbounds=lbounds)
     return _xsub_compact_pallas(a, b, bounds, cap, items,
-                                interpret=not _on_tpu())
+                                interpret=not _on_tpu(), lbounds=lbounds)
 
 
 def xvinter_mac(a_keys, a_vals, b_keys, b_vals, op: str = "mac",

@@ -17,16 +17,21 @@ from repro.graph.datasets import DATASETS, dataset_stats
 from repro.mining import apps, baseline, exhaustive
 from repro.mining.fsm import fsm, random_labels, sfsm
 
-from repro.mining.plan import FOUR_MOTIFS
+from repro.mining.forest import build_forest
+from repro.mining.plan import FOUR_MOTIFS, compile_pattern
 
 # per-pattern 4-motif codes (each one compiled WavePlan, zero engine code)
 PATTERN_APPS = {"DM": "diamond", "CY": "4-cycle", "PW": "paw",
                 "P4": "4-path", "S4": "4-star"}
-APPS = ["T", "TS", "TC", "TT", "TM", "4C", "5C", "4M",
+# F4M / F3M: the motif batches through the PlanForest scheduler, with the
+# static sharing report printed (4M / TM also fuse — these codes force the
+# verbose forest path and honour --independent for A/B runs)
+APPS = ["T", "TS", "TC", "TT", "TM", "4C", "5C", "4M", "F3M", "F4M",
         *PATTERN_APPS, "FSM", "sFSM"]
 
 
-def run_app(app: str, g, support: int = 100, labels=None):
+def run_app(app: str, g, support: int = 100, labels=None,
+            fused: bool = True):
     if app == "T":
         return apps.triangle_count(g)
     if app == "TS":
@@ -35,14 +40,14 @@ def run_app(app: str, g, support: int = 100, labels=None):
         return apps.three_chain_count(g, induced=True)
     if app == "TT":
         return apps.tailed_triangle_count(g)
-    if app == "TM":
-        return apps.three_motif(g)
+    if app in ("TM", "F3M"):
+        return apps.three_motif(g, fused=fused)
     if app == "4C":
         return apps.clique_count(g, 4)
     if app == "5C":
         return apps.clique_count(g, 5)
-    if app == "4M":
-        return apps.four_motif(g)
+    if app in ("4M", "F4M"):
+        return apps.four_motif(g, fused=fused)
     if app in PATTERN_APPS:
         return apps.pattern_count(g, FOUR_MOTIFS[PATTERN_APPS[app]])
     if app in ("FSM", "sFSM"):
@@ -50,6 +55,21 @@ def run_app(app: str, g, support: int = 100, labels=None):
         res = fn(g, labels, support)
         return {"frequent_patterns": len(res)}
     raise ValueError(app)
+
+
+def _forest_report(app: str) -> str:
+    """Static sharing stats for the F3M/F4M batches."""
+    pats = FOUR_MOTIFS.values() if app == "F4M" else \
+        (apps.TRIANGLE, apps.THREE_CHAIN_INDUCED)
+    forest = build_forest([compile_pattern(p) for p in pats])
+    st = forest.sharing_stats()
+    levels = sorted({lv for _, lv in st["plan_ops"]})
+    per_level = " ".join(
+        f"L{lv}:{sum(v for (k, l), v in st['plan_ops'].items() if l == lv)}"
+        f"->{sum(v for (k, l), v in st['forest_ops'].items() if l == lv)}"
+        for lv in levels)
+    return (f"{st['plans']} plans, ops {per_level}, feed passes "
+            f"{st['feed_passes']['independent']}->{st['feed_passes']['fused']}")
 
 
 def run_baseline(app: str, g):
@@ -72,6 +92,13 @@ def main(argv=None):
     ap.add_argument("--labels", type=int, default=4)
     ap.add_argument("--baseline", action="store_true",
                     help="also run InHouseAutoMine (scalar CPU)")
+    ap.add_argument("--independent", action="store_true",
+                    help="run motif batches as independent per-pattern plans "
+                         "instead of the fused PlanForest")
+    ap.add_argument("--check", action="store_true",
+                    help="F3M/F4M: assert fused counts == independent "
+                         "per-plan counts (and == the brute-force census "
+                         "when the graph is small enough)")
     ap.add_argument("--exhaustive", default="",
                     help="also run GRAMER-style exhaustive check for PATTERN")
     ap.add_argument("--partitions", type=int, default=0,
@@ -82,10 +109,22 @@ def main(argv=None):
     print(f"[mine] {args.dataset} x{args.scale}: {dataset_stats(g)}")
     labels = random_labels(g.num_vertices, args.labels, seed=1) \
         if args.app in ("FSM", "sFSM") else None
+    if args.app in ("F3M", "F4M"):
+        print(f"[mine] forest: {_forest_report(args.app)}")
     t0 = time.time()
-    res = run_app(args.app, g, args.support, labels)
+    res = run_app(args.app, g, args.support, labels,
+                  fused=not args.independent)
     dt = time.time() - t0
     print(f"[mine] {args.app} = {res}  ({dt:.2f}s, IntersectX engine)")
+    if args.check and args.app in ("F3M", "F4M"):
+        indep = run_app(args.app, g, args.support, labels, fused=False)
+        assert res == indep, (res, indep)
+        print(f"[mine] fused == independent per-plan counts OK")
+        if args.app == "F4M" and g.num_vertices <= 256:
+            from repro.mining import reference
+            census = reference.four_motif_counts(g)
+            assert res == census, (res, census)
+            print(f"[mine] fused == brute-force census OK")
     if args.baseline and args.app in ("T", "TC", "TT", "TM", "4C", "5C"):
         t0 = time.time()
         rb = run_baseline(args.app, g)

@@ -3,6 +3,8 @@ from .apps import (
     four_motif,
     pattern_count,
     pattern_embeddings,
+    pattern_set_count,
+    pattern_set_run,
     tailed_triangle_count,
     three_chain_count,
     three_motif,
@@ -11,6 +13,7 @@ from .apps import (
     triangle_list,
 )
 from .plan import FOUR_MOTIFS, Pattern, WavePlan, compile_pattern, pattern
+from .forest import PlanForest, build_forest
 from .fsm import fsm, sfsm
 from .exhaustive import exhaustive_count
 from . import reference
@@ -18,7 +21,9 @@ from . import reference
 __all__ = [
     "triangle_count", "triangle_count_nested", "three_chain_count",
     "tailed_triangle_count", "three_motif", "clique_count", "four_motif",
-    "pattern_count", "pattern_embeddings", "triangle_list",
+    "pattern_count", "pattern_embeddings", "pattern_set_count",
+    "pattern_set_run", "triangle_list",
     "Pattern", "WavePlan", "compile_pattern", "pattern", "FOUR_MOTIFS",
+    "PlanForest", "build_forest",
     "fsm", "sfsm", "exhaustive_count", "reference",
 ]

@@ -2,10 +2,13 @@
 
 Every app is now a *declarative pattern definition* compiled by
 ``mining.plan`` and interpreted by ``mining.engine.WaveRunner.run`` — no app
-has engine code of its own. The only hand-written paths left are genuine
-closed forms (non-induced three-chain = Σ C(deg, 2)) and the host
-``triangle_list_host`` oracle the device enumeration is property-tested
-against.
+has engine code of its own. Multi-pattern apps (3-motif, 4-motif, the FSM
+feed) additionally fuse their batches through the ``mining.forest``
+scheduler (``pattern_set_count``/``pattern_set_run``): one edge-feed pass
+per orientation, shared canonical-prefix expands, bit-identical counts.
+The only hand-written paths left are genuine closed forms (non-induced
+three-chain = Σ C(deg, 2)) and the host ``triangle_list_host`` oracle the
+device enumeration is property-tested against.
 
 All counts are exact and each embedding is counted once (symmetry breaking
 via the compiled upper/lower-bound restrictions, Fig. 2b's R3 operand),
@@ -30,8 +33,9 @@ import numpy as np
 from repro.graph.csr import CSRGraph
 from .engine import Wave, WaveRunner, choose_chunk, compact, expand, \
     half_edges, pair_wave
+from .forest import PlanForest, build_forest
 from .plan import (FOUR_MOTIFS, Pattern, TAILED_TRIANGLE,
-                   THREE_CHAIN_INDUCED, TRIANGLE, TRIANGLE_NESTED,
+                   THREE_CHAIN_INDUCED, TRIANGLE, TRIANGLE_NESTED, WavePlan,
                    clique_pattern, compile_pattern)
 
 
@@ -47,6 +51,41 @@ def pattern_embeddings(g: CSRGraph, pat: Pattern, chunk: int | None = None,
     """Enumerate embeddings of ``pat`` as an (N, k) matrix (emit plan)."""
     runner = WaveRunner(g, chunk, device_compact=device_compact)
     return runner.run(compile_pattern(pat, emit=True))
+
+
+# built tries memoised on the batch's canonical plan keys: repeated calls
+# (four_motif per dataset sweep, FSM's per-level feeds) skip the merge
+_FOREST_CACHE: dict[tuple, PlanForest] = {}
+
+
+def _forest_for(plans: list[WavePlan]) -> PlanForest:
+    key = tuple(p.canonical_key() for p in plans)
+    forest = _FOREST_CACHE.get(key)
+    if forest is None:
+        forest = _FOREST_CACHE[key] = build_forest(plans)
+    return forest
+
+
+def pattern_set_run(g: CSRGraph, plans: list[WavePlan] | PlanForest,
+                    chunk: int | None = None,
+                    device_compact: bool = True) -> list:
+    """Run a *batch* of compiled plans as one fused ``PlanForest``.
+
+    The batch shares one edge-feed pass per orientation and every
+    canonical-prefix expand (``mining.forest``); results come back per plan,
+    in order — ints for counting plans, (N, k) matrices for emit plans —
+    bit-identical to running each plan through ``WaveRunner.run`` alone."""
+    forest = plans if isinstance(plans, PlanForest) else _forest_for(plans)
+    runner = WaveRunner(g, chunk, device_compact=device_compact)
+    return runner.run_set(forest)
+
+
+def pattern_set_count(g: CSRGraph, pats: list[Pattern],
+                      chunk: int | None = None,
+                      device_compact: bool = True) -> list[int]:
+    """Count several declarative ``Pattern``s in one fused forest pass."""
+    return pattern_set_run(g, [compile_pattern(p) for p in pats], chunk,
+                           device_compact)
 
 
 def triangle_count(g: CSRGraph, chunk: int | None = None,
@@ -87,10 +126,18 @@ def tailed_triangle_count(g: CSRGraph, chunk: int | None = None) -> int:
     return pattern_count(g, TAILED_TRIANGLE, chunk)
 
 
-def three_motif(g: CSRGraph) -> dict[str, int]:
-    """3-motif mining: counts of both connected 3-vertex induced motifs."""
-    t = triangle_count(g)
-    chains = three_chain_count(g, induced=True)
+def three_motif(g: CSRGraph, fused: bool = True) -> dict[str, int]:
+    """3-motif mining: counts of both connected 3-vertex induced motifs.
+
+    ``fused`` routes both patterns through one ``PlanForest``
+    (``engine.run_set``) so the batch is a single scheduler invocation;
+    ``fused=False`` keeps the independent per-plan path (the baseline the
+    forest is benchmarked and property-tested against)."""
+    if fused:
+        t, chains = pattern_set_count(g, [TRIANGLE, THREE_CHAIN_INDUCED])
+    else:
+        t = triangle_count(g)
+        chains = three_chain_count(g, induced=True)
     return {"triangle": t, "chain": chains}
 
 
@@ -106,22 +153,47 @@ def clique_count(g: CSRGraph, k: int, chunk: int | None = None,
     return pattern_count(g, clique_pattern(k), chunk, device_compact)
 
 
-def four_motif(g: CSRGraph, chunk: int | None = None) -> dict[str, int]:
+def four_motif(g: CSRGraph, chunk: int | None = None,
+               fused: bool = True) -> dict[str, int]:
     """4-motif mining: induced counts of all six connected 4-vertex motifs,
-    each from its compiled plan — zero per-pattern engine code."""
+    each from its compiled plan — zero per-pattern engine code.
+
+    Default is the fused ``PlanForest`` path: the six plans collapse to
+    three shared level-2 expands over two edge-feed passes (diamond/paw/
+    4-clique share the N(v0) ∩ N(v1) wing stream, 4-cycle/4-path share
+    N(v0) \\ N(v1); see ``mining.forest``). ``fused=False`` runs the six
+    plans independently — same counts, kept as the comparison baseline."""
+    if fused:
+        counts = pattern_set_count(g, list(FOUR_MOTIFS.values()), chunk)
+        return dict(zip(FOUR_MOTIFS, counts))
     runner = WaveRunner(g, chunk)
     return {name: runner.run(compile_pattern(p))
             for name, p in FOUR_MOTIFS.items()}
+
+
+# the FSM pattern batch: every engine-fed plan FSM's support evaluation
+# consumes, merged into one forest (a single feed pass). Today that is the
+# triangle emit plan — wedge/star/path domains are closed forms over the
+# neighbor-label count table — but additional engine-fed patterns join the
+# same batch (and share its prefixes) by appending here.
+FSM_FEED_PLANS: tuple = (compile_pattern(TRIANGLE, emit=True),)
+
+
+def fsm_pattern_feed(g: CSRGraph, chunk: int | None = None) -> list:
+    """Run the FSM engine-feed batch as one ``PlanForest`` pass; returns
+    per-plan results in ``FSM_FEED_PLANS`` order (triangle embeddings
+    first)."""
+    return pattern_set_run(g, list(FSM_FEED_PLANS), chunk)
 
 
 def triangle_list(g: CSRGraph, chunk: int | None = None) -> np.ndarray:
     """Enumerate all triangles as (T, 3) vertex triples (v0 > v1 > v2).
 
     Used by FSM (labelled support needs embeddings, not counts). Runs the
-    triangle *emit* plan: compaction happens on device via
-    ``ops.xinter_compact``'s src output, and only the compacted embedding
-    matrix crosses to the host."""
-    return pattern_embeddings(g, TRIANGLE, chunk)
+    triangle *emit* plan through the forest scheduler: compaction happens on
+    device via ``ops.xinter_compact``'s src output, and only the compacted
+    embedding matrix crosses to the host."""
+    return fsm_pattern_feed(g, chunk)[0]
 
 
 def triangle_list_host(g: CSRGraph, chunk: int | None = None) -> np.ndarray:

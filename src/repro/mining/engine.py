@@ -292,6 +292,14 @@ class WaveRunner:
       per chunk on device (synced in a deferred batch at the end of
       ``run``) — no count vectors ever cross to the host.
 
+    ``run_set(forest)`` generalises ``run`` to a ``mining.forest.PlanForest``
+    of several plans at once: one edge-feed pass per orientation, each
+    shared trie node's expand + compaction dispatched once per wave chunk
+    and fanned out to every child branch (children whose branch deferred
+    constraints into residuals first get a per-branch packed worklist, so
+    relaxation never inflates their downstream item count), with per-leaf
+    accumulators — results bit-identical to per-plan ``run`` calls.
+
     ``device_compact=False`` routes every expand through the host
     ``compact`` oracle (np.nonzero + re-upload) — the twin the fast path is
     property-tested against. ``record=True`` captures each wave's live
@@ -315,6 +323,14 @@ class WaveRunner:
         self.stats = {"exec_hits": 0, "exec_misses": 0, "host_syncs": 0,
                       "device_compactions": 0, "host_compactions": 0,
                       "items": 0}
+        # per-(kind, level) executable dispatch counts — the fusion metric:
+        # a PlanForest run dispatches each shared level once where the
+        # independent-plan path dispatches it once per pattern.
+        self.level_execs: dict[tuple[str, int], int] = {}
+
+    def _bump(self, op: LevelOp) -> None:
+        key = (op.kind, op.level)
+        self.level_execs[key] = self.level_execs.get(key, 0) + 1
 
     # ------------------------------------------------------------------ cache
     def _executable(self, key: tuple, build: Callable) -> Callable:
@@ -368,8 +384,13 @@ class WaveRunner:
 
     @staticmethod
     def _fused_shape(op: LevelOp) -> str | None:
-        """'inter'/'sub' when one fused bounded kernel covers the level."""
-        if op.lb or op.exclude:
+        """'inter'/'sub' when one fused bounded kernel covers the level.
+
+        Lower bounds ride the kernels' lbounds operand (whole-tile skipping,
+        like the R3 upper bound); residuals and the live mask fold into the
+        per-row bound (bound 0 = dead row). Only per-element injectivity
+        (``exclude``) still needs the general mark composition."""
+        if op.exclude:
             return None
         if len(op.inter) == 1 and not op.sub:
             return "inter"
@@ -402,6 +423,9 @@ class WaveRunner:
                 keep = keep & (base > lb[:, None])
             for e in op.exclude:
                 keep = keep & (base != get[e][:, None])
+            for kind, i, j in op.residual:
+                ok = (get[i] < get[j]) if kind == "lt" else (get[i] != get[j])
+                keep = keep & ok[:, None]
             live = jnp.arange(base.shape[0], dtype=jnp.int32) < n
             return keep & live[:, None]
         return keep_of
@@ -412,6 +436,28 @@ class WaveRunner:
         for u in op.ub[1:]:
             ub = jnp.minimum(ub, get[u])
         return ub
+
+    @staticmethod
+    def _max_lb(op: LevelOp, get):
+        lb = get[op.lb[0]]
+        for w in op.lb[1:]:
+            lb = jnp.maximum(lb, get[w])
+        return lb
+
+    def _ub_vec(self, op: LevelOp, get, n, nrows: int):
+        """Per-row effective upper bound for the fused kernels: min over the
+        ``ub`` columns (SENTINEL when unbounded), then zeroed for padding
+        rows and residual-failing items — bound 0 kills the whole row inside
+        the tile schedule, so deferred constraints cost no B-tile DMA."""
+        if op.ub:
+            ub = self._min_ub(op, get)
+        else:
+            ub = jnp.full((nrows,), SENTINEL, jnp.int32)
+        ok = jnp.arange(nrows, dtype=jnp.int32) < n
+        for kind, i, j in op.residual:
+            ok = ok & ((get[i] < get[j]) if kind == "lt"
+                       else (get[i] != get[j]))
+        return jnp.where(ok, ub, 0)
 
     def _plan_count_fn(self, op: LevelOp, caps_sig: tuple, cap_base: int):
         """Terminal count level -> one tiny device sync per chunk.
@@ -437,13 +483,12 @@ class WaveRunner:
                 base = carry if op.use_carry else \
                     padded_rows(g, get[op.base], caps[op.base])[0]
                 if fused:
-                    ub = self._min_ub(op, get) if op.ub else None
+                    ub = self._ub_vec(op, get, n, base.shape[0])
+                    lb = self._max_lb(op, get) if op.lb else None
                     ref = op.inter[0] if fused == "inter" else op.sub[0]
                     nbr, _ = padded_rows(g, get[ref], caps[ref])
                     cfun = xinter_count if fused == "inter" else xsub_count
-                    counts = cfun(base, nbr, ub, backend=backend)
-                    live = jnp.arange(base.shape[0], dtype=jnp.int32) < n
-                    counts = jnp.where(live, counts, 0)
+                    counts = cfun(base, nbr, ub, backend=backend, lbounds=lb)
                 else:
                     counts = jnp.sum(keep_of(g, base, get, n), axis=1,
                                      dtype=jnp.int32)
@@ -460,25 +505,28 @@ class WaveRunner:
                        out_items: int):
         """Traced core shared by expand/emit: survivors -> compacted items.
 
-        Fast path: a single bounded INTER/SUB level is one fused
-        ``xinter_compact``/``xsub_compact`` dispatch (requires ``ub`` so the
-        bound-0 padding convention kills dead rows inside the kernel);
-        otherwise the general mark composition feeds the same masked-sort +
+        Fast path: a single INTER/SUB level is one fused
+        ``xinter_compact``/``xsub_compact`` dispatch — the per-row bound
+        vector (``_ub_vec``) folds the declared upper bounds, the live mask
+        and any forest residuals into the bound operand (bound 0 kills dead
+        rows inside the kernel), and lower bounds ride ``lbounds``; otherwise
+        the general mark composition feeds the same masked-sort +
         ``batch_compact_items`` epilogue.
         """
         backend = self.backend
-        fused = self._fused_shape(op) if op.ub else None
+        fused = self._fused_shape(op)
         keep_of = self._mask_ops(op, caps)
 
         def core(g, get, base, n):
             if fused:
-                ub = self._min_ub(op, get)
+                ub = self._ub_vec(op, get, n, base.shape[0])
+                lb = self._max_lb(op, get) if op.lb else None
                 ref = op.inter[0] if fused == "inter" else op.sub[0]
                 nbr, _ = padded_rows(g, get[ref], caps[ref])
                 cfun = xinter_compact if fused == "inter" else xsub_compact
                 rows2, _, src, verts, total, maxc = cfun(
                     base, nbr, ub, out_cap=out_cap, out_items=out_items,
-                    backend=backend)
+                    backend=backend, lbounds=lb)
             else:
                 keep = keep_of(g, base, get, n)
                 masked = jnp.where(keep, base, SENTINEL)
@@ -601,13 +649,27 @@ class WaveRunner:
             return np.stack([np.asarray(cols2[c]) for c in out_cols], axis=1)
         return vch
 
+    def _finalize(self, plan: WavePlan, parts: list):
+        """Reduce one plan's accumulated chunk outputs to its result."""
+        if plan.ops[-1].kind == "emit":
+            if not parts:
+                return np.zeros((0, plan.k), dtype=np.int32)
+            return np.concatenate(parts, axis=0).astype(np.int32)
+        total = 0
+        for p in parts:                     # (hi, lo) int32 pairs, exact
+            hi, lo = (int(x) for x in np.asarray(p))
+            total += (hi << 16) + lo
+        if plan.div > 1:
+            assert total % plan.div == 0, (plan.pattern.name, total, plan.div)
+            total //= plan.div
+        return total
+
     def run(self, plan: WavePlan):
         """Execute a compiled ``WavePlan``.
 
         Counting plans return a Python int (divided by ``plan.div``); emit
         plans return the (N, k) int32 embedding matrix in matching order.
         """
-        emitting = plan.ops[-1].kind == "emit"
         op0 = plan.ops[0]
         outs: list = []
         for cap0, dv0, dv1, v1h, n in self._edge_feed(plan.symmetric):
@@ -619,18 +681,112 @@ class WaveRunner:
             outs += self._plan_descend(plan, 0, {0: dv0, 1: dv1}, caps,
                                        None, n)
         self.stats["host_syncs"] += len(outs)
-        if emitting:
-            if not outs:
-                return np.zeros((0, plan.k), dtype=np.int32)
-            return np.concatenate(outs, axis=0).astype(np.int32)
-        total = 0
-        for p in outs:                      # (hi, lo) int32 pairs, exact
-            hi, lo = (int(x) for x in np.asarray(p))
-            total += (hi << 16) + lo
-        if plan.div > 1:
-            assert total % plan.div == 0, (plan.pattern.name, total, plan.div)
-            total //= plan.div
-        return total
+        return self._finalize(plan, outs)
+
+    def run_set(self, forest):
+        """Execute a ``mining.forest.PlanForest``: each feed orientation is
+        materialised and iterated ONCE, every trie root consumes the same
+        device-resident edge chunks, and shared interior nodes run their
+        expand + compaction a single time before fanning out to all child
+        branches. Per-leaf accumulators collect (hi, lo) count partials /
+        embedding blocks per source plan.
+
+        Returns a list of per-plan results in ``forest.plans`` order (ints
+        for counting plans, (N, k) int32 matrices for emit plans) —
+        bit-identical to running each plan through ``run`` independently.
+        """
+        acc: list[list] = [[] for _ in forest.plans]
+        for symmetric, roots in ((True, forest.symmetric_roots),
+                                 (False, forest.directed_roots)):
+            if not roots:
+                continue
+            need1 = any(1 in r.op.row_refs() for r in roots)
+            for cap0, dv0, dv1, v1h, n in self._edge_feed(symmetric):
+                caps = {0: cap0}
+                if need1:
+                    caps[1] = _neighbor_cap(self.g, v1h)
+                if self.record:
+                    self._record(1, self._rows_fn(cap0)(self.g, dv0), dv1, n)
+                for root in roots:
+                    self._forest_descend(root, {0: dv0, 1: dv1}, caps,
+                                         None, n, acc)
+        self.stats["host_syncs"] += sum(len(a) for a in acc)
+        return [self._finalize(plan, parts)
+                for plan, parts in zip(forest.plans, acc)]
+
+    def _forest_descend(self, node, cols: dict, caps: dict, carry, n: int,
+                        acc: list) -> None:
+        """Execute one forest node on a wave chunk; fan out over children.
+
+        Identical per-op machinery to ``_plan_descend`` — same cached
+        executables, same compaction — except an expand's chunk loop feeds
+        *every* child branch instead of a single successor op, and terminal
+        nodes append their partials to each owning plan's accumulator."""
+        op = node.op
+        caps_sig = tuple(sorted((c, caps[c]) for c in op.row_refs()))
+        cap_base = int(carry.shape[1]) if op.use_carry else caps[op.base]
+        vals = tuple(cols[c] for c in self._in_cols(op))
+        carry_in = carry if op.use_carry else np.int32(0)
+        if op.kind == "count":
+            self._bump(op)
+            fn = self._plan_count_fn(op, caps_sig, cap_base)
+            part = fn(self.g, vals, carry_in, n)
+            for i in node.plans:
+                acc[i].append(part)
+            return
+        b = int(carry.shape[0]) if op.use_carry else int(cols[op.base].shape[0])
+        out_cap = min([cap_base] + [caps[j] for j in op.inter])
+        out_items = -(-b * out_cap // self.chunk) * self.chunk
+        if op.kind == "emit":
+            parts = self._plan_emit(op, caps_sig, cap_base, out_cap,
+                                    out_items, cols, vals, carry_in, n)
+            for i in node.plans:
+                acc[i].extend(parts)
+            return
+        if not self.device_compact:
+            chunks = self._expand_chunks_host(op, caps_sig, cap_base,
+                                              out_cap, cols, vals, carry_in,
+                                              n)
+            for cols2, caps2, carry2, vch, m in chunks:
+                self._record(op.level + 1,
+                             self._wave_repr(cols2, op.out_cols, carry2, vch),
+                             vch, m)
+                for child in node.children:
+                    self._forest_descend(child, cols2, caps2, carry2, m, acc)
+            return
+        exp = self._expand_device(op, caps_sig, cap_base, out_cap, out_items,
+                                  vals, carry_in, n)
+        if exp is None:
+            return
+        rows2, src, verts2, total, caps2, cap2 = exp
+        # children that kept every constraint of the shared node consume the
+        # compacted worklist as-is (one chunk stream for all of them);
+        # children whose branch deferred constraints into residuals get a
+        # per-branch packed worklist first, so relaxation never inflates a
+        # branch's downstream item count past its independent plan's.
+        feeds: list[tuple[list, object, object, int]] = []
+        shared = [ch for ch in node.children if not ch.op.residual]
+        if shared:
+            feeds.append((shared, src, verts2, total))
+        for ch in node.children:
+            if not ch.op.residual:
+                continue
+            pfn, refs = self._residual_pack_fn(op.level, ch.op.residual,
+                                               int(src.shape[0]))
+            rvals = tuple(cols[c] for c in refs)
+            src_b, verts_b, tot_b = pfn(rvals, src, verts2, total)
+            tot_b = int(tot_b)
+            self.stats["host_syncs"] += 1
+            if tot_b:
+                feeds.append(([ch], src_b, verts_b, tot_b))
+        for children, s, v, t in feeds:
+            for cols2, carry2, vch, m in self._expand_chunks(
+                    op, b, out_cap, cap2, rows2, s, v, cols, t):
+                self._record(op.level + 1,
+                             self._wave_repr(cols2, op.out_cols, carry2, vch),
+                             vch, m)
+                for child in children:
+                    self._forest_descend(child, cols2, caps2, carry2, m, acc)
 
     def _plan_descend(self, plan: WavePlan, oi: int, cols: dict, caps: dict,
                       carry, n: int) -> list:
@@ -641,6 +797,7 @@ class WaveRunner:
         vals = tuple(cols[c] for c in self._in_cols(op))
         carry_in = carry if op.use_carry else np.int32(0)
         if op.kind == "count":
+            self._bump(op)
             fn = self._plan_count_fn(op, caps_sig, cap_base)
             return [fn(self.g, vals, carry_in, n)]
         b = int(carry.shape[0]) if op.use_carry else int(cols[op.base].shape[0])
@@ -649,15 +806,26 @@ class WaveRunner:
         if op.kind == "emit":
             return self._plan_emit(op, caps_sig, cap_base, out_cap,
                                    out_items, cols, vals, carry_in, n)
+        nxt = plan.ops[oi + 1]
         if self.device_compact:
-            return self._plan_expand_device(plan, oi, caps_sig, cap_base,
-                                            out_cap, out_items, b, cols,
-                                            vals, carry_in, n)
-        return self._plan_expand_host(plan, oi, caps_sig, cap_base, out_cap,
-                                      cols, vals, carry_in, n)
+            chunks = self._expand_chunks_device(op, caps_sig, cap_base,
+                                                out_cap, out_items, b, cols,
+                                                vals, carry_in, n)
+        else:
+            chunks = self._expand_chunks_host(op, caps_sig, cap_base,
+                                              out_cap, cols, vals, carry_in,
+                                              n)
+        parts: list = []
+        for cols2, caps2, carry2, vch, m in chunks:
+            self._record(nxt.level,
+                         self._wave_repr(cols2, op.out_cols, carry2, vch),
+                         vch, m)
+            parts += self._plan_descend(plan, oi + 1, cols2, caps2, carry2, m)
+        return parts
 
     def _plan_emit(self, op, caps_sig, cap_base, out_cap, out_items, cols,
                    vals, carry_in, n) -> list:
+        self._bump(op)
         if self.device_compact:
             fn = self._plan_emit_fn(op, caps_sig, cap_base, out_cap,
                                     out_items)
@@ -680,9 +848,11 @@ class WaveRunner:
                     for c in op.out_cols]
         return [np.stack(cols_out, axis=1)]
 
-    def _plan_expand_device(self, plan, oi, caps_sig, cap_base, out_cap,
-                            out_items, b, cols, vals, carry_in, n) -> list:
-        op, nxt = plan.ops[oi], plan.ops[oi + 1]
+    def _expand_device(self, op, caps_sig, cap_base, out_cap, out_items,
+                       vals, carry_in, n):
+        """Run one expand executable + meta sync. Returns ``None`` when no
+        survivors, else (rows2, src, verts2, total, caps2, cap2)."""
+        self._bump(op)
         fn = self._plan_expand_fn(op, caps_sig, cap_base, out_cap, out_items)
         rows2, src, verts2, meta = fn(self.g, vals, carry_in, n)
         meta = [int(x) for x in np.asarray(meta)]
@@ -691,13 +861,18 @@ class WaveRunner:
         self.stats["device_compactions"] += 1
         self.stats["items"] += total
         if total == 0:
-            return []
+            return None
         caps2 = {c: _pow2cap(max(d, 1))
                  for c, d in zip(op.gather_refs, dmaxs)}
         cap2 = round_capacity(maxc) if op.carry_out else 0
+        return rows2, src, verts2, total, caps2, cap2
+
+    def _expand_chunks(self, op, b, out_cap, cap2, rows2, src, verts2, cols,
+                       total):
+        """Slice a compacted (src, verts) worklist into next-level device
+        chunks; yields (cols2, carry2, vch, m)."""
         cfn = self._plan_chunk_fn(op, b, out_cap, cap2, self.chunk)
         fwdvals = tuple(cols[c] for c in op.out_cols if c < op.level)
-        parts: list = []
         for lo in range(0, total, self.chunk):
             m = min(self.chunk, total - lo)
             if op.carry_out:
@@ -708,16 +883,58 @@ class WaveRunner:
             cols2 = dict(zip([c for c in op.out_cols if c < op.level], outs))
             if op.level in op.out_cols:
                 cols2[op.level] = vch
-            self._record(nxt.level,
-                         self._wave_repr(cols2, op.out_cols, carry2, vch),
-                         vch, m)
-            parts += self._plan_descend(plan, oi + 1, cols2, caps2, carry2, m)
-        return parts
+            yield cols2, carry2, vch, m
 
-    def _plan_expand_host(self, plan, oi, caps_sig, cap_base, out_cap, cols,
-                          vals, carry_in, n) -> list:
-        """Oracle twin: same masks, np.nonzero compaction + re-upload."""
-        op, nxt = plan.ops[oi], plan.ops[oi + 1]
+    def _expand_chunks_device(self, op, caps_sig, cap_base, out_cap,
+                              out_items, b, cols, vals, carry_in, n):
+        """Run one expand level on device; yield the next wave's chunks as
+        (cols2, caps2, carry2, vch, m). Shared by the single-plan descent and
+        the forest fan-out (one expand feeding k child levels)."""
+        exp = self._expand_device(op, caps_sig, cap_base, out_cap, out_items,
+                                  vals, carry_in, n)
+        if exp is None:
+            return
+        rows2, src, verts2, total, caps2, cap2 = exp
+        for cols2, carry2, vch, m in self._expand_chunks(
+                op, b, out_cap, cap2, rows2, src, verts2, cols, total):
+            yield cols2, caps2, carry2, vch, m
+
+    def _residual_pack_fn(self, level: int, residual: tuple, out_items: int):
+        """Per-branch worklist pack: drop items failing a child branch's
+        residuals *before* chunking, so a branch that shared a relaxed
+        ancestor processes exactly the items its independent plan would
+        (order-preserving masked sort — the ``batch_compact_items`` trick on
+        item indices). Returns (packing fn, value columns it consumes)."""
+        refs = tuple(sorted({c for _, i, j in residual for c in (i, j)
+                             if c < level}))
+
+        def build():
+            @jax.jit
+            def fn(rvals, src, verts, total):
+                get = dict(zip(refs, rvals))
+
+                def val(c):
+                    return verts if c == level else get[c][src]
+                idx = jnp.arange(out_items, dtype=jnp.int32)
+                ok = idx < total
+                for kind, i, j in residual:
+                    ok = ok & ((val(i) < val(j)) if kind == "lt"
+                               else (val(i) != val(j)))
+                order = jnp.sort(jnp.where(ok, idx, SENTINEL))
+                tot = jnp.sum(ok, dtype=jnp.int32)
+                live = idx < tot
+                safe = jnp.where(live, order, 0)
+                return src[safe], \
+                    jnp.where(live, verts[safe], 0).astype(jnp.int32), tot
+            return fn
+        return self._executable(("rpack", level, residual, out_items),
+                                build), refs
+
+    def _expand_chunks_host(self, op, caps_sig, cap_base, out_cap, cols,
+                            vals, carry_in, n):
+        """Oracle twin of ``_expand_chunks_device``: same masks, np.nonzero
+        compaction + re-upload; same (cols2, caps2, carry2, vch, m) yield."""
+        self._bump(op)
         hfn = self._plan_expand_host_fn(op, caps_sig, cap_base, out_cap)
         rows2, counts2 = hfn(self.g, vals, carry_in, n)
         wave, ii = compact(np.asarray(rows2), np.asarray(counts2),
@@ -725,7 +942,7 @@ class WaveRunner:
         self.stats["host_syncs"] += 1
         self.stats["host_compactions"] += 1
         if wave is None:
-            return []
+            return
         total = len(wave)
         self.stats["items"] += total
         fwd = [c for c in op.out_cols if c < op.level]
@@ -733,7 +950,6 @@ class WaveRunner:
         caps2 = {c: _neighbor_cap(self.g, wave.verts if c == op.level
                                   else hostcols[c])
                  for c in op.gather_refs}
-        parts: list = []
         for lo in range(0, total, self.chunk):
             m = min(self.chunk, total - lo)
             sl = slice(lo, lo + self.chunk)
@@ -746,11 +962,7 @@ class WaveRunner:
             if op.carry_out:
                 carry2 = jnp.asarray(
                     _pad_to(wave.rows[sl], self.chunk, SENTINEL))
-            self._record(nxt.level,
-                         self._wave_repr(cols2, op.out_cols, carry2, vch),
-                         vch, m)
-            parts += self._plan_descend(plan, oi + 1, cols2, caps2, carry2, m)
-        return parts
+            yield cols2, caps2, carry2, vch, m
 
     # ----------------------------------------------- plan wrappers (compat)
     def count_edges(self, symmetric: bool = True, bounded: bool = True) -> int:

@@ -1,0 +1,233 @@
+"""Plan-forest scheduler: fuse a *set* of compiled plans into one
+shared-prefix stream program.
+
+Motif workloads (3-motif, 4-motif, FSM) run several patterns over the same
+graph. Executed independently, each ``WavePlan`` re-materialises the level-1
+edge feed and re-runs every interior expand even when another pattern in the
+batch performs identical work — 4-motif's diamond, paw and 4-clique all
+start from the N(v0) ∩ N(v1) wing stream. This module merges the batch into
+a ``PlanForest``: a prefix trie whose shared interior nodes run ONCE per
+wave chunk and fan out to per-pattern suffix branches, with per-leaf
+count/emit accumulators (AutoMine's multi-pattern schedule reuse and
+TrieJax's shared-prefix join tries, restated on the §IV-F plan IR;
+interpreted by ``engine.WaveRunner.run_set``).
+
+Canonical-prefix rules
+----------------------
+
+Plans are grouped by feed orientation first (``WavePlan.symmetric``: the
+half-edge v1 < v0 feed vs the directed feed) — a forest has at most one
+root set per orientation and each feed is materialised and iterated once.
+Column names need no renumbering: every compiled plan matches vertices in
+schedule order, so prefix column ``j`` means "the vertex matched at level
+``j``" in every plan and ``LevelOp`` references are directly comparable.
+
+Two expand ops can share a node iff their **stream keys** agree —
+``(level, use_carry, base, inter, sub)``, the fields that define which
+survivor *elements* the level materialises. Bound and injectivity fields
+(``ub``/``lb``/``exclude``) do NOT need to agree: the shared node is
+**relaxed** to the intersection of the branches' constraint sets, and each
+branch's surplus is pushed one level down:
+
+* as a **residual** on the branch's next op — a per-item constraint
+  (``('lt', i, j)`` ≡ v_i < v_j, ``('ne', i, j)`` ≡ v_i != v_j) that the
+  engine folds into the per-row bound operand (bound 0 ⇒ the kernels' tile
+  schedule skips the whole row), and
+* when the branch's next op **carries** the shared survivor stream, the
+  surplus ``ub``/``lb``/``exclude`` are additionally re-added to that op's
+  own element constraints, restoring exactly the filter the relaxation
+  dropped from the carried elements.
+
+Terminal (count/emit) ops are never relaxed — they ARE the per-pattern
+semantics — and merge only when identical, in which case the count runs
+once and is credited to every owning plan. Residual sets shared by every
+branch of a node are applied at the node; disagreeing residuals defer
+further down. Relaxation therefore never changes any leaf's result, only
+*where* constraints are enforced — ``run_set`` output is bit-identical to
+running each plan independently (property-tested in tests/test_forest.py).
+
+Trie interpretation contract (``WaveRunner.run_set``)
+-----------------------------------------------------
+
+* liveness is recomputed across branches: an interior node's ``out_cols`` /
+  ``gather_refs`` are the union of its subtree's value/row references (so
+  residual columns are forwarded), and ``carry_out`` is the OR over children
+  — non-carrying children simply ignore the carry;
+* every node is executed through the same cached executables as the
+  single-plan path (``LevelOp`` hashes by value, residuals included), so a
+  forest node and an identical single-plan level share compiled traces;
+* each expand node runs its gather + masks + on-device compaction once per
+  wave chunk and feeds the resulting (cols2, caps2, carry2) to every child;
+* leaf partials — (hi, lo) int32 count pairs or embedding blocks — are
+  appended to per-plan accumulators and finalised per plan (division by
+  ``Pattern.div``, emit concatenation) exactly as ``run`` does.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter
+from typing import Sequence
+
+from .plan import LevelOp, WavePlan
+
+__all__ = ["ForestNode", "PlanForest", "build_forest"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ForestNode:
+    """One trie node: an expand interior (``children``) or a count/emit leaf
+    (``plans`` = indices of the source plans credited with its output)."""
+
+    op: LevelOp
+    children: tuple["ForestNode", ...] = ()
+    plans: tuple[int, ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanForest:
+    """A merged pattern batch: per-feed root sets over ``plans``."""
+
+    plans: tuple[WavePlan, ...]
+    symmetric_roots: tuple[ForestNode, ...]
+    directed_roots: tuple[ForestNode, ...]
+
+    def all_roots(self) -> tuple[ForestNode, ...]:
+        return self.symmetric_roots + self.directed_roots
+
+    def sharing_stats(self) -> dict:
+        """Static fusion report: per-(kind, level) op counts, plans vs trie.
+
+        ``feed_passes`` counts level-1 edge-feed traversals: one per plan
+        when run independently, one per used orientation when fused."""
+        plan_ops: Counter = Counter()
+        for p in self.plans:
+            for op in p.ops:
+                plan_ops[(op.kind, op.level)] += 1
+        forest_ops: Counter = Counter()
+
+        def walk(node: ForestNode) -> None:
+            forest_ops[(node.op.kind, node.op.level)] += 1
+            for ch in node.children:
+                walk(ch)
+
+        for root in self.all_roots():
+            walk(root)
+        feeds = int(bool(self.symmetric_roots)) + int(bool(self.directed_roots))
+        return {
+            "plans": len(self.plans),
+            "plan_ops": dict(plan_ops),
+            "forest_ops": dict(forest_ops),
+            "ops_saved": sum(plan_ops.values()) - sum(forest_ops.values()),
+            "feed_passes": {"independent": len(self.plans), "fused": feeds},
+        }
+
+
+# ---------------------------------------------------------------------------
+# the merge
+# ---------------------------------------------------------------------------
+
+
+def _merge(branches: list[tuple[int, list[LevelOp]]]) -> tuple[ForestNode, ...]:
+    """Merge one trie level. ``branches`` = (plan index, remaining ops) with
+    any constraints deferred from relaxed ancestors already folded into
+    ``ops[0]``. Deterministic: groups keep first-seen plan order."""
+    nodes: list[ForestNode] = []
+    leaves: dict[LevelOp, list[int]] = {}
+    groups: dict[tuple, list[tuple[int, list[LevelOp]]]] = {}
+    for idx, ops in branches:
+        if ops[0].kind == "expand":
+            groups.setdefault(ops[0].stream_key(), []).append((idx, ops))
+        else:
+            leaves.setdefault(ops[0], []).append(idx)
+    for op, idxs in leaves.items():
+        nodes.append(ForestNode(op=op, plans=tuple(idxs)))
+    for group in groups.values():
+        relaxed, sub = _relax(group)
+        children = _merge(sub)
+        nodes.append(_with_liveness(relaxed, children))
+    return tuple(nodes)
+
+
+def _relax(group: list[tuple[int, list[LevelOp]]]):
+    """Relax a stream-key group to its shared constraint intersection; push
+    each branch's surplus down as residuals (+ re-added element constraints
+    when the branch's next op carries the shared stream)."""
+    ops0 = [ops[0] for _, ops in group]
+    sh_ub = set.intersection(*[set(o.ub) for o in ops0])
+    sh_lb = set.intersection(*[set(o.lb) for o in ops0])
+    sh_ex = set.intersection(*[set(o.exclude) for o in ops0])
+    sh_res = set.intersection(*[set(o.residual) for o in ops0])
+    relaxed = dataclasses.replace(
+        ops0[0], ub=tuple(sorted(sh_ub)), lb=tuple(sorted(sh_lb)),
+        exclude=tuple(sorted(sh_ex)), residual=tuple(sorted(sh_res)))
+    sub: list[tuple[int, list[LevelOp]]] = []
+    for idx, ops in group:
+        op0, nxt = ops[0], ops[1]
+        s_ub = set(op0.ub) - sh_ub
+        s_lb = set(op0.lb) - sh_lb
+        s_ex = set(op0.exclude) - sh_ex
+        res = set(nxt.residual) | (set(op0.residual) - sh_res) \
+            | {("lt", op0.level, u) for u in s_ub} \
+            | {("lt", w, op0.level) for w in s_lb} \
+            | {("ne", op0.level, e) for e in s_ex}
+        if nxt.use_carry and (s_ub or s_lb or s_ex):
+            # the carried elements lost the surplus filters with the
+            # relaxation: restore them on the consuming op
+            nxt = dataclasses.replace(
+                nxt, ub=tuple(sorted(set(nxt.ub) | s_ub)),
+                lb=tuple(sorted(set(nxt.lb) | s_lb)),
+                exclude=tuple(sorted(set(nxt.exclude) | s_ex)))
+        nxt = dataclasses.replace(nxt, residual=tuple(sorted(res)))
+        sub.append((idx, [nxt] + ops[2:]))
+    return relaxed, sub
+
+
+def _subtree_refs(node: ForestNode) -> tuple[set[int], set[int]]:
+    """(value refs, row refs) of a subtree — the liveness a parent must
+    forward. Emit leaves additionally consume their output columns."""
+    vals = set(node.op.val_refs())
+    rows = set(node.op.row_refs())
+    if node.op.kind == "emit":
+        vals |= set(node.op.out_cols)
+    for ch in node.children:
+        v, r = _subtree_refs(ch)
+        vals |= v
+        rows |= r
+    return vals, rows
+
+
+def _with_liveness(op: LevelOp, children: tuple[ForestNode, ...]) -> ForestNode:
+    """Interior-node liveness = union over the child subtrees (residual
+    columns included via ``val_refs``); carry is produced iff any child
+    consumes it."""
+    vals: set[int] = set()
+    rows: set[int] = set()
+    for ch in children:
+        v, r = _subtree_refs(ch)
+        vals |= v
+        rows |= r
+    return ForestNode(
+        op=dataclasses.replace(
+            op,
+            out_cols=tuple(sorted(c for c in vals if c <= op.level)),
+            gather_refs=tuple(sorted(c for c in rows if c <= op.level)),
+            carry_out=any(ch.op.use_carry for ch in children)),
+        children=children)
+
+
+def build_forest(plans: Sequence[WavePlan]) -> PlanForest:
+    """Merge compiled plans into a ``PlanForest``.
+
+    Plans appear in the result exactly in input order (``run_set`` returns
+    per-plan results positionally). The merge is structural — stream-key
+    grouping for expands, full-op equality for leaves — so duplicate plans
+    (equal ``WavePlan.canonical_key()``) collapse onto fully shared paths,
+    down to one shared leaf credited to both."""
+    plans = tuple(plans)
+    if not plans:
+        raise ValueError("build_forest needs at least one plan")
+    sym = [(i, list(p.ops)) for i, p in enumerate(plans) if p.symmetric]
+    dirc = [(i, list(p.ops)) for i, p in enumerate(plans) if not p.symmetric]
+    return PlanForest(plans=plans,
+                      symmetric_roots=_merge(sym) if sym else (),
+                      directed_roots=_merge(dirc) if dirc else ())

@@ -15,12 +15,16 @@ Downward closure prunes candidates: a k-edge candidate is evaluated only if
 all its (k-1)-edge sub-patterns were frequent.
 
 Engineering: domains are boolean masks over V computed vectorised from
-neighbor-label count tables; triangles come from the wavefront engine's
-``triangle_list`` — the compiled triangle *emit* plan, whose worklists are
-compacted on device (``ops.xinter_compact`` src output) so the embedding
-feed never round-trips through host ``np.nonzero``; only path-4 domains use
-a per-edge host loop (FSM support calculation is host-dominated — the
-paper's own observation for why FSM sees the smallest speedup, Fig. 9).
+neighbor-label count tables; embeddings come from the wavefront engine's
+FSM pattern batch (``apps.fsm_pattern_feed``) — the engine-fed plans merged
+into one ``PlanForest`` and executed in a single feed pass. Today the batch
+is the compiled triangle *emit* plan, whose worklists are compacted on
+device (``ops.xinter_compact`` src output) so the embedding feed never
+round-trips through host ``np.nonzero``; further engine-fed patterns join
+the batch (and share its canonical prefixes) via ``apps.FSM_FEED_PLANS``.
+Only path-4 domains use a per-edge host loop (FSM support calculation is
+host-dominated — the paper's own observation for why FSM sees the smallest
+speedup, Fig. 9).
 """
 from __future__ import annotations
 
@@ -30,7 +34,7 @@ from collections import defaultdict
 import numpy as np
 
 from repro.graph.csr import CSRGraph
-from .apps import triangle_list
+from .apps import fsm_pattern_feed
 
 # ---------------------------------------------------------------------------
 # canonical pattern keys
@@ -267,7 +271,7 @@ def _mine(g: CSRGraph, labels: np.ndarray, min_support: int, max_edges: int,
         return results
 
     # --- level 3 ---
-    tris = triangle_list(g)
+    tris = fsm_pattern_feed(g)[0]          # forest-scheduled triangle emit
     # triangles: all 3 edges + all 3 wedges frequent
     for la, lb, lc in itertools.combinations_with_replacement(ls, 3):
         edges_ok = all(edge_key(x, y) in freq_edges

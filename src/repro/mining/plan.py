@@ -141,6 +141,15 @@ class LevelOp:
     out_cols: tuple[int, ...]     # prefix columns forwarded to deeper levels
     gather_refs: tuple[int, ...]  # columns deeper levels gather rows for
     carry_out: bool               # next level starts from our survivors
+    # deferred per-item constraints, installed by the forest scheduler when a
+    # shared ancestor was *relaxed* (its bound/injectivity surplus dropped so
+    # several patterns could share one expand). Entries ('lt', i, j) ≡ require
+    # v_i < v_j, ('ne', i, j) ≡ require v_i != v_j; i, j < level. An item
+    # failing a residual contributes nothing: the engine folds residuals into
+    # the per-row bound operand (bound := 0), so whole rows die inside the
+    # kernels' tile schedule. compile_pattern never emits residuals — a
+    # single-plan LevelOp always has residual == ().
+    residual: tuple[tuple[str, int, int], ...] = ()
 
     def row_refs(self) -> tuple[int, ...]:
         """Columns whose neighbor rows this op gathers."""
@@ -153,7 +162,25 @@ class LevelOp:
             | set(self.exclude)
         if self.tail is not None:
             refs.add(self.tail[0])
+        for _, i, j in self.residual:
+            refs.add(i)
+            refs.add(j)
         return tuple(sorted(refs))
+
+    def stream_key(self) -> tuple:
+        """What defines the *survivor stream* (not which items stay live):
+        ops with equal stream keys materialise element-identical streams and
+        can share one expand + compaction in a ``PlanForest``."""
+        return (self.level, self.use_carry, self.base, self.inter, self.sub)
+
+    def semantic_key(self) -> tuple:
+        """Canonical form: every field with count/stream semantics, none of
+        the liveness bookkeeping (``out_cols``/``gather_refs``/``carry_out``
+        are schedule-dependent and recomputed by the forest builder). Two ops
+        with equal semantic keys are interchangeable work."""
+        return (self.level, self.use_carry, self.base, self.inter, self.sub,
+                self.ub, self.lb, self.exclude, self.kind, self.tail,
+                tuple(sorted(self.residual)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -168,6 +195,16 @@ class WavePlan:
     @property
     def k(self) -> int:
         return self.pattern.k
+
+    def canonical_key(self) -> tuple:
+        """Stable plan hash: feed orientation + per-level semantic keys +
+        retire division. Plans with equal canonical keys perform identical
+        work item-for-item (whatever their ``Pattern`` was named) —
+        ``apps.pattern_set_run`` memoises built ``PlanForest``s on the batch
+        of these keys, and inside a forest such plans collapse onto fully
+        shared paths."""
+        return (self.symmetric, tuple(op.semantic_key() for op in self.ops),
+                self.div)
 
 
 # ---------------------------------------------------------------------------
@@ -336,19 +373,27 @@ TAILED_TRIANGLE = pattern("tailed-triangle", 4,
                           [(0, 1), (0, 2), (1, 2), (1, 3)],
                           restrictions=[(2, 0)])
 
-# induced paw — the 4-motif variant of TT (tail vertex adjacent to v1 only)
-PAW_INDUCED = pattern("paw", 4, [(0, 1), (0, 2), (1, 2), (1, 3)],
-                      restrictions=[(2, 0)], induced=True)
+# induced paw — the 4-motif variant of TT, scheduled *wings-first*: v0, v1
+# are the triangle's interchangeable wing vertices (broken v1 < v0), v2 the
+# center, v3 the tail hanging off the center. Matching the wings' edge first
+# puts the paw on the half-edge feed with the same level-2 stream as the
+# diamond's (v2 ∈ N(v0) ∩ N(v1), unbounded) — AutoMine-style multi-pattern
+# schedule choice so the forest scheduler shares that expand.
+PAW_INDUCED = pattern("paw", 4, [(0, 1), (0, 2), (1, 2), (2, 3)],
+                      restrictions=[(1, 0)], induced=True)
 
 # diamond: two triangles sharing edge (0,1); wings 2,3 non-adjacent.
 # Aut = {swap 0,1} x {swap 2,3}, broken by v1 < v0 and v3 < v2.
 DIAMOND = pattern("diamond", 4, [(0, 1), (0, 2), (1, 2), (0, 3), (1, 3)],
                   restrictions=[(1, 0), (3, 2)], induced=True)
 
-# 4-cycle 0-1-2-3-0: v0 the largest vertex, v2 its opposite, and v0's two
-# cycle neighbors ordered v3 < v1 — dihedral group (order 8) fully broken.
-CYCLE4 = pattern("4-cycle", 4, [(0, 1), (1, 2), (2, 3), (0, 3)],
-                 restrictions=[(1, 0), (2, 0), (3, 1)], induced=True)
+# 4-cycle scheduled *corner-first*: v0 the largest vertex, v1/v2 its two
+# cycle neighbors (ordered v2 < v1), v3 the opposite corner. Level 2 then
+# draws from N(v0) \ N(v1) — the same stream as the 4-path's level 2 — and
+# the dihedral group (order 8) is fully broken by v0-max (4 rotations) plus
+# the v1/v2 reflection swap.
+CYCLE4 = pattern("4-cycle", 4, [(0, 1), (0, 2), (1, 3), (2, 3)],
+                 restrictions=[(1, 0), (2, 0), (3, 0), (2, 1)], induced=True)
 
 # 4-path a—b—c—d matched middle-edge-first (v0=b, v1=c, v2=a, v3=d);
 # path reversal (v0<->v1, v2<->v3) broken by v1 < v0.

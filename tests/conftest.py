@@ -4,3 +4,17 @@ import sys
 # tests see the 1 real device — the 512-device override lives ONLY in
 # launch/dryrun.py (spawned as a subprocess where needed).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def pytest_report_header(config):
+    """Make a missing ``hypothesis`` loud instead of silently skipping the
+    random-plan/forest property tests (the documented tier-1 flow —
+    scripts/tier1.sh — installs requirements-dev.txt first, matching CI)."""
+    try:
+        import hypothesis
+        return f"hypothesis {hypothesis.__version__}: property tests active"
+    except ImportError:
+        return ("WARNING: hypothesis NOT installed -> property tests SKIP "
+                "(seeded twins still run). Documented flow: "
+                "`pip install -r requirements-dev.txt` or scripts/tier1.sh "
+                "— CI always runs with hypothesis.")

@@ -130,6 +130,65 @@ def test_bitmap_vs_merge():
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+@pytest.mark.parametrize("cap_a,cap_b", [(128, 128), (256, 384)])
+def test_lower_bound_pallas_matches_xla_and_bruteforce(cap_a, cap_b):
+    """The lb operand (LevelOp.lb threaded into the tile schedule) must
+    agree across backends and with a set-algebra oracle, for INTER and SUB
+    counts and both fused compaction paths."""
+    a = jnp.asarray(make_rows(6, cap_a))
+    b = jnp.asarray(make_rows(6, cap_b))
+    ub = jnp.asarray(RNG.choice([SENTINEL, 500, 2000, 3500], size=6)
+                     .astype(np.int32))
+    lb = jnp.asarray(RNG.choice([-1, 100, 1500, 3000], size=6)
+                     .astype(np.int32))
+    an, bn = np.asarray(a), np.asarray(b)
+    for fn, setop in ((ops.xinter_count, lambda A, B: A & B),
+                      (ops.xsub_count, lambda A, B: A - B)):
+        got_p = np.asarray(fn(a, b, ub, backend="pallas", lbounds=lb))
+        got_x = np.asarray(fn(a, b, ub, backend="xla", lbounds=lb))
+        want = [len([k for k in setop(
+            set(an[i][an[i] != SENTINEL].tolist()),
+            set(bn[i][bn[i] != SENTINEL].tolist()))
+            if int(lb[i]) < k < int(ub[i])]) for i in range(6)]
+        np.testing.assert_array_equal(got_p, got_x)
+        np.testing.assert_array_equal(got_p, want)
+    for cfn, cap in ((ops.xinter_compact, min(cap_a, cap_b)),
+                     (ops.xsub_compact, cap_a)):
+        outs_p = cfn(a, b, ub, out_cap=cap, out_items=6 * cap,
+                     backend="pallas", lbounds=lb)
+        outs_x = cfn(a, b, ub, out_cap=cap, out_items=6 * cap,
+                     backend="xla", lbounds=lb)
+        for o_p, o_x in zip(outs_p, outs_x):
+            np.testing.assert_array_equal(np.asarray(o_p), np.asarray(o_x))
+
+
+def test_tile_schedule_skips_tiles_below_lower_bound():
+    """A-tiles entirely <= lbound get zero visits (whole-tile skip), and the
+    schedule still covers every in-window match."""
+    from repro.kernels.intersect import TA, TB, tile_schedule
+    a = jnp.asarray(make_rows(8, 512, empty_prob=0.0))
+    b = jnp.asarray(make_rows(8, 1024, empty_prob=0.0))
+    bounds = jnp.full((8,), SENTINEL, jnp.int32)
+    lbounds = jnp.asarray(RNG.integers(0, 4000, 8).astype(np.int32))
+    lo, nv = tile_schedule(a, b, bounds, lbounds)
+    an, bn = np.asarray(a), np.asarray(b)
+    lo, nv, lbn = np.asarray(lo), np.asarray(nv), np.asarray(lbounds)
+    skipped = 0
+    for i in range(8):
+        for t in range(an.shape[1] // TA):
+            tile = an[i, t * TA:(t + 1) * TA]
+            if tile[TA - 1] <= lbn[i]:          # whole tile out of window
+                assert nv[i, t] == 0
+                skipped += 1
+        common = np.intersect1d(an[i][an[i] != SENTINEL],
+                                bn[i][bn[i] != SENTINEL])
+        for k in common[common > lbn[i]]:
+            ti = np.searchsorted(an[i], k) // TA
+            tb = np.searchsorted(bn[i], k) // TB
+            assert lo[i, ti] <= tb < lo[i, ti] + nv[i, ti], (i, k)
+    assert skipped > 0          # the sweep actually exercised the skip
+
+
 def test_tile_schedule_visits_are_sound():
     """Every matching key pair must fall inside the scheduled tile range."""
     from repro.kernels.intersect import TA, TB, tile_schedule
