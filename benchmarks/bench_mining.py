@@ -10,8 +10,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from repro.graph import get_dataset
 from repro.graph.datasets import dataset_stats
 from repro.mining import apps, baseline, exhaustive
@@ -49,7 +47,6 @@ def modeled_tpu_triangle_time(g) -> float:
     VPU rate) + streamed bytes / HBM bw. The §Roofline methodology applied
     to the mining kernel (no real-TPU wall clock in this container)."""
     import jax.numpy as jnp
-    from repro.core.stream import SENTINEL
     from repro.kernels.intersect import tile_schedule
     from repro.mining.engine import edge_wave, _neighbor_cap
     from repro.graph.csr import padded_rows
@@ -152,6 +149,52 @@ def forest_fusion_report(g) -> dict:
     return out
 
 
+def fused_level_report(g) -> dict:
+    """Fused k-operand level kernel vs the per-ref mark fallback.
+
+    4-cycle's terminal level references two streams (v3 ∈ N(v1) ∩ N(v2) \\
+    N(v0) after the base pull: one INTER + one SUB ref), so the per-ref path
+    issues k=2 membership dispatches per executable call where the fused
+    path (``ops.xlevel_count``) issues exactly 1 — the per-operand B-tile
+    DMA the tentpole removes. Counts are asserted bit-identical; dispatch
+    counts come from ``WaveRunner.stats['level_kernel_dispatches']``."""
+    from repro.mining.engine import WaveRunner
+    from repro.mining.plan import CYCLE4, compile_pattern
+    plan = compile_pattern(CYCLE4)
+    k_general = len(plan.ops[-1].inter) + len(plan.ops[-1].sub)
+    out = {}
+    for label, fl in (("per_ref", False), ("fused", True)):
+        runner = WaveRunner(g, fused_level=fl)
+        runner.run(plan)                    # warm-up: traces + compiles
+        warm = dict(runner.stats)
+        warm_execs = dict(runner.level_execs)
+        t0 = time.time()
+        count = runner.run(plan)
+        dt = time.time() - t0
+        gen_execs = (runner.level_execs.get(("count", 3), 0)
+                     - warm_execs.get(("count", 3), 0))
+        dispatches = (runner.stats["level_kernel_dispatches"]
+                      - warm["level_kernel_dispatches"])
+        out[label] = {
+            "count": count, "seconds": round(dt, 4),
+            "kernel_dispatches": dispatches,
+            "general_level_execs": gen_execs,
+        }
+    assert out["fused"]["count"] == out["per_ref"]["count"]
+    # isolate the general level: the single-op level-2 dispatches (one each,
+    # identical in both modes) are whatever the fused run spent beyond its
+    # one-per-general-level — the acceptance metric is k -> 1 per level
+    n = out["fused"]["general_level_execs"]
+    shared = out["fused"]["kernel_dispatches"] - n
+    for label in ("per_ref", "fused"):
+        out[label]["dispatches_per_general_level"] = round(
+            (out[label]["kernel_dispatches"] - shared) / max(n, 1), 2)
+    out["k_general"] = k_general
+    out["fused_level_speedup"] = round(
+        out["per_ref"]["seconds"] / max(out["fused"]["seconds"], 1e-9), 2)
+    return out
+
+
 def plan_overhead_report(g) -> dict:
     """Interpreter tax: the same clique/TT workloads through compiled
     ``WavePlan``s vs the frozen pre-refactor hand-coded engine paths
@@ -208,6 +251,18 @@ def run(quick: bool = True):
         rows.append(dict(dataset=name, app="plan-overhead", **{
             f"{a}_{k}": v[k] for a, v in po.items()
             for k in ("plan_s", "handcoded_s", "plan_overhead")}))
+        fl = fused_level_report(g)
+        print(f"[mining] {name:14s} CY fused level: "
+              f"{fl['per_ref']['dispatches_per_general_level']:.0f} -> "
+              f"{fl['fused']['dispatches_per_general_level']:.0f} membership "
+              f"dispatches per general level (k={fl['k_general']}) | "
+              f"fused {fl['fused']['seconds']:.3f}s vs per-ref "
+              f"{fl['per_ref']['seconds']:.3f}s "
+              f"(speedup {fl['fused_level_speedup']}x)", flush=True)
+        rows.append(dict(dataset=name, app="CY-fused-level", **{
+            "per_ref_dispatches": fl["per_ref"]["kernel_dispatches"],
+            "fused_dispatches": fl["fused"]["kernel_dispatches"],
+            "fused_level_speedup": fl["fused_level_speedup"]}))
         ff = forest_fusion_report(g)
         print(f"[mining] {name:14s} 4M forest fusion: "
               f"fused {ff['fused_s']:.3f}s vs independent "

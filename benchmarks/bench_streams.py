@@ -9,7 +9,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.graph import get_dataset
-from repro.mining.engine import compact, edge_wave, expand
+from repro.mining.engine import edge_wave, expand
 
 
 def stream_length_cdf(name: str, scale: float = 1.0):

@@ -1,0 +1,207 @@
+"""CI perf-regression gate over the mining benchmarks.
+
+Runs a small-graph subset of ``bench_mining``'s reports, writes the result
+to ``BENCH_mining.json`` (uploaded as a CI artifact) and compares it
+against the checked-in ``benchmarks/baseline.json``:
+
+* **exact metrics** — mining counts and structural counters (forest level-2
+  dispatch/feed counts, fused-level membership dispatches per general
+  level). The datasets are deterministic synthetic generators and the
+  counters are schedule facts, so these are machine-independent and must
+  match the baseline EXACTLY: any drift is a correctness or scheduling
+  regression, not noise.
+* **ratio metrics** — wall-clock ratios (plan interpreter overhead, forest
+  fusion speedup, fused-level speedup, device-vs-host wave speedup).
+  Ratios, not absolute times, so they transfer across machines, but CI
+  runners are noisy: a metric only fails when it is worse than baseline by
+  more than its tolerance (per-metric ``tolerances`` in baseline.json,
+  direction from ``directions``: for ``higher_better`` a regression is
+  ``got < base * (1 - tol)``, for ``lower_better`` it is
+  ``got > base * (1 + tol)``).
+
+Usage (CI runs exactly this):
+
+    PYTHONPATH=src python benchmarks/ci_gate.py \
+        --out BENCH_mining.json --baseline benchmarks/baseline.json
+
+``--update-baseline`` rewrites baseline.json from the current measurement
+(keeping tolerances/directions) — run locally when a PR legitimately moves
+a ratio, and say so in the PR.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks.bench_mining import (fused_level_report,   # noqa: E402
+                                     forest_fusion_report,
+                                     plan_overhead_report,
+                                     wave_throughput_report)
+
+# exact app counts: small + cheap (deterministic synthetic graphs)
+COUNT_SETS = [("citeseer", 1.0), ("email-eu-core", 0.25)]
+# wall-clock ratios + structural counters: dense enough that the timed
+# region is hundreds of ms, not noise (see stability note in tolerances)
+PERF_SET = ("email-eu-core", 1.0)
+
+# ratio tolerances (fractional, see module docstring) — generous because CI
+# wall clock is shared-runner noisy; the exact counters carry the precise
+# regression signal, the ratios catch order-of-magnitude slumps.
+DEFAULT_TOLERANCES = {
+    "plan_overhead_4C": 0.6,
+    "plan_overhead_TT": 0.8,
+    "fusion_speedup": 0.5,
+    "fused_level_speedup": 0.5,
+    "wave_speedup": 0.6,
+}
+DIRECTIONS = {
+    "plan_overhead_4C": "lower_better",
+    "plan_overhead_TT": "lower_better",
+    "fusion_speedup": "higher_better",
+    "fused_level_speedup": "higher_better",
+    "wave_speedup": "higher_better",
+}
+
+
+def measure() -> dict:
+    from repro.graph import get_dataset
+    from repro.mining import apps
+    exact: dict = {}
+    ratios: dict = {}
+    for name, scale in COUNT_SETS:
+        g = get_dataset(name, scale=scale)
+        tag = f"{name}@{scale}"
+        print(f"[gate] {tag}: counting ...", flush=True)
+        exact[f"{tag}.T"] = apps.triangle_count(g)
+        exact[f"{tag}.TC"] = apps.three_chain_count(g, induced=True)
+        exact[f"{tag}.TT"] = apps.tailed_triangle_count(g)
+        exact[f"{tag}.4C"] = apps.clique_count(g, 4)
+        exact[f"{tag}.4M"] = apps.four_motif(g)
+
+    name, scale = PERF_SET
+    g = get_dataset(name, scale=scale)
+    tag = f"{name}@{scale}"
+    print(f"[gate] {tag}: perf reports ...", flush=True)
+    fl = fused_level_report(g)
+    exact[f"{tag}.CY"] = fl["fused"]["count"]
+    exact[f"{tag}.fused_level.k_general"] = fl["k_general"]
+    exact[f"{tag}.fused_level.dispatches_per_general_level"] = {
+        m: fl[m]["dispatches_per_general_level"]
+        for m in ("per_ref", "fused")}
+    ratios[f"{tag}.fused_level_speedup"] = fl["fused_level_speedup"]
+
+    ff = forest_fusion_report(g)
+    exact[f"{tag}.forest.level2_execs"] = [
+        ff["level2_execs_independent"], ff["level2_execs_fused"]]
+    exact[f"{tag}.forest.level2_ops_static"] = list(ff["level2_ops_static"])
+    exact[f"{tag}.forest.feed_passes"] = list(ff["feed_passes"])
+    ratios[f"{tag}.fusion_speedup"] = ff["fusion_speedup"]
+
+    po = plan_overhead_report(g)
+    ratios[f"{tag}.plan_overhead_4C"] = po["4C"]["plan_overhead"]
+    ratios[f"{tag}.plan_overhead_TT"] = po["TT"]["plan_overhead"]
+
+    wt = wave_throughput_report(g)
+    ratios[f"{tag}.wave_speedup"] = wt["wave_speedup"]
+    return {
+        "meta": {
+            "python": platform.python_version(),
+            "machine": platform.machine(),
+            "measured_at": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        },
+        "exact": exact,
+        "ratios": ratios,
+    }
+
+
+def _tolerance_for(metric: str, baseline: dict) -> tuple[float, str]:
+    """(tolerance, direction) for a ratio key '<dataset>@<scale>.<name>';
+    matched on the final dotted component (the scale contains a dot, so
+    splitting on the FIRST dot would eat the metric name)."""
+    stem = metric.rsplit(".", 1)[-1]
+    tols = baseline.get("tolerances", DEFAULT_TOLERANCES)
+    return (float(tols.get(stem, 0.6)),
+            baseline.get("directions", DIRECTIONS).get(stem, "lower_better"))
+
+
+def compare(got: dict, baseline: dict) -> list[str]:
+    """Return a list of regression messages (empty = gate passes)."""
+    failures = []
+    base_exact = baseline.get("exact", {})
+    for key, want in base_exact.items():
+        have = got["exact"].get(key, "<missing>")
+        if have != want:
+            failures.append(f"EXACT {key}: baseline {want!r} != got {have!r}")
+    for key in got["exact"]:
+        if key not in base_exact:
+            failures.append(f"EXACT {key}: missing from baseline "
+                            "(run --update-baseline)")
+    base_ratios = baseline.get("ratios", {})
+    for key in got["ratios"]:
+        if key not in base_ratios:
+            failures.append(f"RATIO {key}: missing from baseline "
+                            "(run --update-baseline)")
+    for key, base_val in base_ratios.items():
+        have = got["ratios"].get(key)
+        if have is None:
+            failures.append(f"RATIO {key}: not measured")
+            continue
+        tol, direction = _tolerance_for(key, baseline)
+        if direction == "higher_better":
+            bad = have < base_val * (1 - tol)
+        else:
+            bad = have > base_val * (1 + tol)
+        if bad:
+            failures.append(
+                f"RATIO {key}: {have} vs baseline {base_val} "
+                f"({direction}, tol {tol:.0%}) — REGRESSION")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_mining.json")
+    ap.add_argument("--baseline", default="benchmarks/baseline.json")
+    ap.add_argument("--update-baseline", action="store_true")
+    args = ap.parse_args(argv)
+
+    got = measure()
+    Path(args.out).write_text(json.dumps(got, indent=2, sort_keys=True))
+    print(f"[gate] wrote {args.out}")
+
+    if args.update_baseline:
+        doc = {
+            "_doc": ("CI perf-regression baseline (benchmarks/ci_gate.py). "
+                     "'exact' must match bit-for-bit; 'ratios' fail when "
+                     "worse than baseline by more than 'tolerances' "
+                     "(fractional) in the 'directions' sense. Refresh with "
+                     "--update-baseline and justify in the PR."),
+            "exact": got["exact"],
+            "ratios": got["ratios"],
+            "tolerances": DEFAULT_TOLERANCES,
+            "directions": DIRECTIONS,
+        }
+        Path(args.baseline).write_text(
+            json.dumps(doc, indent=2, sort_keys=True) + "\n")
+        print(f"[gate] baseline refreshed -> {args.baseline}")
+        return 0
+
+    baseline = json.loads(Path(args.baseline).read_text())
+    failures = compare(got, baseline)
+    for f in failures:
+        print(f"[gate] {f}", flush=True)
+    if failures:
+        print(f"[gate] FAIL: {len(failures)} regression(s)")
+        return 1
+    print("[gate] PASS: counts/counters exact, ratios within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,7 +5,6 @@
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import numpy as np
 
 from repro.core import isa, make_stream, to_host, s_nestinter
 from repro.graph import build_csr, neighbors_stream

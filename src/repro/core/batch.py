@@ -11,6 +11,18 @@ Implementation note: membership is a vmapped binary search
 branches, which is what the VPU wants. The Pallas path instead uses all-pairs
 tile compare with tile skipping (see kernels/intersect.py); both orders
 agree because keys are strictly sorted sets.
+
+Compaction contract (``batch_compact_rows`` / ``batch_compact_scan``): the
+survivor streams and the flattened worklist are built by a segmented
+prefix-sum scatter — O(B·cap) data movement, no sort. This is correct under
+the **monotonicity precondition**: the base rows are sorted streams and the
+keep mask preserves relative order (it selects, never reorders), so writing
+survivor j to slot ``cumsum(keep)[j] - 1`` reproduces exactly what the old
+masked sort (``jnp.where(keep, a, SENTINEL)`` + ``jnp.sort``) produced —
+kept keys, in order, front-packed, SENTINEL-padded. Every level path in this
+repo satisfies the precondition (bases are per-row sorted; items are emitted
+row-major); ``batch_compact_items`` keeps the masked-sort form as the
+semantic oracle the scan twins are tested against.
 """
 from __future__ import annotations
 
@@ -52,6 +64,127 @@ def _lbounds(rows_a: jax.Array, lbounds) -> jax.Array:
     return jnp.asarray(lbounds, jnp.int32)
 
 
+# ---------------------------------------------------------------------------
+# segmented prefix-sum scatter compaction (sort-free; see module docstring
+# for the monotonicity precondition)
+# ---------------------------------------------------------------------------
+
+
+def _scan_compact_parts(rows_a: jax.Array, keep: jax.Array, out_cap: int):
+    """Shared segmented-prefix-sum core: (rows, counts, keep, pos, row).
+
+    ``pos`` is each survivor's slot in its row stream; ``row`` the row index
+    grid — the item scatter in ``batch_compact_scan`` reuses both. Survivors
+    past ``out_cap`` are dropped (callers size out_cap from the §IV-D
+    dependency bound, so none exist on the engine paths)."""
+    B, cap = rows_a.shape
+    keep = keep & (rows_a != SENTINEL)
+    counts = jnp.sum(keep, axis=1, dtype=jnp.int32)
+    pos = jnp.cumsum(keep, axis=1, dtype=jnp.int32) - 1
+    col = jnp.where(keep, pos, out_cap)              # out_cap = dropped
+    row = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32)[:, None], (B, cap))
+    rows = jnp.full((B, out_cap), SENTINEL, jnp.int32) \
+        .at[row, col].set(rows_a, mode="drop")
+    return rows, counts, keep, pos, row
+
+
+def batch_compact_rows(rows_a: jax.Array, keep: jax.Array,
+                       out_cap: int) -> tuple[jax.Array, jax.Array]:
+    """Per-row survivor streams from a keep mask, by prefix-sum scatter.
+
+    Returns (rows (B, out_cap) front-packed SENTINEL-padded, counts (B,)).
+    Survivors keep their order (monotone input => sorted output) — the
+    O(B·cap) replacement for the ``jnp.where`` + ``jnp.sort`` masked-sort
+    tail."""
+    rows, counts, _, _, _ = _scan_compact_parts(rows_a, keep, out_cap)
+    return rows, counts
+
+
+@partial(jax.jit, static_argnames=("out_cap", "out_items"))
+def batch_compact_scan(rows_a: jax.Array, keep: jax.Array, out_cap: int,
+                       out_items: int):
+    """Fused survivor-stream + worklist compaction from one keep mask.
+
+    The O(B·cap) scan-scatter twin of ``jnp.sort`` + ``batch_compact_items``:
+    one segmented prefix sum assigns every survivor both its slot in the
+    per-row stream and — offset by the exclusive row-count prefix — its slot
+    in the flattened row-major worklist. Output contract matches
+    ``kernels.ops.xinter_compact``:
+
+      rows   (B, out_cap)   front-packed survivor streams
+      counts (B,)           per-row survivor counts
+      src    (out_items,)   item -> source row   (0 past total)
+      verts  (out_items,)   item extension vertex (0 past total)
+      total  ()             live item count
+      maxc   ()             max per-row survivor count
+
+    Item order is bit-identical to ``batch_compact_items`` on the masked-sort
+    rows (row-major (i, j)), which is the order the host ``np.nonzero``
+    oracle emits."""
+    rows, counts, keep, pos, row = _scan_compact_parts(rows_a, keep, out_cap)
+    offs = jnp.cumsum(counts, dtype=jnp.int32) - counts   # exclusive prefix
+    ipos = jnp.where(keep, offs[:, None] + pos, out_items).reshape(-1)
+    src = jnp.zeros((out_items,), jnp.int32) \
+        .at[ipos].set(row.reshape(-1), mode="drop")
+    verts = jnp.zeros((out_items,), jnp.int32) \
+        .at[ipos].set(rows_a.reshape(-1), mode="drop")
+    return rows, counts, src, verts, jnp.sum(counts), jnp.max(counts)
+
+
+def compact_indices_scan(ok: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Order-preserving index compaction: positions of the set bits of
+    ``ok``, front-packed (0 past the live count), plus the live count.
+
+    The 1-D scan twin of the masked index sort (``jnp.sort(where(ok, iota,
+    SENTINEL))``) used by the per-branch residual worklist pack."""
+    n = ok.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    pos = jnp.cumsum(ok, dtype=jnp.int32) - 1
+    tgt = jnp.where(ok, pos, n)
+    order = jnp.zeros((n,), jnp.int32).at[tgt].set(idx, mode="drop")
+    return order, jnp.sum(ok, dtype=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# multi-operand level (k INTER/SUB refs in one keep mask) — the XLA twin of
+# kernels.intersect.intersect_multi_pallas
+# ---------------------------------------------------------------------------
+
+
+def _level_keep(rows_a, bs, pol, ub, lb, excludes):
+    """keep = window ∧ excludes ∧ (∈ B_r ∀ INTER r) ∧ (∉ B_r ∀ SUB r)."""
+    keep = (rows_a != SENTINEL) & (rows_a < ub[:, None]) \
+        & (rows_a > lb[:, None])
+    if excludes is not None:
+        keep = keep & jnp.all(rows_a[:, :, None] != excludes[:, None, :],
+                              axis=2)
+    for r, p in enumerate(pol):
+        m = _membership(rows_a, bs[r])
+        keep = keep & m if p else keep & ~m
+    return keep
+
+
+@partial(jax.jit, static_argnames=("pol",))
+def batch_level_count(rows_a, bs, pol, bounds=None, lbounds=None,
+                      excludes=None):
+    """counts[i] = |{k ∈ A_i : all pol-signed memberships, window, excl}| —
+    the whole multi-operand level's S_*.C in one call (k = 0 degenerates to
+    a pure window/injectivity count, no membership work)."""
+    ub, lb = _bounds(rows_a, bounds), _lbounds(rows_a, lbounds)
+    return jnp.sum(_level_keep(rows_a, bs, pol, ub, lb, excludes), axis=1,
+                   dtype=jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("pol", "out_cap", "out_items"))
+def batch_level_compact(rows_a, bs, pol, bounds, lbounds, excludes,
+                        out_cap: int, out_items: int):
+    """Fused multi-operand level + scan compaction — ``xinter_compact``'s
+    contract (rows, counts, src, verts, total, maxc) for any k-ref level."""
+    ub, lb = _bounds(rows_a, bounds), _lbounds(rows_a, lbounds)
+    keep = _level_keep(rows_a, bs, pol, ub, lb, excludes)
+    return batch_compact_scan(rows_a, keep, out_cap, out_items)
+
+
 @jax.jit
 def batch_inter_count(rows_a: jax.Array, rows_b: jax.Array, bounds=None,
                       lbounds=None) -> jax.Array:
@@ -75,9 +208,8 @@ def batch_inter(rows_a: jax.Array, rows_b: jax.Array, bounds=None,
     keep = _membership(rows_a, rows_b) & (rows_a < ub[:, None]) \
         & (rows_a > lb[:, None])
     cap = out_cap or min(rows_a.shape[1], rows_b.shape[1])
-    masked = jnp.where(keep, rows_a, SENTINEL)
-    rows = jnp.sort(masked, axis=1)[:, :cap]
-    return rows, jnp.sum(keep, axis=1, dtype=jnp.int32)
+    rows, counts = batch_compact_rows(rows_a, keep, cap)
+    return rows, counts
 
 
 @jax.jit
@@ -99,9 +231,8 @@ def batch_sub(rows_a: jax.Array, rows_b: jax.Array, bounds=None,
     keep = (~_membership(rows_a, rows_b)) & (rows_a != SENTINEL) \
         & (rows_a < ub[:, None]) & (rows_a > lb[:, None])
     cap = out_cap or rows_a.shape[1]
-    masked = jnp.where(keep, rows_a, SENTINEL)
-    rows = jnp.sort(masked, axis=1)[:, :cap]
-    return rows, jnp.sum(keep, axis=1, dtype=jnp.int32)
+    rows, counts = batch_compact_rows(rows_a, keep, cap)
+    return rows, counts
 
 
 @partial(jax.jit, static_argnames=("out_cap", "out_items"))
@@ -109,19 +240,27 @@ def batch_sub_compact(rows_a: jax.Array, rows_b: jax.Array, bounds,
                       out_cap: int, out_items: int, lbounds=None):
     """Fused batched S_SUB + worklist compaction (device-resident SUB level).
 
-    Mirrors ``batch_inter`` + ``batch_compact_items`` but keeps the
-    complement: survivors are keys of A not present in B (and < bounds).
-    Returns (rows, counts, src, verts, total, maxc) with the same contract
-    as ``kernels.ops.xinter_compact``.
+    Mirrors ``batch_inter`` + the scan compaction but keeps the complement:
+    survivors are keys of A not present in B (and < bounds). Returns
+    (rows, counts, src, verts, total, maxc) with the same contract as
+    ``kernels.ops.xinter_compact``.
     """
     ub, lb = _bounds(rows_a, bounds), _lbounds(rows_a, lbounds)
     keep = (~_membership(rows_a, rows_b)) & (rows_a != SENTINEL) \
         & (rows_a < ub[:, None]) & (rows_a > lb[:, None])
-    masked = jnp.where(keep, rows_a, SENTINEL)
-    rows = jnp.sort(masked, axis=1)[:, :out_cap]
-    counts = jnp.sum(keep, axis=1, dtype=jnp.int32)
-    src, verts, total, maxc = batch_compact_items(rows, counts, out_items)
-    return rows, counts, src, verts, total, maxc
+    return batch_compact_scan(rows_a, keep, out_cap, out_items)
+
+
+@partial(jax.jit, static_argnames=("out_cap", "out_items"))
+def batch_inter_compact(rows_a: jax.Array, rows_b: jax.Array, bounds,
+                        out_cap: int, out_items: int, lbounds=None):
+    """Fused batched S_INTER + worklist compaction (device-resident INTER
+    level) — one keep mask feeding ``batch_compact_scan``; the XLA twin of
+    the Pallas ``xinter_compact`` fast path, now sort-free end to end."""
+    ub, lb = _bounds(rows_a, bounds), _lbounds(rows_a, lbounds)
+    keep = _membership(rows_a, rows_b) & (rows_a < ub[:, None]) \
+        & (rows_a > lb[:, None])
+    return batch_compact_scan(rows_a, keep, out_cap, out_items)
 
 
 @partial(jax.jit, static_argnames=("out_items",))
@@ -141,7 +280,8 @@ def batch_compact_items(rows: jax.Array, counts: jax.Array, out_items: int):
     downstream, so callers never need a validity mask on the fast path.
     Mechanism: masked sort of flattened slot indices (valid slots keep their
     row-major index, dead slots get int32-max) — a single XLA sort, no host
-    round-trip.
+    round-trip. This O(B·cap·log) form is the *oracle*; the engine paths run
+    the O(B·cap) ``batch_compact_scan`` scatter, tested item-identical.
     """
     B, cap = rows.shape
     counts = counts.astype(jnp.int32)

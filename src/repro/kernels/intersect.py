@@ -23,8 +23,29 @@ TPU adaptation of the paper's Intersection Unit (§IV-C):
 Two kernels share the schedule:
   count: Σ matches (S_INTER.C / S_SUB.C via |A|-count)
   mark:  per-A-slot match bitmask (uint8) — S_INTER materialisation is then
-         a cheap XLA sort-compaction over the mask (the kernel owns the
+         a cheap XLA scan-compaction over the mask (the kernel owns the
          O(n·m) compare work; XLA owns the data movement it already fuses).
+
+Multi-operand levels (``intersect_multi_pallas``) fuse k B-stream operands
+into ONE grid pass — the §IV-F translation buffer's whole µop sequence for a
+level as a single dispatch, instead of one mark kernel per INTER/SUB
+reference. The k-operand contract:
+
+  * ``bs`` is (k, B, cap_b): the k reference streams, stacked; refs gathered
+    at different capacities are SENTINEL-padded to a common cap_b (padding
+    keeps rows sorted, so each ref's tile schedule stays valid);
+  * ``pol`` is a static length-k tuple of 1 (S_INTER: keep members) / 0
+    (S_SUB: keep non-members). Polarity is folded into a per-slot weighted
+    hit score — +1 per INTER hit, -(k+1) per SUB hit — so ``score ==
+    #INTER refs`` iff every INTER ref matched and no SUB ref did; one int32
+    accumulator replaces k boolean mask combines;
+  * each ref gets its own prefetched tile schedule (lo/nv are (k, B, nA)),
+    so per-ref B-tile DMA still obeys the merge bound and the R3/lb
+    whole-tile skipping — one *dispatch*, k tile-schedules;
+  * the bound window (lbound < key < bound), the per-row bound-0 row kill
+    and the per-item injectivity ``excludes`` (B, E) are applied in the
+    kernel's finalize step, which emits both the keep mask and the
+    survivor count in the same pass (no second kernel for S_*.C).
 """
 from __future__ import annotations
 
@@ -32,7 +53,6 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -252,3 +272,127 @@ def intersect_mark_pallas(a, b, bounds=None, max_visits=None, interpret=True,
         interpret=interpret,
     )(lo_t, nv, a, b, bounds.reshape(-1, 1), lbounds.reshape(-1, 1))
     return out
+
+
+# ---------------------------------------------------------------------------
+# fused multi-operand level kernel (k B-streams per grid step)
+# ---------------------------------------------------------------------------
+
+
+def _multi_kernel(n_refs: int, n_inter: int, max_visits: int,
+                  lo_ref, nv_ref, a_ref, b_ref, bound_ref, lbound_ref,
+                  excl_ref, mark_ref, cnt_ref):
+    """One level's whole µop sequence in a single pass.
+
+    Grid (B, nA, k, max_visits): for each (row, A-tile) the k refs stream
+    their scheduled B-tiles through VMEM one after another while the A-tile
+    and its score accumulator stay resident. The score is a weighted hit sum
+    (+1 INTER, -(k+1) SUB; sorted sets hit at most once per ref, so the sum
+    never aliases): score == n_inter  <=>  all INTER refs matched, no SUB
+    ref did. The final grid step folds the bound window and the injectivity
+    excludes and converts the score into the 0/1 keep mask + count."""
+    bi, i, r, j = (pl.program_id(0), pl.program_id(1), pl.program_id(2),
+                   pl.program_id(3))
+    a = a_ref[0, :]
+    bt = b_ref[0, 0, :]
+    hit = (jnp.sum((a[:, None] == bt[None, :]).astype(jnp.int32), axis=1) > 0)
+    weight = jnp.where(r < n_inter, 1, -(n_refs + 1))
+
+    @pl.when((r == 0) & (j == 0))
+    def _init_mark():
+        mark_ref[0, :] = jnp.zeros_like(mark_ref[0, :])
+
+    @pl.when((i == 0) & (r == 0) & (j == 0))
+    def _init_cnt():
+        cnt_ref[0, 0] = 0
+
+    @pl.when(j < nv_ref[r, bi, i])
+    def _acc():
+        mark_ref[0, :] += hit.astype(jnp.int32) * weight
+
+    @pl.when((r == n_refs - 1) & (j == max_visits - 1))
+    def _finalize():
+        bound = bound_ref[0, 0]
+        valid = (a != SENTINEL) & (a < bound) & (a > lbound_ref[0, 0])
+        ex = excl_ref[0, :]
+        valid = valid & jnp.all(a[:, None] != ex[None, :], axis=1)
+        keep = valid & (mark_ref[0, :] == n_inter)
+        mark_ref[0, :] = keep.astype(jnp.int32)
+        cnt_ref[0, 0] += jnp.sum(keep.astype(jnp.int32))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("pol", "max_visits", "interpret"))
+def intersect_multi_pallas(a, bs, pol, bounds=None, max_visits=None,
+                           interpret=True, lbounds=None, excludes=None):
+    """Fused k-operand level: conjunctive mark + count in ONE schedule pass.
+
+    mark[i, s] = 1 iff   A_i[s] ∈ B^r_i   for every INTER ref r (pol[r]=1)
+               and       A_i[s] ∉ B^r_i   for every SUB ref r  (pol[r]=0)
+               and       lbounds[i] < A_i[s] < bounds[i]
+               and       A_i[s] != excludes[i, e]  for every e;
+    counts[i] = Σ_s mark[i, s].
+
+    ``bs`` is the (k, B, cap_b) operand stack (see module docstring for the
+    padding contract); ``pol`` the static INTER/SUB polarity tuple, which
+    must be sorted INTER-first (the engine stacks refs that way; the kernel
+    exploits it to derive the per-ref weight from the ref index alone).
+    Replacing the per-ref ``xmark`` loop, every B-tile is DMA'd exactly once
+    across the whole level instead of once per mark dispatch re-reading the
+    A-tiles, and the count rides the same pass (S_*.C for free).
+    """
+    assert bs.ndim == 3 and bs.shape[0] == len(pol) >= 1, \
+        "bs must be (k, B, cap_b) matching pol"
+    assert all(p == 1 for p in pol[:sum(pol)]) \
+        and all(p == 0 for p in pol[sum(pol):]), "pol must be INTER-first"
+    B, cap_a = a.shape
+    cap_b = bs.shape[2]
+    assert cap_a % TA == 0 and cap_b % TB == 0, "streams are LANE-padded"
+    if bounds is None:
+        bounds = jnp.full((B,), SENTINEL, jnp.int32)
+    bounds = jnp.asarray(bounds, jnp.int32)
+    if lbounds is None:
+        lbounds = jnp.full((B,), -1, jnp.int32)
+    lbounds = jnp.asarray(lbounds, jnp.int32)
+    if excludes is None:
+        excludes = jnp.full((B, 1), -1, jnp.int32)   # ids >= 0: no-op
+    excludes = jnp.asarray(excludes, jnp.int32)
+    lo_t, nv = jax.vmap(tile_schedule, in_axes=(None, 0, None, None))(
+        a, bs, bounds, lbounds)                      # (k, B, nA) each
+    if max_visits is None:
+        max_visits = cap_b // TB
+    k = len(pol)
+    grid = (B, cap_a // TA, k, int(max_visits))
+    n_excl = excludes.shape[1]
+    kernel = functools.partial(_multi_kernel, k, int(sum(pol)),
+                               int(max_visits))
+    mark, cnt = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, TA), lambda bi, i, r, j, lo, nv: (bi, i)),
+                pl.BlockSpec(
+                    (1, 1, TB),
+                    lambda bi, i, r, j, lo, nv: (
+                        r, bi, jnp.minimum(lo[r, bi, i] + j,
+                                           cap_b // TB - 1))),
+                pl.BlockSpec((1, 1), lambda bi, i, r, j, lo, nv: (bi, 0)),
+                pl.BlockSpec((1, 1), lambda bi, i, r, j, lo, nv: (bi, 0)),
+                pl.BlockSpec((1, n_excl),
+                             lambda bi, i, r, j, lo, nv: (bi, 0)),
+            ],
+            out_specs=(
+                pl.BlockSpec((1, TA), lambda bi, i, r, j, lo, nv: (bi, i)),
+                pl.BlockSpec((1, 1), lambda bi, i, r, j, lo, nv: (bi, 0)),
+            ),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct(a.shape, jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        ),
+        interpret=interpret,
+    )(lo_t, nv, a, bs, bounds.reshape(-1, 1), lbounds.reshape(-1, 1),
+      excludes)
+    return mark, cnt[:, 0]

@@ -13,14 +13,16 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.batch import (batch_compact_items, batch_inter,
-                              batch_inter_count, batch_member_mark,
+from repro.core.batch import (batch_compact_rows, batch_compact_scan,
+                              batch_inter, batch_inter_compact,
+                              batch_inter_count, batch_level_compact,
+                              batch_level_count, batch_member_mark,
                               batch_sub_compact, batch_sub_count,
                               batch_vinter)
 from repro.core.stream import SENTINEL
 from .bitmap import bitmap_and_count_pallas, bitmap_and_count_ref, keys_to_bitmap
 from .intersect import (intersect_count_pallas, intersect_expand_pallas,
-                        intersect_mark_pallas)
+                        intersect_mark_pallas, intersect_multi_pallas)
 from .svinter import vinter_pallas
 
 
@@ -57,16 +59,8 @@ def xinter(a, b, bounds=None, out_cap: int | None = None, backend: str = "auto",
     mark = intersect_mark_pallas(a, b, bounds, interpret=not _on_tpu(),
                                  lbounds=lbounds)
     cap = out_cap or min(a.shape[1], b.shape[1])
-    masked = jnp.where(mark > 0, a, SENTINEL)
-    rows = jnp.sort(masked, axis=1)[:, :cap]
-    return rows, jnp.sum(mark, axis=1, dtype=jnp.int32)
-
-
-@functools.partial(jax.jit, static_argnames=("out_cap", "out_items"))
-def _xinter_compact_xla(a, b, bounds, out_cap: int, out_items: int, lbounds):
-    rows, counts = batch_inter(a, b, bounds, out_cap=out_cap, lbounds=lbounds)
-    src, verts, total, maxc = batch_compact_items(rows, counts, out_items)
-    return rows, counts, src, verts, total, maxc
+    rows, counts = batch_compact_rows(a, mark > 0, cap)
+    return rows, counts
 
 
 @functools.partial(jax.jit, static_argnames=("out_cap", "out_items", "interpret"))
@@ -74,9 +68,8 @@ def _xinter_compact_pallas(a, b, bounds, out_cap: int, out_items: int,
                            interpret: bool, lbounds):
     mark, counts = intersect_expand_pallas(a, b, bounds, interpret=interpret,
                                            lbounds=lbounds)
-    masked = jnp.where(mark > 0, a, SENTINEL)
-    rows = jnp.sort(masked, axis=1)[:, :out_cap]
-    src, verts, total, maxc = batch_compact_items(rows, counts, out_items)
+    rows, _, src, verts, total, maxc = batch_compact_scan(
+        a, mark > 0, out_cap, out_items)
     return rows, counts, src, verts, total, maxc
 
 
@@ -95,14 +88,15 @@ def xinter_compact(a, b, bounds=None, out_cap: int | None = None,
       maxc   ()              max survivor count (sizes the next capacity)
 
     This replaces the engine's host ``np.nonzero`` + re-upload round-trip:
-    the Pallas kernel owns the compare work, XLA owns the masked sort /
-    prefix-scatter, and only two scalars ever cross to the host.
+    the Pallas kernel owns the compare work, XLA owns the prefix-sum
+    scatter (``batch_compact_scan`` — O(B·cap), no sort), and only two
+    scalars ever cross to the host.
     """
     backend = _resolve(backend)
     cap = out_cap or min(a.shape[1], b.shape[1])
     items = out_items or a.shape[0] * cap
     if backend == "xla":
-        return _xinter_compact_xla(a, b, bounds, cap, items, lbounds)
+        return batch_inter_compact(a, b, bounds, cap, items, lbounds=lbounds)
     return _xinter_compact_pallas(a, b, bounds, cap, items,
                                   interpret=not _on_tpu(), lbounds=lbounds)
 
@@ -152,11 +146,7 @@ def _xsub_compact_pallas(a, b, bounds, out_cap: int, out_items: int,
     # the mark kernel runs UNBOUNDED here (see _sub_window on polarity)
     mark = intersect_mark_pallas(a, b, None, interpret=interpret)
     keep = (mark == 0) & _sub_window(a, bounds, lbounds)
-    masked = jnp.where(keep, a, SENTINEL)
-    rows = jnp.sort(masked, axis=1)[:, :out_cap]
-    counts = jnp.sum(keep, axis=1, dtype=jnp.int32)
-    src, verts, total, maxc = batch_compact_items(rows, counts, out_items)
-    return rows, counts, src, verts, total, maxc
+    return batch_compact_scan(a, keep, out_cap, out_items)
 
 
 def xsub_compact(a, b, bounds=None, out_cap: int | None = None,
@@ -173,6 +163,62 @@ def xsub_compact(a, b, bounds=None, out_cap: int | None = None,
         return batch_sub_compact(a, b, bounds, cap, items, lbounds=lbounds)
     return _xsub_compact_pallas(a, b, bounds, cap, items,
                                 interpret=not _on_tpu(), lbounds=lbounds)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("pol", "out_cap", "out_items",
+                                    "interpret"))
+def _xlevel_compact_pallas(a, bs, pol, bounds, lbounds, excludes,
+                           out_cap: int, out_items: int, interpret: bool):
+    mark, _ = intersect_multi_pallas(a, bs, pol, bounds, interpret=interpret,
+                                     lbounds=lbounds, excludes=excludes)
+    return batch_compact_scan(a, mark > 0, out_cap, out_items)
+
+
+def xlevel_count(a, bs, pol, bounds=None, backend: str = "auto",
+                 lbounds=None, excludes=None):
+    """Fused multi-operand level count — one dispatch for a whole
+    INTER/SUB µop sequence.
+
+    counts[i] = |{k ∈ A_i : k ∈ B^r_i ∀ INTER r, k ∉ B^r_i ∀ SUB r,
+                  lbounds[i] < k < bounds[i], k ∉ excludes[i]}|
+
+    ``bs`` is the (k, B, cap_b) operand stack (refs SENTINEL-padded to a
+    common capacity), ``pol`` the static INTER-first polarity tuple — see
+    ``kernels.intersect`` for the k-operand contract. ``pol = ()`` (no
+    membership refs, pure window/injectivity level) is served by the XLA
+    form on every backend: there is no stream work for a kernel to fuse.
+    Replaces the per-ref ``xmark`` + combine loop: k mark dispatches (each
+    re-reading the A-tiles) become one pass over one shared schedule.
+    """
+    backend = _resolve(backend)
+    if backend == "xla" or not pol:
+        return batch_level_count(a, bs, pol, bounds, lbounds, excludes)
+    _, cnt = intersect_multi_pallas(a, bs, pol, bounds,
+                                    interpret=not _on_tpu(), lbounds=lbounds,
+                                    excludes=excludes)
+    return cnt
+
+
+def xlevel_compact(a, bs, pol, bounds=None, out_cap: int | None = None,
+                   out_items: int | None = None, backend: str = "auto",
+                   lbounds=None, excludes=None):
+    """Fused multi-operand level + worklist compaction, device-resident.
+
+    ``xinter_compact``'s contract — (rows, counts, src, verts, total, maxc)
+    — for a level with any number of INTER/SUB references: the multi-operand
+    kernel produces the conjunctive keep mask + count in one pass
+    (``intersect_multi_pallas``) and its epilogue is the O(B·cap)
+    prefix-sum scatter (``batch_compact_scan``), replacing k mark dispatches
+    + an O(B·cap·log) masked sort."""
+    backend = _resolve(backend)
+    cap = out_cap or a.shape[1]
+    items = out_items or a.shape[0] * cap
+    if backend == "xla" or not pol:
+        return batch_level_compact(a, bs, pol, bounds, lbounds, excludes,
+                                   cap, items)
+    return _xlevel_compact_pallas(a, bs, pol, bounds, lbounds, excludes,
+                                  cap, items, interpret=not _on_tpu())
 
 
 def xvinter_mac(a_keys, a_vals, b_keys, b_vals, op: str = "mac",
@@ -194,4 +240,5 @@ def xbitmap_count(a_words, b_words, backend: str = "auto"):
 
 
 __all__ = ["xinter", "xinter_count", "xinter_compact", "xmark", "xsub_count",
-           "xsub_compact", "xvinter_mac", "xbitmap_count", "keys_to_bitmap"]
+           "xsub_compact", "xlevel_count", "xlevel_compact", "xvinter_mac",
+           "xbitmap_count", "keys_to_bitmap"]

@@ -12,12 +12,10 @@ from __future__ import annotations
 
 import argparse
 import os
-import sys
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ARCH_NAMES, get_arch
 from repro.distributed.fault_tolerance import StepGuard

@@ -20,8 +20,9 @@ observation (clique streams are short) becomes an adaptive buffer size.
 Two compaction paths exist:
 
   * **device (fast path, ``WaveRunner``)**: the expand's match mask is
-    compacted on-device (masked sort + prefix-sum scatter,
-    ``ops.xinter_compact``) into the next wave's (rows, verts) buffers;
+    compacted on-device (segmented prefix-sum scatter,
+    ``ops.xinter_compact`` / ``ops.xlevel_compact``) into the next wave's
+    (rows, verts) buffers;
     only three level-boundary scalars (total, max count, max degree) ever
     cross to the host. Executables are cached per (cap_a, cap_b, chunk) so
     degree-bucketed shapes never retrace, and the level-1 edge feed is
@@ -42,12 +43,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.batch import (batch_compact_items, batch_inter,
-                              batch_inter_count)
+from repro.core.batch import (batch_compact_scan, batch_inter,
+                              batch_inter_count, compact_indices_scan)
 from repro.core.stream import LANE, SENTINEL, round_capacity
 from repro.graph.csr import CSRGraph, padded_rows
-from repro.kernels.ops import (xinter_compact, xinter_count, xmark,
-                               xsub_compact, xsub_count)
+from repro.kernels.ops import (xinter_compact, xinter_count, xlevel_compact,
+                               xlevel_count, xmark, xsub_compact, xsub_count)
 from .plan import LevelOp, WavePlan, clique_pattern, compile_pattern, pattern
 
 
@@ -300,6 +301,18 @@ class WaveRunner:
     relaxation never inflates their downstream item count), with per-leaf
     accumulators — results bit-identical to per-plan ``run`` calls.
 
+    General (multi-operand) levels — several INTER/SUB refs, or injectivity
+    excludes — dispatch ONE fused k-operand kernel per executable call
+    (``ops.xlevel_count`` / ``ops.xlevel_compact``: the refs are stacked
+    into a (k, B, cap) operand, polarity INTER-first, window/excludes folded
+    in-kernel) instead of one ``xmark`` per reference; compaction everywhere
+    is the O(B·cap) segmented prefix-sum scatter (``batch_compact_scan``),
+    never a masked sort. ``fused_level=False`` keeps the per-ref mark
+    composition as the comparison fallback — counts are property-tested
+    bit-identical with the flag on and off, and the executable cache is
+    keyed on it (plus the per-ref capacity signature, so a k-operand level's
+    trace is reused across degree buckets exactly like the single-op ones).
+
     ``device_compact=False`` routes every expand through the host
     ``compact`` oracle (np.nonzero + re-upload) — the twin the fast path is
     property-tested against. ``record=True`` captures each wave's live
@@ -308,7 +321,7 @@ class WaveRunner:
 
     def __init__(self, g: CSRGraph, chunk: int | None = None,
                  backend: str = "auto", device_compact: bool = True,
-                 record: bool = False):
+                 record: bool = False, fused_level: bool = True):
         self.g = g
         # chunk <= 2^15 is the exactness envelope of the (hi, lo) int32
         # per-chunk count partials (see _plan_count_fn): a 2^15-item chunk of
@@ -318,19 +331,37 @@ class WaveRunner:
         self.backend = backend
         self.device_compact = device_compact
         self.record = record
+        self.fused_level = fused_level
         self.trace: list[tuple[int, np.ndarray, np.ndarray]] = []
         self._exec: dict[tuple, Callable] = {}
         self.stats = {"exec_hits": 0, "exec_misses": 0, "host_syncs": 0,
                       "device_compactions": 0, "host_compactions": 0,
-                      "items": 0}
+                      "items": 0, "level_kernel_dispatches": 0}
         # per-(kind, level) executable dispatch counts — the fusion metric:
         # a PlanForest run dispatches each shared level once where the
         # independent-plan path dispatches it once per pattern.
         self.level_execs: dict[tuple[str, int], int] = {}
 
-    def _bump(self, op: LevelOp) -> None:
+    def _level_dispatches(self, op: LevelOp, host: bool = False) -> int:
+        """Membership-kernel dispatches one executable call issues for
+        ``op`` — the per-operand DMA metric the fused level path collapses:
+        a general level costs one dispatch per INTER/SUB ref on the per-ref
+        fallback (and always on the host-oracle mark composition), exactly
+        one with ``fused_level``; window-only levels need none."""
+        k = len(op.inter) + len(op.sub)
+        if host:
+            return k
+        if self._fused_shape(op) is not None:
+            return 1
+        if k == 0:
+            return 0
+        return 1 if self.fused_level else k
+
+    def _bump(self, op: LevelOp, host: bool = False) -> None:
         key = (op.kind, op.level)
         self.level_execs[key] = self.level_execs.get(key, 0) + 1
+        self.stats["level_kernel_dispatches"] += \
+            self._level_dispatches(op, host)
 
     # ------------------------------------------------------------------ cache
     def _executable(self, key: tuple, build: Callable) -> Callable:
@@ -431,6 +462,30 @@ class WaveRunner:
         return keep_of
 
     @staticmethod
+    def _stack_refs(g, get, caps: dict, refs: tuple[int, ...]):
+        """Gather the k reference neighbor streams and stack them into the
+        fused kernel's (k, B, cap) operand; refs gathered at smaller degree
+        buckets are SENTINEL-padded to the widest (padding keeps each row
+        sorted, so every ref's tile schedule stays valid)."""
+        capmax = max(caps[j] for j in refs)
+        rows = []
+        for j in refs:
+            r, _ = padded_rows(g, get[j], caps[j])
+            if caps[j] < capmax:
+                r = jnp.pad(r, ((0, 0), (0, capmax - caps[j])),
+                            constant_values=SENTINEL)
+            rows.append(r)
+        return jnp.stack(rows)
+
+    @staticmethod
+    def _excl_vals(op: LevelOp, get):
+        """Per-row injectivity values for the fused kernels' excludes
+        operand (None when the level declares none)."""
+        if not op.exclude:
+            return None
+        return jnp.stack([get[e] for e in op.exclude], axis=1)
+
+    @staticmethod
     def _min_ub(op: LevelOp, get):
         ub = get[op.ub[0]]
         for u in op.ub[1:]:
@@ -475,6 +530,9 @@ class WaveRunner:
         caps = dict(caps_sig)
         fused = self._fused_shape(op)
         keep_of = self._mask_ops(op, caps)
+        refs = op.inter + op.sub
+        pol = (1,) * len(op.inter) + (0,) * len(op.sub)
+        use_xlevel = fused is None and self.fused_level
 
         def build():
             @jax.jit
@@ -489,6 +547,14 @@ class WaveRunner:
                     nbr, _ = padded_rows(g, get[ref], caps[ref])
                     cfun = xinter_count if fused == "inter" else xsub_count
                     counts = cfun(base, nbr, ub, backend=backend, lbounds=lb)
+                elif use_xlevel:
+                    ub = self._ub_vec(op, get, n, base.shape[0])
+                    lb = self._max_lb(op, get) if op.lb else None
+                    bs = self._stack_refs(g, get, caps, refs) if refs \
+                        else None
+                    counts = xlevel_count(base, bs, pol, ub, backend=backend,
+                                          lbounds=lb,
+                                          excludes=self._excl_vals(op, get))
                 else:
                     counts = jnp.sum(keep_of(g, base, get, n), axis=1,
                                      dtype=jnp.int32)
@@ -499,23 +565,30 @@ class WaveRunner:
                 return jnp.stack([jnp.sum(counts >> 16, dtype=jnp.int32),
                                   jnp.sum(counts & 0xFFFF, dtype=jnp.int32)])
             return fn
-        return self._executable(("pcount", op, caps_sig, cap_base), build)
+        return self._executable(
+            ("pcount", op, caps_sig, cap_base, self.fused_level), build)
 
     def _survivor_core(self, op: LevelOp, caps: dict, out_cap: int,
                        out_items: int):
         """Traced core shared by expand/emit: survivors -> compacted items.
 
-        Fast path: a single INTER/SUB level is one fused
-        ``xinter_compact``/``xsub_compact`` dispatch — the per-row bound
-        vector (``_ub_vec``) folds the declared upper bounds, the live mask
-        and any forest residuals into the bound operand (bound 0 kills dead
-        rows inside the kernel), and lower bounds ride ``lbounds``; otherwise
-        the general mark composition feeds the same masked-sort +
-        ``batch_compact_items`` epilogue.
+        Fast paths: a single INTER/SUB level is one fused
+        ``xinter_compact``/``xsub_compact`` dispatch; a general level (k
+        INTER/SUB refs, injectivity excludes) is one fused k-operand
+        ``xlevel_compact`` dispatch. In both, the per-row bound vector
+        (``_ub_vec``) folds the declared upper bounds, the live mask and any
+        forest residuals into the bound operand (bound 0 kills dead rows
+        inside the kernel) and lower bounds ride ``lbounds``. The
+        ``fused_level=False`` fallback composes one mark per ref; every
+        path's epilogue is the O(B·cap) ``batch_compact_scan`` prefix-sum
+        scatter (no masked sort anywhere).
         """
         backend = self.backend
         fused = self._fused_shape(op)
         keep_of = self._mask_ops(op, caps)
+        refs = op.inter + op.sub
+        pol = (1,) * len(op.inter) + (0,) * len(op.sub)
+        use_xlevel = fused is None and self.fused_level
 
         def core(g, get, base, n):
             if fused:
@@ -527,13 +600,18 @@ class WaveRunner:
                 rows2, _, src, verts, total, maxc = cfun(
                     base, nbr, ub, out_cap=out_cap, out_items=out_items,
                     backend=backend, lbounds=lb)
+            elif use_xlevel:
+                ub = self._ub_vec(op, get, n, base.shape[0])
+                lb = self._max_lb(op, get) if op.lb else None
+                bs = self._stack_refs(g, get, caps, refs) if refs else None
+                rows2, _, src, verts, total, maxc = xlevel_compact(
+                    base, bs, pol, ub, out_cap=out_cap, out_items=out_items,
+                    backend=backend, lbounds=lb,
+                    excludes=self._excl_vals(op, get))
             else:
                 keep = keep_of(g, base, get, n)
-                masked = jnp.where(keep, base, SENTINEL)
-                rows2 = jnp.sort(masked, axis=1)[:, :out_cap]
-                counts = jnp.sum(keep, axis=1, dtype=jnp.int32)
-                src, verts, total, maxc = batch_compact_items(
-                    rows2, counts, out_items)
+                rows2, _, src, verts, total, maxc = batch_compact_scan(
+                    base, keep, out_cap, out_items)
             return rows2, src, verts, total, maxc
         return core
 
@@ -563,7 +641,8 @@ class WaveRunner:
                 return rows2, src, verts, jnp.stack(metas)
             return fn
         return self._executable(
-            ("pexpand", op, caps_sig, cap_base, out_cap, out_items), build)
+            ("pexpand", op, caps_sig, cap_base, out_cap, out_items,
+             self.fused_level), build)
 
     def _plan_expand_host_fn(self, op: LevelOp, caps_sig: tuple,
                              cap_base: int, out_cap: int):
@@ -608,7 +687,8 @@ class WaveRunner:
                 return jnp.stack(cols_out, axis=1), total
             return fn
         return self._executable(
-            ("pemit", op, caps_sig, cap_base, out_cap, out_items), build)
+            ("pemit", op, caps_sig, cap_base, out_cap, out_items,
+             self.fused_level), build)
 
     def _plan_chunk_fn(self, op: LevelOp, b: int, out_cap: int, cap2: int,
                        chunk: int):
@@ -825,7 +905,7 @@ class WaveRunner:
 
     def _plan_emit(self, op, caps_sig, cap_base, out_cap, out_items, cols,
                    vals, carry_in, n) -> list:
-        self._bump(op)
+        self._bump(op, host=not self.device_compact)
         if self.device_compact:
             fn = self._plan_emit_fn(op, caps_sig, cap_base, out_cap,
                                     out_items)
@@ -903,8 +983,9 @@ class WaveRunner:
         """Per-branch worklist pack: drop items failing a child branch's
         residuals *before* chunking, so a branch that shared a relaxed
         ancestor processes exactly the items its independent plan would
-        (order-preserving masked sort — the ``batch_compact_items`` trick on
-        item indices). Returns (packing fn, value columns it consumes)."""
+        (order-preserving prefix-sum scatter over the item indices —
+        ``compact_indices_scan``, O(items) instead of the index sort's
+        O(items·log)). Returns (packing fn, value columns it consumes)."""
         refs = tuple(sorted({c for _, i, j in residual for c in (i, j)
                              if c < level}))
 
@@ -920,12 +1001,10 @@ class WaveRunner:
                 for kind, i, j in residual:
                     ok = ok & ((val(i) < val(j)) if kind == "lt"
                                else (val(i) != val(j)))
-                order = jnp.sort(jnp.where(ok, idx, SENTINEL))
-                tot = jnp.sum(ok, dtype=jnp.int32)
+                order, tot = compact_indices_scan(ok)
                 live = idx < tot
-                safe = jnp.where(live, order, 0)
-                return src[safe], \
-                    jnp.where(live, verts[safe], 0).astype(jnp.int32), tot
+                return src[order], \
+                    jnp.where(live, verts[order], 0).astype(jnp.int32), tot
             return fn
         return self._executable(("rpack", level, residual, out_items),
                                 build), refs
@@ -934,7 +1013,7 @@ class WaveRunner:
                             vals, carry_in, n):
         """Oracle twin of ``_expand_chunks_device``: same masks, np.nonzero
         compaction + re-upload; same (cols2, caps2, carry2, vch, m) yield."""
-        self._bump(op)
+        self._bump(op, host=True)
         hfn = self._plan_expand_host_fn(op, caps_sig, cap_base, out_cap)
         rows2, counts2 = hfn(self.g, vals, carry_in, n)
         wave, ii = compact(np.asarray(rows2), np.asarray(counts2),

@@ -29,7 +29,6 @@ speedup, Fig. 9).
 from __future__ import annotations
 
 import itertools
-from collections import defaultdict
 
 import numpy as np
 

@@ -125,7 +125,7 @@ def fsm_oracle(g: CSRGraph, labels: np.ndarray, min_support: int,
     or 'count' (the sFSM/GRAMER metric). Shares canonical keys with
     ``repro.mining.fsm`` so results are directly comparable.
     """
-    from .fsm import edge_key, wedge_key, triangle_key, star3_key, path4_key
+    from .fsm import edge_key, wedge_key, triangle_key, star3_key
 
     L = np.asarray(labels)
     indptr = np.asarray(g.indptr)

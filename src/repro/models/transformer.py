@@ -18,7 +18,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
 from typing import Any
 
 import jax
@@ -27,7 +26,7 @@ import jax.numpy as jnp
 from repro.distributed.sharding import Axes, constrain
 from . import layers as L
 from .layers import AttnConfig, MLAConfig, ParamBuilder, apply_rope
-from .mamba import MambaConfig, mamba_apply, mamba_decode, mamba_init, mamba_init_state
+from .mamba import MambaConfig, mamba_apply, mamba_decode, mamba_init
 from .moe import MoEConfig, moe_apply, moe_init
 from .rwkv import (RWKVConfig, rwkv_apply, rwkv_channel_apply,
                    rwkv_channel_init, rwkv_decode, rwkv_init)

@@ -23,7 +23,6 @@ import time
 import jax
 import numpy as np
 
-from repro.distributed.sharding import shard_params_tree
 
 
 def _flatten_with_paths(tree):

@@ -16,7 +16,6 @@ No optax in this container — implemented from scratch.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

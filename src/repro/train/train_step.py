@@ -7,17 +7,15 @@ compressed all-reduce (distributed/compression.py).
 """
 from __future__ import annotations
 
-import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import (DEFAULT_RULES, ShardingRules,
-                                        input_sharding, mesh_context,
+                                        mesh_context,
                                         named_sharding, shard_params_tree,
                                         Axes)
-from .optimizer import OptConfig, adamw_init, adamw_update, opt_state_shardings
+from .optimizer import OptConfig, adamw_update, opt_state_shardings
 
 
 def lr_schedule(step, base_lr: float, warmup: int = 100,

@@ -14,12 +14,11 @@ Layers:
     hypothesis-free twin): any batch of random valid patterns fused into a
     forest counts exactly what the plans count independently.
 """
-import itertools
 
 import numpy as np
 import pytest
 
-from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from _hypothesis_compat import given, settings, st
 
 from repro.graph import build_csr
 from repro.graph.generators import clique_planted, erdos_renyi, powerlaw_cluster

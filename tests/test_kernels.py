@@ -189,6 +189,174 @@ def test_tile_schedule_skips_tiles_below_lower_bound():
     assert skipped > 0          # the sweep actually exercised the skip
 
 
+# ---------------------------------------------------------------------------
+# fused multi-operand level kernel + prefix-scan compaction
+# ---------------------------------------------------------------------------
+
+
+def _level_bruteforce(a, bs, pol, ub, lb, excl):
+    """Set-algebra oracle for the k-operand level keep/count semantics."""
+    counts = []
+    for i in range(a.shape[0]):
+        banned = set(excl[i].tolist()) if excl is not None else set()
+        n = 0
+        for x in a[i]:
+            if x == SENTINEL or not (lb[i] < x < ub[i]) or int(x) in banned:
+                continue
+            ok = True
+            for r, p in enumerate(pol):
+                row = set(bs[r, i][bs[r, i] != SENTINEL].tolist())
+                ok &= (int(x) in row) if p else (int(x) not in row)
+            n += ok
+        counts.append(n)
+    return counts
+
+
+@pytest.mark.parametrize("pol", [(1,), (0,), (1, 0), (1, 1), (0, 0),
+                                 (1, 1, 0)])
+def test_xlevel_count_pallas_matches_xla_and_bruteforce(pol):
+    a = jnp.asarray(make_rows(6, 256, hi=1200))
+    bs = jnp.stack([jnp.asarray(make_rows(6, 128, hi=1200)) for _ in pol])
+    ub = jnp.asarray(RNG.choice([SENTINEL, 300, 900, 0], size=6)
+                     .astype(np.int32))       # 0 = bound-0 dead row
+    lb = jnp.asarray(RNG.choice([-1, 100, 600], size=6).astype(np.int32))
+    ex = jnp.asarray(RNG.integers(0, 1200, (6, 2)).astype(np.int32))
+    got_p = np.asarray(ops.xlevel_count(a, bs, pol, ub, backend="pallas",
+                                        lbounds=lb, excludes=ex))
+    got_x = np.asarray(ops.xlevel_count(a, bs, pol, ub, backend="xla",
+                                        lbounds=lb, excludes=ex))
+    want = _level_bruteforce(np.asarray(a), np.asarray(bs), pol,
+                             np.asarray(ub), np.asarray(lb), np.asarray(ex))
+    np.testing.assert_array_equal(got_p, got_x)
+    np.testing.assert_array_equal(got_p, want)
+
+
+@pytest.mark.parametrize("pol", [(1, 0), (1, 1), (0, 0)])
+def test_xlevel_compact_pallas_matches_xla(pol):
+    a = jnp.asarray(make_rows(6, 256, hi=800))
+    bs = jnp.stack([jnp.asarray(make_rows(6, 128, hi=800)) for _ in pol])
+    ub = jnp.asarray(RNG.integers(0, 800, 6).astype(np.int32))
+    lb = jnp.asarray(RNG.choice([-1, 200], size=6).astype(np.int32))
+    outs_p = ops.xlevel_compact(a, bs, pol, ub, out_cap=256, out_items=2048,
+                                backend="pallas", lbounds=lb)
+    outs_x = ops.xlevel_compact(a, bs, pol, ub, out_cap=256, out_items=2048,
+                                backend="xla", lbounds=lb)
+    for got, want in zip(outs_p, outs_x):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_xlevel_k1_degenerates_to_single_op_paths():
+    """pol=(1,)/(0,) must reproduce the existing fused single-op entry
+    points exactly — same counts, same compacted 6-tuple."""
+    a = jnp.asarray(make_rows(6, 256, hi=700))
+    b = jnp.asarray(make_rows(6, 128, hi=700))
+    ub = jnp.asarray(RNG.integers(0, 700, 6).astype(np.int32))
+    lb = jnp.asarray(RNG.choice([-1, 150], size=6).astype(np.int32))
+    bs = b[None]
+    for backend in ("pallas", "xla"):
+        np.testing.assert_array_equal(
+            np.asarray(ops.xlevel_count(a, bs, (1,), ub, backend=backend,
+                                        lbounds=lb)),
+            np.asarray(ops.xinter_count(a, b, ub, backend=backend,
+                                        lbounds=lb)))
+        np.testing.assert_array_equal(
+            np.asarray(ops.xlevel_count(a, bs, (0,), ub, backend=backend,
+                                        lbounds=lb)),
+            np.asarray(ops.xsub_count(a, b, ub, backend=backend,
+                                      lbounds=lb)))
+        got = ops.xlevel_compact(a, bs, (1,), ub, out_cap=128,
+                                 out_items=1024, backend=backend, lbounds=lb)
+        want = ops.xinter_compact(a, b, ub, out_cap=128, out_items=1024,
+                                  backend=backend, lbounds=lb)
+        for o_g, o_w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(o_g), np.asarray(o_w))
+        got = ops.xlevel_compact(a, bs, (0,), ub, out_cap=256,
+                                 out_items=2048, backend=backend, lbounds=lb)
+        want = ops.xsub_compact(a, b, ub, out_cap=256, out_items=2048,
+                                backend=backend, lbounds=lb)
+        for o_g, o_w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(o_g), np.asarray(o_w))
+
+
+def test_xlevel_bound0_and_empty_worklists():
+    """bound-0 rows (forest residual kills / padding items) and all-sentinel
+    worklists must produce zero counts and no survivors on both backends."""
+    a_live = jnp.asarray(make_rows(4, 128, empty_prob=0.0))
+    a_dead = jnp.full((4, 128), SENTINEL, jnp.int32)
+    bs = jnp.stack([a_live, jnp.asarray(make_rows(4, 128))])
+    zero = jnp.zeros((4,), jnp.int32)
+    for backend in ("pallas", "xla"):
+        np.testing.assert_array_equal(
+            np.asarray(ops.xlevel_count(a_live, bs, (1, 0), zero,
+                                        backend=backend)), 0)
+        np.testing.assert_array_equal(
+            np.asarray(ops.xlevel_count(a_dead, bs, (1, 0), backend=backend)),
+            0)
+        rows, counts, src, verts, total, maxc = ops.xlevel_compact(
+            a_dead, bs, (1, 0), out_cap=128, out_items=512, backend=backend)
+        assert int(total) == 0 and int(maxc) == 0
+        assert np.all(np.asarray(rows) == SENTINEL)
+        assert np.all(np.asarray(verts) == 0) and np.all(np.asarray(src) == 0)
+
+
+def test_xlevel_pol_empty_is_pure_window():
+    """k=0 (no membership refs — star-like levels): window + excludes only,
+    identical across backends (served by the XLA form on both)."""
+    a = jnp.asarray(make_rows(5, 128, hi=500))
+    ub = jnp.asarray(RNG.integers(0, 500, 5).astype(np.int32))
+    ex = jnp.asarray(RNG.integers(0, 500, (5, 1)).astype(np.int32))
+    got = np.asarray(ops.xlevel_count(a, None, (), ub, backend="pallas",
+                                      excludes=ex))
+    want = _level_bruteforce(np.asarray(a), None, (), np.asarray(ub),
+                             np.full(5, -1), np.asarray(ex))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_batch_compact_scan_matches_masked_sort_oracle():
+    """The O(B·cap) prefix-scan scatter vs the masked-sort oracle: same
+    survivor streams, same row-major item order, same scalars."""
+    from repro.core.batch import batch_compact_items, batch_compact_scan
+    rows = jnp.asarray(make_rows(16, 256, hi=2000))
+    keep = jnp.asarray(RNG.random((16, 256)) < 0.35) & (rows != SENTINEL)
+    r2, c2, src, verts, total, maxc = batch_compact_scan(rows, keep, 256,
+                                                         16 * 256 + 128)
+    want_rows = jnp.sort(jnp.where(keep, rows, SENTINEL), axis=1)
+    np.testing.assert_array_equal(np.asarray(r2), np.asarray(want_rows))
+    np.testing.assert_array_equal(np.asarray(c2),
+                                  np.asarray(jnp.sum(keep, axis=1)))
+    src_o, verts_o, total_o, maxc_o = batch_compact_items(
+        want_rows, c2, 16 * 256 + 128)
+    np.testing.assert_array_equal(np.asarray(src), np.asarray(src_o))
+    np.testing.assert_array_equal(np.asarray(verts), np.asarray(verts_o))
+    assert int(total) == int(total_o) and int(maxc) == int(maxc_o)
+
+
+def test_compact_rows_pallas_matches_scan():
+    from repro.core.batch import batch_compact_rows
+    from repro.kernels.compact import compact_rows_pallas
+    rows = jnp.asarray(make_rows(8, 256, hi=1500))
+    keep = jnp.asarray(RNG.random((8, 256)) < 0.4) & (rows != SENTINEL)
+    for out_cap in (256, 128):
+        capped = keep & (jnp.cumsum(keep, axis=1) <= out_cap)
+        r_p, c_p = compact_rows_pallas(rows, capped, out_cap)
+        r_x, c_x = batch_compact_rows(rows, capped, out_cap)
+        np.testing.assert_array_equal(np.asarray(r_p), np.asarray(r_x))
+        np.testing.assert_array_equal(np.asarray(c_p), np.asarray(c_x))
+
+
+def test_compact_indices_scan_matches_index_sort():
+    from repro.core.batch import compact_indices_scan
+    ok = jnp.asarray(RNG.random(512) < 0.3)
+    order, tot = compact_indices_scan(ok)
+    idx = jnp.arange(512, dtype=jnp.int32)
+    want = jnp.sort(jnp.where(ok, idx, SENTINEL))
+    live = int(tot)
+    np.testing.assert_array_equal(np.asarray(order)[:live],
+                                  np.asarray(want)[:live])
+    assert np.all(np.asarray(order)[live:] == 0)
+    assert live == int(np.asarray(ok).sum())
+
+
 def test_tile_schedule_visits_are_sound():
     """Every matching key pair must fall inside the scheduled tile range."""
     from repro.kernels.intersect import TA, TB, tile_schedule

@@ -3,7 +3,7 @@ agreement (engine / InHouseAutoMine / exhaustive-check)."""
 import numpy as np
 import pytest
 
-from repro.core import make_stream, s_nestinter
+from repro.core import s_nestinter
 from repro.graph import build_csr, neighbors_stream
 from repro.graph.csr import degree_buckets, edge_list, padded_rows
 from repro.graph.generators import clique_planted, erdos_renyi, powerlaw_cluster, rmat

@@ -8,8 +8,8 @@ import pytest
 from repro.configs import ARCH_NAMES, get_arch
 from repro.models.mamba import (MambaConfig, mamba_apply, mamba_decode,
                                 mamba_init, mamba_init_state)
-from repro.models.rwkv import RWKVConfig, rwkv_apply, rwkv_decode, rwkv_init
-from repro.models.transformer import Model, param_count
+from repro.models.rwkv import RWKVConfig, rwkv_apply, rwkv_init
+from repro.models.transformer import param_count
 
 
 def _batch_for(spec, cfg, B, S):

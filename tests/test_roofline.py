@@ -2,7 +2,6 @@
 (the basis of the dry-run calibration), report math."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.roofline.analysis import (collective_bytes, model_flops_6nd,
                                      roofline_report)

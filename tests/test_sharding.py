@@ -1,13 +1,10 @@
 """Sharding rules: divisibility-aware resolution, ZeRO axes, batch specs."""
-import jax
-import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed.sharding import (Axes, DEFAULT_RULES, FSDP_RULES,
                                         abstract_mesh, logical_to_physical,
-                                        mesh_context, constrain)
-from repro.train.optimizer import OptConfig, zero_axes
+                                        constrain)
+from repro.train.optimizer import zero_axes
 
 
 def mk_mesh(shape, names):

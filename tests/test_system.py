@@ -4,7 +4,6 @@ import os
 import subprocess
 import sys
 
-import pytest
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 ENV = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))

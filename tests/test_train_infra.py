@@ -1,6 +1,5 @@
 """Optimizer, checkpoint round-trips, fault-tolerance control plane, data
 pipeline determinism, compression numerics."""
-import os
 
 import jax
 import jax.numpy as jnp
