@@ -67,6 +67,12 @@ def modeled_tpu_triangle_time(g) -> float:
     return max(t_compute, t_mem)
 
 
+def _level2_dispatches(level_execs: dict) -> int:
+    """Dynamic level-2 expand dispatches in a runner's ``level_execs``."""
+    return sum(v for (kind, lv), v in level_execs.items()
+               if kind == "expand" and lv == 2)
+
+
 def wave_throughput_report(g, k: int = 4) -> dict:
     """Before/after the device-resident rewrite: work items/s through the
     expand -> compact -> next-wave loop on a warmed executable cache.
@@ -130,19 +136,17 @@ def forest_fusion_report(g) -> dict:
     t_fus = time.time() - t0
     assert fused == indep, (fused, indep)
     st = forest.sharing_stats()
-    lvl2 = lambda ex: sum(v for (k, l), v in ex.items()
-                          if k == "expand" and l == 2)
     out = {
         "counts": dict(zip(FOUR_MOTIFS, fused)),
         "independent_s": round(t_ind, 4), "fused_s": round(t_fus, 4),
         "fusion_speedup": round(t_ind / max(t_fus, 1e-9), 2),
         # dynamic: level-2 expand dispatches actually issued per pass
-        "level2_execs_independent": lvl2(runner_i.level_execs),
-        "level2_execs_fused": lvl2(runner_f.level_execs),
+        "level2_execs_independent": _level2_dispatches(runner_i.level_execs),
+        "level2_execs_fused": _level2_dispatches(runner_f.level_execs),
         # static: trie shape (6 plan ops -> 3 shared nodes for 4-motif)
         "level2_ops_static": (
-            sum(v for (k, l), v in st["plan_ops"].items() if l == 2),
-            sum(v for (k, l), v in st["forest_ops"].items() if l == 2)),
+            sum(v for (k, lv), v in st["plan_ops"].items() if lv == 2),
+            sum(v for (k, lv), v in st["forest_ops"].items() if lv == 2)),
         "feed_passes": (st["feed_passes"]["independent"],
                         st["feed_passes"]["fused"]),
     }
@@ -193,6 +197,58 @@ def fused_level_report(g) -> dict:
     out["fused_level_speedup"] = round(
         out["per_ref"]["seconds"] / max(out["fused"]["seconds"], 1e-9), 2)
     return out
+
+
+def session_serving_report(g) -> dict:
+    """One ``Miner`` session serving the full app mix back-to-back.
+
+    Two identical passes of {T, TC, TT, 4C, fused 4M} on one session: the
+    first pass pays schedule search + tracing, the second must be pure
+    cache hits — ``retraces_second_pass`` is the session-reuse acceptance
+    counter (0, gated exactly in benchmarks/ci_gate.py) and the
+    auto-scheduled 4-motif forest stats (static level-2 nodes, dynamic
+    level-2 dispatches per pass, feed passes) are schedule facts."""
+    from repro.mining.plan import FOUR_MOTIF_SHAPES
+    from repro.mining.session import Miner
+    miner = Miner(g)
+    names = list(FOUR_MOTIF_SHAPES)
+    lvl2_4m: list = []                   # level-2 dispatches of each 4M batch
+
+    def mix():
+        out = {"T": miner.count("triangle"),
+               "TC": miner.count("three-chain"),
+               "TT": miner.count("tailed-triangle"),
+               "4C": miner.count("4-clique")}
+        before = _level2_dispatches(miner.runner.level_execs)
+        out["4M"] = dict(zip(names, miner.count_many(names)))
+        lvl2_4m.append(_level2_dispatches(miner.runner.level_execs) - before)
+        return out
+
+    t0 = time.time()
+    first = mix()
+    t_first = time.time() - t0
+    retraces_first = miner.stats["retraces"]
+    t0 = time.time()
+    second = mix()
+    t_second = time.time() - t0
+    assert first == second, (first, second)
+    st = miner.schedule(names).sharing_stats()
+    return {
+        "counts": first,
+        "first_pass_s": round(t_first, 4),
+        "second_pass_s": round(t_second, 4),
+        "warm_speedup": round(t_first / max(t_second, 1e-9), 2),
+        # the session-reuse contract: second pass builds NO new executables
+        "retraces_first_pass": retraces_first,
+        "retraces_second_pass": miner.stats["retraces"] - retraces_first,
+        "exec_cache": miner.stats["exec_cache"],
+        # auto-scheduled 4-motif forest facts (no hand-ordered patterns)
+        "level2_execs_per_pass": lvl2_4m[0],
+        "level2_nodes_static": sum(
+            v for (k, lv), v in st["forest_ops"].items()
+            if k == "expand" and lv == 2),
+        "feed_passes": st["feed_passes"]["fused"],
+    }
 
 
 def plan_overhead_report(g) -> dict:

@@ -42,10 +42,13 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 from benchmarks.bench_mining import (fused_level_report,   # noqa: E402
                                      forest_fusion_report,
                                      plan_overhead_report,
+                                     session_serving_report,
                                      wave_throughput_report)
 
 # exact app counts: small + cheap (deterministic synthetic graphs)
 COUNT_SETS = [("citeseer", 1.0), ("email-eu-core", 0.25)]
+# session-API smoke: one Miner serving the app mix twice on this set
+SESSION_SET = ("email-eu-core", 0.25)
 # wall-clock ratios + structural counters: dense enough that the timed
 # region is hundreds of ms, not noise (see stability note in tolerances)
 PERF_SET = ("email-eu-core", 1.0)
@@ -83,6 +86,23 @@ def measure() -> dict:
         exact[f"{tag}.TT"] = apps.tailed_triangle_count(g)
         exact[f"{tag}.4C"] = apps.clique_count(g, 4)
         exact[f"{tag}.4M"] = apps.four_motif(g)
+
+    # session-API smoke leg: one Miner serving the full app mix twice —
+    # exact counts, the zero-retrace reuse contract and the auto-scheduled
+    # forest counters are all schedule facts (machine-independent)
+    name, scale = SESSION_SET
+    g = get_dataset(name, scale=scale)
+    tag = f"{name}@{scale}"
+    print(f"[gate] {tag}: session serving ...", flush=True)
+    ss = session_serving_report(g)
+    exact[f"{tag}.session.counts"] = ss["counts"]
+    exact[f"{tag}.session.retraces_second_pass"] = ss["retraces_second_pass"]
+    exact[f"{tag}.session.retraces_first_pass"] = ss["retraces_first_pass"]
+    exact[f"{tag}.session.exec_cache_entries"] = ss["exec_cache"]["entries"]
+    exact[f"{tag}.session.level2_execs_per_pass"] = \
+        ss["level2_execs_per_pass"]
+    exact[f"{tag}.session.level2_nodes_static"] = ss["level2_nodes_static"]
+    exact[f"{tag}.session.feed_passes"] = ss["feed_passes"]
 
     name, scale = PERF_SET
     g = get_dataset(name, scale=scale)

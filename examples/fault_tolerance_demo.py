@@ -4,7 +4,10 @@ mesh (the elastic path).
 
   PYTHONPATH=src python examples/fault_tolerance_demo.py
 """
-import sys, os, subprocess, tempfile
+import os
+import subprocess
+import sys
+import tempfile
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
@@ -23,7 +26,8 @@ with tempfile.TemporaryDirectory() as d:
               "--batch", "2", "--seq", "32", "--ckpt", ck,
               "--ckpt-every", "4", "--inject-failure", "6"])
     assert r1.returncode == 17, "expected the injected crash"
-    tail = [l for l in r1.stdout.splitlines() if l.startswith("[train] step")]
+    tail = [ln for ln in r1.stdout.splitlines()
+            if ln.startswith("[train] step")]
     print("   last steps before crash:", tail[-2:])
 
     print("[ft] run 2: restart from the same --ckpt ...")
@@ -31,8 +35,8 @@ with tempfile.TemporaryDirectory() as d:
               "--batch", "2", "--seq", "32", "--ckpt", ck,
               "--ckpt-every", "4"])
     assert r2.returncode == 0, r2.stderr[-1000:]
-    lines = [l for l in r2.stdout.splitlines() if "restored" in l or
-             l.startswith("[train] step")]
+    lines = [ln for ln in r2.stdout.splitlines() if "restored" in ln
+             or ln.startswith("[train] step")]
     print("   " + "\n   ".join(lines[:3]))
     print("[ft] crash/restart: OK (resumed from the last checkpoint)")
 
@@ -42,7 +46,8 @@ with tempfile.TemporaryDirectory() as d:
         "import jax, jax.numpy as jnp\n"
         "from repro.configs import get_arch\n"
         "from repro.models.transformer import Model, shapes_and_axes\n"
-        "from repro.distributed.sharding import DEFAULT_RULES, make_mesh_compat, shard_params_tree\n"
+        "from repro.distributed.sharding import DEFAULT_RULES, "
+        "make_mesh_compat, shard_params_tree\n"
         "from repro.train.checkpoint import CheckpointManager\n"
         f"cm = CheckpointManager({ck!r})\n"
         "spec = get_arch('qwen3-0.6b'); model = Model(spec.smoke_config)\n"

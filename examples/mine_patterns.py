@@ -4,7 +4,8 @@ correct (MNI) vs GRAMER's broken (count) support.
 
   PYTHONPATH=src python examples/mine_patterns.py
 """
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import time
@@ -27,8 +28,12 @@ for name, eng, base in [
     ("4-clique", lambda: apps.clique_count(g, 4), lambda: baseline.clique_count(g, 4)),
     ("5-clique", lambda: apps.clique_count(g, 5), lambda: baseline.clique_count(g, 5)),
 ]:
-    t0 = time.time(); r = eng(); t1 = time.time() - t0
-    t0 = time.time(); rb = base(); t2 = time.time() - t0
+    t0 = time.time()
+    r = eng()
+    t1 = time.time() - t0
+    t0 = time.time()
+    rb = base()
+    t2 = time.time() - t0
     assert r == rb
     print(f"[mine] {name:12s} = {r!s:>14}  engine {t1:6.2f}s | scalar {t2:6.2f}s")
 

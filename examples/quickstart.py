@@ -1,15 +1,16 @@
-"""Quickstart: the IntersectX stream ISA in 60 seconds.
+"""Quickstart: the IntersectX stream ISA + the Miner session in 60 seconds.
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
 from repro.core import isa, make_stream, to_host, s_nestinter
 from repro.graph import build_csr, neighbors_stream
 from repro.graph.generators import erdos_renyi
-from repro.mining import apps
+from repro.mining.session import Miner
 
 # --- streams are first-class: Table I instructions as library calls -------
 a = make_stream([1, 3, 5, 7, 9], values=[1., 2., 3., 4., 5.])
@@ -25,9 +26,26 @@ g = build_csr(erdos_renyi(500, 3000, seed=0), 500)
 n0 = neighbors_stream(g, 0)
 print("S_NESTINTER(N(0)) =", int(s_nestinter(g, n0)))
 
-# --- the seven applications --------------------------------------------------
-print("triangles          :", apps.triangle_count(g))
-print("triangles (nested) :", apps.triangle_count_nested(g))
-print("3-chains (induced) :", apps.three_chain_count(g, induced=True))
-print("tailed triangles   :", apps.tailed_triangle_count(g))
-print("4-cliques          :", apps.clique_count(g, 4))
+# --- mining is a session: one Miner owns the graph, queries are cheap -----
+# compile (pattern -> plan), schedule (matching-order search + forest),
+# execute (device-resident waves) — every stage cached for the session.
+m = Miner(g)
+print("triangles          :", m.count("triangle"))
+print("triangles (nested) :", m.count("triangle-nested"))
+print("3-chains (induced) :", m.count("three-chain"))
+print("tailed triangles   :", m.count("tailed-triangle"))
+print("4-cliques          :", m.count("4-clique"))
+
+# the six connected 4-vertex motifs, one fused pass (shared-prefix forest
+# built by the automatic matching-order search — no hand-tuned schedules)
+names = ["4-clique", "diamond", "4-cycle", "paw", "4-path", "4-star"]
+print("4-motifs (fused)   :", dict(zip(names, m.count_many(names))))
+
+# embeddings come from the same session (emit plan, device compaction)
+print("triangle list      :", m.embeddings("triangle").shape)
+
+# repeated queries are pure cache hits: 0 retraces from here on
+before = m.stats["retraces"]
+m.count("triangle")
+m.count_many(names)
+print("retraces on repeat :", m.stats["retraces"] - before)

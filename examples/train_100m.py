@@ -5,7 +5,8 @@ step, checkpointing, NaN guard) on whatever devices exist.
 
   PYTHONPATH=src python examples/train_100m.py [--steps 300]
 """
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import argparse

@@ -1,22 +1,27 @@
 #!/usr/bin/env bash
 # Documented local tier-1 flow — the same steps CI runs
-# (.github/workflows/ci.yml), so local results match CI: dev deps first
-# (hypothesis powers the random-plan/forest property tests; without it they
-# skip and only the seeded twins run), then the suite.
+# (.github/workflows/ci.yml), so local results match CI: deps first
+# (requirements.txt bakes hypothesis in — it powers the random-plan/forest
+# property tests), then the suite with TIER1_REQUIRE_DEPS=1, which makes
+# tests/conftest.py FAIL collection if any dependency is missing — zero
+# tests may skip for a missing dependency.
 #
-# A failed dev-deps install aborts (CI must never green with the property
+# A failed deps install aborts (CI must never green with the property
 # tests silently skipped). Offline machines can opt out explicitly:
 #   TIER1_ALLOW_OFFLINE=1 scripts/tier1.sh
 set -euo pipefail
 cd "$(dirname "$0")/.."
-if ! python -m pip install -q -r requirements-dev.txt; then
+require_deps=1
+if ! python -m pip install -q -r requirements.txt; then
     if [ "${TIER1_ALLOW_OFFLINE:-0}" = "1" ]; then
-        echo "[tier1] WARNING: dev-deps install failed (offline) —" \
+        echo "[tier1] WARNING: deps install failed (offline) —" \
              "hypothesis property tests will be SKIPPED (seeded twins run)"
+        require_deps=0
     else
-        echo "[tier1] ERROR: dev-deps install failed; the property tests" \
+        echo "[tier1] ERROR: deps install failed; the property tests" \
              "would silently skip. Set TIER1_ALLOW_OFFLINE=1 to run anyway." >&2
         exit 1
     fi
 fi
-PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
+TIER1_REQUIRE_DEPS="$require_deps" \
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"

@@ -1,5 +1,6 @@
 """IntersectX stream ISA: Stream pytree + Table-I ops + batched/nested forms."""
-from .stream import LANE, SENTINEL, Stream, StreamTable, empty_stream, make_stream, round_capacity, stream_from_slice, to_host
+from .stream import (LANE, SENTINEL, Stream, StreamTable, empty_stream,
+                     make_stream, round_capacity, stream_from_slice, to_host)
 from . import isa
 from .batch import batch_inter, batch_inter_count, batch_sub, batch_sub_count, batch_vinter
 from .nested import s_nestinter

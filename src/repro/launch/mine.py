@@ -1,8 +1,13 @@
-"""Graph mining driver — the paper's workload, on the stream engine.
+"""Graph mining driver — one ``Miner`` session serving the paper's workload.
 
   PYTHONPATH=src python -m repro.launch.mine --app T --dataset wiki-vote
   PYTHONPATH=src python -m repro.launch.mine --app FSM --dataset citeseer \\
       --support 100
+
+The driver is a thin consumer of the session API: it builds a single
+``mining.session.Miner`` for the dataset and issues every query against
+it, so schedules and executables are derived once per invocation
+(``--session-stats`` prints the cache counters that prove it).
 """
 from __future__ import annotations
 
@@ -14,59 +19,70 @@ import numpy as np
 from repro.distributed.fault_tolerance import balanced_vertex_partition
 from repro.graph import get_dataset
 from repro.graph.datasets import DATASETS, dataset_stats
-from repro.mining import apps, baseline, exhaustive
+from repro.mining import baseline, exhaustive
 from repro.mining.fsm import fsm, random_labels, sfsm
+from repro.mining.plan import FOUR_MOTIF_SHAPES, TRIANGLE, \
+    THREE_CHAIN_INDUCED
+from repro.mining.session import Miner
 
-from repro.mining.forest import build_forest
-from repro.mining.plan import FOUR_MOTIFS, compile_pattern
-
-# per-pattern 4-motif codes (each one compiled WavePlan, zero engine code)
+# per-pattern 4-motif codes (auto-scheduled Motif queries, zero engine code)
 PATTERN_APPS = {"DM": "diamond", "CY": "4-cycle", "PW": "paw",
                 "P4": "4-path", "S4": "4-star"}
-# F4M / F3M: the motif batches through the PlanForest scheduler, with the
-# static sharing report printed (4M / TM also fuse — these codes force the
-# verbose forest path and honour --independent for A/B runs)
+# F4M / F3M: the motif batches through the session's schedule stage, with
+# the static sharing report printed (4M / TM also fuse — these codes force
+# the verbose forest path and honour --independent for A/B runs)
 APPS = ["T", "TS", "TC", "TT", "TM", "4C", "5C", "4M", "F3M", "F4M",
         *PATTERN_APPS, "FSM", "sFSM"]
 
+THREE_MOTIF_QUERIES = (TRIANGLE, THREE_CHAIN_INDUCED)
 
-def run_app(app: str, g, support: int = 100, labels=None,
+
+def run_app(app: str, miner: Miner, support: int = 100, labels=None,
             fused: bool = True):
+    """Serve one app code from the session."""
     if app == "T":
-        return apps.triangle_count(g)
+        return miner.count("triangle")
     if app == "TS":
-        return apps.triangle_count_nested(g)
+        return miner.count("triangle-nested")
     if app == "TC":
-        return apps.three_chain_count(g, induced=True)
+        return miner.count("three-chain")
     if app == "TT":
-        return apps.tailed_triangle_count(g)
+        return miner.count("tailed-triangle")
     if app in ("TM", "F3M"):
-        return apps.three_motif(g, fused=fused)
+        if fused:
+            t, chains = miner.count_many(list(THREE_MOTIF_QUERIES))
+        else:
+            t = miner.count(TRIANGLE)
+            chains = miner.count(THREE_CHAIN_INDUCED)
+        return {"triangle": t, "chain": chains}
     if app == "4C":
-        return apps.clique_count(g, 4)
+        return miner.count("4-clique")
     if app == "5C":
-        return apps.clique_count(g, 5)
+        return miner.count("5-clique")
     if app in ("4M", "F4M"):
-        return apps.four_motif(g, fused=fused)
+        names = list(FOUR_MOTIF_SHAPES)
+        if fused:
+            return dict(zip(names, miner.count_many(names)))
+        return {name: miner.count(name) for name in names}
     if app in PATTERN_APPS:
-        return apps.pattern_count(g, FOUR_MOTIFS[PATTERN_APPS[app]])
+        return miner.count(PATTERN_APPS[app])
     if app in ("FSM", "sFSM"):
         fn = fsm if app == "FSM" else sfsm
-        res = fn(g, labels, support)
+        res = fn(miner.graph, labels, support, miner=miner)
         return {"frequent_patterns": len(res)}
     raise ValueError(app)
 
 
-def _forest_report(app: str) -> str:
-    """Static sharing stats for the F3M/F4M batches."""
-    pats = FOUR_MOTIFS.values() if app == "F4M" else \
-        (apps.TRIANGLE, apps.THREE_CHAIN_INDUCED)
-    forest = build_forest([compile_pattern(p) for p in pats])
-    st = forest.sharing_stats()
+def _forest_report(app: str, miner: Miner) -> str:
+    """Static sharing stats for the F3M/F4M batches (the session's
+    schedule stage: auto matching-order search + forest merge)."""
+    queries = list(FOUR_MOTIF_SHAPES) if app == "F4M" \
+        else list(THREE_MOTIF_QUERIES)
+    st = miner.schedule(queries).sharing_stats()
     levels = sorted({lv for _, lv in st["plan_ops"]})
     per_level = " ".join(
-        f"L{lv}:{sum(v for (k, l), v in st['plan_ops'].items() if l == lv)}"
-        f"->{sum(v for (k, l), v in st['forest_ops'].items() if l == lv)}"
+        f"L{lv}:{sum(v for (k, l2), v in st['plan_ops'].items() if l2 == lv)}"
+        f"->{sum(v for (k, l2), v in st['forest_ops'].items() if l2 == lv)}"
         for lv in levels)
     return (f"{st['plans']} plans, ops {per_level}, feed passes "
             f"{st['feed_passes']['independent']}->{st['feed_passes']['fused']}")
@@ -103,28 +119,31 @@ def main(argv=None):
                     help="also run GRAMER-style exhaustive check for PATTERN")
     ap.add_argument("--partitions", type=int, default=0,
                     help="print degree-balanced partition stats (straggler)")
+    ap.add_argument("--session-stats", action="store_true",
+                    help="print the session's cache/retrace counters")
     args = ap.parse_args(argv)
 
     g = get_dataset(args.dataset, scale=args.scale)
     print(f"[mine] {args.dataset} x{args.scale}: {dataset_stats(g)}")
+    miner = Miner(g)
     labels = random_labels(g.num_vertices, args.labels, seed=1) \
         if args.app in ("FSM", "sFSM") else None
     if args.app in ("F3M", "F4M"):
-        print(f"[mine] forest: {_forest_report(args.app)}")
+        print(f"[mine] forest: {_forest_report(args.app, miner)}")
     t0 = time.time()
-    res = run_app(args.app, g, args.support, labels,
+    res = run_app(args.app, miner, args.support, labels,
                   fused=not args.independent)
     dt = time.time() - t0
     print(f"[mine] {args.app} = {res}  ({dt:.2f}s, IntersectX engine)")
     if args.check and args.app in ("F3M", "F4M"):
-        indep = run_app(args.app, g, args.support, labels, fused=False)
+        indep = run_app(args.app, miner, args.support, labels, fused=False)
         assert res == indep, (res, indep)
-        print(f"[mine] fused == independent per-plan counts OK")
+        print("[mine] fused == independent per-plan counts OK")
         if args.app == "F4M" and g.num_vertices <= 256:
             from repro.mining import reference
             census = reference.four_motif_counts(g)
             assert res == census, (res, census)
-            print(f"[mine] fused == brute-force census OK")
+            print("[mine] fused == brute-force census OK")
     if args.baseline and args.app in ("T", "TC", "TT", "TM", "4C", "5C"):
         t0 = time.time()
         rb = run_baseline(args.app, g)
@@ -144,6 +163,13 @@ def main(argv=None):
         loads = np.bincount(assign, weights=cost, minlength=args.partitions)
         print(f"[mine] {args.partitions} partitions: load imbalance "
               f"max/mean = {loads.max()/loads.mean():.3f}")
+    if args.session_stats:
+        st = miner.stats
+        print(f"[mine] session: {st['queries']} queries, "
+              f"exec cache {st['exec_cache']['hits']} hits / "
+              f"{st['exec_cache']['misses']} traces, "
+              f"plan cache {st['plan_hits']}/{st['plan_misses']}, "
+              f"schedule cache {st['schedule_hits']}/{st['schedule_misses']}")
 
 
 if __name__ == "__main__":

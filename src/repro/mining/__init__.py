@@ -5,6 +5,7 @@ from .apps import (
     pattern_embeddings,
     pattern_set_count,
     pattern_set_run,
+    shared_session,
     tailed_triangle_count,
     three_chain_count,
     three_motif,
@@ -12,8 +13,10 @@ from .apps import (
     triangle_count_nested,
     triangle_list,
 )
-from .plan import FOUR_MOTIFS, Pattern, WavePlan, compile_pattern, pattern
-from .forest import PlanForest, build_forest
+from .plan import (FOUR_MOTIF_SHAPES, FOUR_MOTIFS, Motif, Pattern, WavePlan,
+                   compile_pattern, motif, pattern)
+from .forest import PlanForest, build_forest, schedule_patterns
+from .session import ExecutableCache, Miner, MinerConfig
 from .fsm import fsm, sfsm
 from .exhaustive import exhaustive_count
 from . import reference
@@ -22,8 +25,10 @@ __all__ = [
     "triangle_count", "triangle_count_nested", "three_chain_count",
     "tailed_triangle_count", "three_motif", "clique_count", "four_motif",
     "pattern_count", "pattern_embeddings", "pattern_set_count",
-    "pattern_set_run", "triangle_list",
-    "Pattern", "WavePlan", "compile_pattern", "pattern", "FOUR_MOTIFS",
-    "PlanForest", "build_forest",
+    "pattern_set_run", "triangle_list", "shared_session",
+    "Motif", "Pattern", "WavePlan", "compile_pattern", "motif", "pattern",
+    "FOUR_MOTIFS", "FOUR_MOTIF_SHAPES",
+    "PlanForest", "build_forest", "schedule_patterns",
+    "ExecutableCache", "Miner", "MinerConfig",
     "fsm", "sfsm", "exhaustive_count", "reference",
 ]

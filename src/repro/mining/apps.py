@@ -1,20 +1,26 @@
 """The paper's mining applications (§VI-B) + 4-motif mining, as patterns.
 
-Every app is now a *declarative pattern definition* compiled by
-``mining.plan`` and interpreted by ``mining.engine.WaveRunner.run`` — no app
-has engine code of its own. Multi-pattern apps (3-motif, 4-motif, the FSM
-feed) additionally fuse their batches through the ``mining.forest``
-scheduler (``pattern_set_count``/``pattern_set_run``): one edge-feed pass
-per orientation, shared canonical-prefix expands, bit-identical counts.
+Every function here is now a **deprecated thin shim** over the session API
+(``mining.session.Miner``): each delegates to a module-level per-graph
+session (``shared_session``), so the old one-shot surface keeps its exact
+behaviour for existing tests/benchmarks while gaining session semantics —
+the graph is staged to device once, executables are cached across calls,
+and multi-pattern batches are scheduled by the automatic matching-order
+search. New code should hold a ``Miner`` directly:
+
+    from repro.mining.session import Miner
+    m = Miner(g)
+    m.count("triangle"); m.count_many(["diamond", "paw"]) ...
+
 The only hand-written paths left are genuine closed forms (non-induced
 three-chain = Σ C(deg, 2)) and the host ``triangle_list_host`` oracle the
 device enumeration is property-tested against.
 
 All counts are exact and each embedding is counted once (symmetry breaking
-via the compiled upper/lower-bound restrictions, Fig. 2b's R3 operand),
-except the explicitly paper-faithful *nested* variants which reproduce the
-Fig. 4a unbounded S_NESTINTER dataflow and divide by the automorphism count
-(``Pattern.div``).
+via compiled upper/lower-bound restrictions, Fig. 2b's R3 operand), except
+the explicitly paper-faithful *nested* variants which reproduce the
+Fig. 4a unbounded S_NESTINTER dataflow and divide by the automorphism
+count (``Pattern.div``).
 
 Definitions (verified against brute-force oracles in tests):
   triangle           unordered vertex triples, mutually adjacent
@@ -28,71 +34,89 @@ Definitions (verified against brute-force oracles in tests):
 """
 from __future__ import annotations
 
+import weakref
+from collections import OrderedDict
+
 import numpy as np
 
 from repro.graph.csr import CSRGraph
-from .engine import Wave, WaveRunner, choose_chunk, compact, expand, \
-    half_edges, pair_wave
-from .forest import PlanForest, build_forest
-from .plan import (FOUR_MOTIFS, Pattern, TAILED_TRIANGLE,
-                   THREE_CHAIN_INDUCED, TRIANGLE, TRIANGLE_NESTED, WavePlan,
-                   clique_pattern, compile_pattern)
+from .engine import Wave, choose_chunk, compact, expand, half_edges, \
+    pair_wave
+from .forest import PlanForest
+from .plan import FOUR_MOTIF_SHAPES, Pattern, TAILED_TRIANGLE, \
+    THREE_CHAIN_INDUCED, TRIANGLE, TRIANGLE_NESTED, WavePlan, \
+    clique_pattern, compile_pattern
+from .session import Miner
+
+# ---------------------------------------------------------------------------
+# the module-level session pool backing the deprecated one-shot surface
+# ---------------------------------------------------------------------------
+
+# (id(graph), chunk, device_compact) -> (weakref to graph, Miner). The
+# weakref guards against id() reuse after the original graph is collected;
+# a small LRU bounds how many sessions (device stagings + exec caches) the
+# shim surface keeps alive at once.
+_SESSION_POOL: OrderedDict = OrderedDict()
+_SESSION_POOL_CAP = 8
+
+
+def shared_session(g: CSRGraph, chunk: int | None = None,
+                   device_compact: bool = True) -> Miner:
+    """Get-or-create the module-level ``Miner`` for (graph, config).
+
+    This is what makes the legacy free functions sessions in disguise:
+    every call over the same graph and config lands on one ``Miner``, so
+    graph staging, compiled plans, schedules and executables are all
+    reused across calls."""
+    key = (id(g), chunk, device_compact)
+    ent = _SESSION_POOL.get(key)
+    if ent is not None and ent[0]() is g:
+        _SESSION_POOL.move_to_end(key)
+        return ent[1]
+    miner = Miner(g, chunk=chunk, device_compact=device_compact)
+    _SESSION_POOL[key] = (weakref.ref(g), miner)
+    while len(_SESSION_POOL) > _SESSION_POOL_CAP:
+        _SESSION_POOL.popitem(last=False)
+    return miner
 
 
 def pattern_count(g: CSRGraph, pat: Pattern, chunk: int | None = None,
                   device_compact: bool = True) -> int:
-    """Count embeddings of any declarative ``Pattern`` on the wave engine."""
-    runner = WaveRunner(g, chunk, device_compact=device_compact)
-    return runner.run(compile_pattern(pat))
+    """Deprecated shim: ``Miner.count`` on the shared session."""
+    return shared_session(g, chunk, device_compact).count(pat)
 
 
 def pattern_embeddings(g: CSRGraph, pat: Pattern, chunk: int | None = None,
                        device_compact: bool = True) -> np.ndarray:
-    """Enumerate embeddings of ``pat`` as an (N, k) matrix (emit plan)."""
-    runner = WaveRunner(g, chunk, device_compact=device_compact)
-    return runner.run(compile_pattern(pat, emit=True))
-
-
-# built tries memoised on the batch's canonical plan keys: repeated calls
-# (four_motif per dataset sweep, FSM's per-level feeds) skip the merge
-_FOREST_CACHE: dict[tuple, PlanForest] = {}
-
-
-def _forest_for(plans: list[WavePlan]) -> PlanForest:
-    key = tuple(p.canonical_key() for p in plans)
-    forest = _FOREST_CACHE.get(key)
-    if forest is None:
-        forest = _FOREST_CACHE[key] = build_forest(plans)
-    return forest
+    """Deprecated shim: ``Miner.embeddings`` on the shared session."""
+    return shared_session(g, chunk, device_compact).embeddings(pat)
 
 
 def pattern_set_run(g: CSRGraph, plans: list[WavePlan] | PlanForest,
                     chunk: int | None = None,
                     device_compact: bool = True) -> list:
-    """Run a *batch* of compiled plans as one fused ``PlanForest``.
-
-    The batch shares one edge-feed pass per orientation and every
-    canonical-prefix expand (``mining.forest``); results come back per plan,
-    in order — ints for counting plans, (N, k) matrices for emit plans —
-    bit-identical to running each plan through ``WaveRunner.run`` alone."""
-    forest = plans if isinstance(plans, PlanForest) else _forest_for(plans)
-    runner = WaveRunner(g, chunk, device_compact=device_compact)
-    return runner.run_set(forest)
+    """Deprecated shim: run a batch of compiled plans (or a pre-built
+    ``PlanForest``) as one fused pass on the shared session. Results come
+    back per plan, in order — ints for counting plans, (N, k) matrices for
+    emit plans — bit-identical to independent ``Miner.count`` runs."""
+    miner = shared_session(g, chunk, device_compact)
+    if isinstance(plans, PlanForest):
+        return miner.runner.run_set(plans)
+    return miner.run_plans(plans)
 
 
 def pattern_set_count(g: CSRGraph, pats: list[Pattern],
                       chunk: int | None = None,
                       device_compact: bool = True) -> list[int]:
-    """Count several declarative ``Pattern``s in one fused forest pass."""
-    return pattern_set_run(g, [compile_pattern(p) for p in pats], chunk,
-                           device_compact)
+    """Deprecated shim: ``Miner.count_many`` on the shared session."""
+    return shared_session(g, chunk, device_compact).count_many(pats)
 
 
 def triangle_count(g: CSRGraph, chunk: int | None = None,
                    device_compact: bool = True) -> int:
     """Symmetry-broken triangle counting: one bounded intersection per half
     edge (v0 > v1), bound v1 => each triangle v0 > v1 > v2 counted once."""
-    return pattern_count(g, TRIANGLE, chunk, device_compact)
+    return shared_session(g, chunk, device_compact).count(TRIANGLE)
 
 
 def triangle_count_nested(g: CSRGraph, chunk: int | None = None) -> int:
@@ -101,7 +125,7 @@ def triangle_count_nested(g: CSRGraph, chunk: int | None = None) -> int:
     The per-vertex nested instruction flattens to one unbounded intersection
     per *directed* edge — exactly the µop stream §IV-F's translator emits —
     and ``TRIANGLE_NESTED.div`` divides the automorphisms out at retire."""
-    return pattern_count(g, TRIANGLE_NESTED, chunk)
+    return shared_session(g, chunk).count(TRIANGLE_NESTED)
 
 
 def three_chain_count(g: CSRGraph, induced: bool = False,
@@ -116,25 +140,25 @@ def three_chain_count(g: CSRGraph, induced: bool = False,
     non_induced = int((deg * (deg - 1) // 2).sum())
     if not induced:
         return non_induced
-    return pattern_count(g, THREE_CHAIN_INDUCED, chunk)
+    return shared_session(g, chunk).count(THREE_CHAIN_INDUCED)
 
 
 def tailed_triangle_count(g: CSRGraph, chunk: int | None = None) -> int:
     """Fig. 2b dataflow: per directed edge (v0,v1), BoundedIntersect(N0,N1,v0)
     yields the v2 < v0 candidates; the tail level folds into the closed-form
     deg(v1) - 2 multiplier at compile time."""
-    return pattern_count(g, TAILED_TRIANGLE, chunk)
+    return shared_session(g, chunk).count(TAILED_TRIANGLE)
 
 
 def three_motif(g: CSRGraph, fused: bool = True) -> dict[str, int]:
     """3-motif mining: counts of both connected 3-vertex induced motifs.
 
-    ``fused`` routes both patterns through one ``PlanForest``
-    (``engine.run_set``) so the batch is a single scheduler invocation;
-    ``fused=False`` keeps the independent per-plan path (the baseline the
-    forest is benchmarked and property-tested against)."""
+    ``fused`` routes both patterns through one session batch (a fused
+    ``PlanForest``); ``fused=False`` keeps the independent per-plan path
+    (the baseline the forest is benchmarked and property-tested against)."""
     if fused:
-        t, chains = pattern_set_count(g, [TRIANGLE, THREE_CHAIN_INDUCED])
+        t, chains = shared_session(g).count_many(
+            [TRIANGLE, THREE_CHAIN_INDUCED])
     else:
         t = triangle_count(g)
         chains = three_chain_count(g, induced=True)
@@ -150,25 +174,25 @@ def clique_count(g: CSRGraph, k: int, chunk: int | None = None,
     through the host np.nonzero oracle."""
     if k < 3:
         raise ValueError("clique_count needs k >= 3")
-    return pattern_count(g, clique_pattern(k), chunk, device_compact)
+    return shared_session(g, chunk, device_compact).count(clique_pattern(k))
 
 
 def four_motif(g: CSRGraph, chunk: int | None = None,
                fused: bool = True) -> dict[str, int]:
-    """4-motif mining: induced counts of all six connected 4-vertex motifs,
-    each from its compiled plan — zero per-pattern engine code.
+    """4-motif mining: induced counts of all six connected 4-vertex motifs.
 
-    Default is the fused ``PlanForest`` path: the six plans collapse to
-    three shared level-2 expands over two edge-feed passes (diamond/paw/
-    4-clique share the N(v0) ∩ N(v1) wing stream, 4-cycle/4-path share
-    N(v0) \\ N(v1); see ``mining.forest``). ``fused=False`` runs the six
-    plans independently — same counts, kept as the comparison baseline."""
+    The motifs are adjacency-only shapes (``plan.FOUR_MOTIF_SHAPES``); the
+    session's schedule stage picks each one's matching order automatically
+    so the batch collapses to three shared level-2 expands over two
+    edge-feed passes. ``fused=False`` runs the same auto-scheduled patterns
+    independently — same counts, kept as the comparison baseline."""
+    miner = shared_session(g, chunk)
     if fused:
-        counts = pattern_set_count(g, list(FOUR_MOTIFS.values()), chunk)
-        return dict(zip(FOUR_MOTIFS, counts))
-    runner = WaveRunner(g, chunk)
-    return {name: runner.run(compile_pattern(p))
-            for name, p in FOUR_MOTIFS.items()}
+        counts = miner.count_many(list(FOUR_MOTIF_SHAPES))
+        return dict(zip(FOUR_MOTIF_SHAPES, counts))
+    from . import plan as P
+    return {name: miner.count(P.FOUR_MOTIFS[name])
+            for name in FOUR_MOTIF_SHAPES}
 
 
 # the FSM pattern batch: every engine-fed plan FSM's support evaluation
@@ -179,19 +203,21 @@ def four_motif(g: CSRGraph, chunk: int | None = None,
 FSM_FEED_PLANS: tuple = (compile_pattern(TRIANGLE, emit=True),)
 
 
-def fsm_pattern_feed(g: CSRGraph, chunk: int | None = None) -> list:
-    """Run the FSM engine-feed batch as one ``PlanForest`` pass; returns
-    per-plan results in ``FSM_FEED_PLANS`` order (triangle embeddings
-    first)."""
-    return pattern_set_run(g, list(FSM_FEED_PLANS), chunk)
+def fsm_pattern_feed(g: CSRGraph, chunk: int | None = None,
+                     miner: Miner | None = None) -> list:
+    """Run the FSM engine-feed batch on a session; returns per-plan results
+    in ``FSM_FEED_PLANS`` order (triangle embeddings first). ``miner``
+    reuses a caller-held session (FSM passes its own)."""
+    miner = miner or shared_session(g, chunk)
+    return miner.run_plans(list(FSM_FEED_PLANS))
 
 
 def triangle_list(g: CSRGraph, chunk: int | None = None) -> np.ndarray:
     """Enumerate all triangles as (T, 3) vertex triples (v0 > v1 > v2).
 
     Used by FSM (labelled support needs embeddings, not counts). Runs the
-    triangle *emit* plan through the forest scheduler: compaction happens on
-    device via ``ops.xinter_compact``'s src output, and only the compacted
+    triangle *emit* plan through the session: compaction happens on device
+    via ``ops.xinter_compact``'s src output, and only the compacted
     embedding matrix crosses to the host."""
     return fsm_pattern_feed(g, chunk)[0]
 

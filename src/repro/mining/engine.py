@@ -321,7 +321,8 @@ class WaveRunner:
 
     def __init__(self, g: CSRGraph, chunk: int | None = None,
                  backend: str = "auto", device_compact: bool = True,
-                 record: bool = False, fused_level: bool = True):
+                 record: bool = False, fused_level: bool = True,
+                 exec_cache=None):
         self.g = g
         # chunk <= 2^15 is the exactness envelope of the (hi, lo) int32
         # per-chunk count partials (see _plan_count_fn): a 2^15-item chunk of
@@ -332,11 +333,18 @@ class WaveRunner:
         self.device_compact = device_compact
         self.record = record
         self.fused_level = fused_level
+        # session-lifetime executable cache (mining.session.ExecutableCache):
+        # when provided, compiled executables outlive this runner — repeated
+        # queries on one Miner retrace nothing. Keys are widened with the
+        # runner config (chunk / backend / flags) so runners with different
+        # shapes never collide; None keeps the private per-runner dict.
+        self._exec_cache = exec_cache
         self.trace: list[tuple[int, np.ndarray, np.ndarray]] = []
         self._exec: dict[tuple, Callable] = {}
         self.stats = {"exec_hits": 0, "exec_misses": 0, "host_syncs": 0,
                       "device_compactions": 0, "host_compactions": 0,
-                      "items": 0, "level_kernel_dispatches": 0}
+                      "items": 0, "level_kernel_dispatches": 0,
+                      "count_rides": 0}
         # per-(kind, level) executable dispatch counts — the fusion metric:
         # a PlanForest run dispatches each shared level once where the
         # independent-plan path dispatches it once per pattern.
@@ -365,6 +373,12 @@ class WaveRunner:
 
     # ------------------------------------------------------------------ cache
     def _executable(self, key: tuple, build: Callable) -> Callable:
+        if self._exec_cache is not None:
+            key = (self.chunk, self.backend, self.device_compact,
+                   self.fused_level) + key
+            fn, fresh = self._exec_cache.get_or_build(key, build)
+            self.stats["exec_misses" if fresh else "exec_hits"] += 1
+            return fn
         fn = self._exec.get(key)
         if fn is None:
             fn = self._exec[key] = build()
@@ -597,30 +611,35 @@ class WaveRunner:
                 ref = op.inter[0] if fused == "inter" else op.sub[0]
                 nbr, _ = padded_rows(g, get[ref], caps[ref])
                 cfun = xinter_compact if fused == "inter" else xsub_compact
-                rows2, _, src, verts, total, maxc = cfun(
+                rows2, counts, src, verts, total, maxc = cfun(
                     base, nbr, ub, out_cap=out_cap, out_items=out_items,
                     backend=backend, lbounds=lb)
             elif use_xlevel:
                 ub = self._ub_vec(op, get, n, base.shape[0])
                 lb = self._max_lb(op, get) if op.lb else None
                 bs = self._stack_refs(g, get, caps, refs) if refs else None
-                rows2, _, src, verts, total, maxc = xlevel_compact(
+                rows2, counts, src, verts, total, maxc = xlevel_compact(
                     base, bs, pol, ub, out_cap=out_cap, out_items=out_items,
                     backend=backend, lbounds=lb,
                     excludes=self._excl_vals(op, get))
             else:
                 keep = keep_of(g, base, get, n)
-                rows2, _, src, verts, total, maxc = batch_compact_scan(
+                rows2, counts, src, verts, total, maxc = batch_compact_scan(
                     base, keep, out_cap, out_items)
-            return rows2, src, verts, total, maxc
+            return rows2, counts, src, verts, total, maxc
         return core
 
     def _plan_expand_fn(self, op: LevelOp, caps_sig: tuple, cap_base: int,
-                        out_cap: int, out_items: int):
+                        out_cap: int, out_items: int,
+                        want_count: bool = False):
         """Fused gather + level masks + on-device compaction + meta.
 
         meta = [total, max survivor count] + [max degree of column c over
         live items, for c in op.gather_refs] — the only host sync per level.
+        ``want_count`` (count-rides-expand) appends the survivor-count sum
+        as an exact (hi, lo) int32 pair: the partial a riding count leaf is
+        credited with, at zero extra dispatches (same envelope as
+        ``_plan_count_fn``: counts are already per-row exact).
         """
         in_cols = self._in_cols(op)
         caps = dict(caps_sig)
@@ -632,17 +651,21 @@ class WaveRunner:
                 get = dict(zip(in_cols, vals))
                 base = carry if op.use_carry else \
                     padded_rows(g, get[op.base], caps[op.base])[0]
-                rows2, src, verts, total, maxc = core(g, get, base, n)
+                rows2, counts, src, verts, total, maxc = \
+                    core(g, get, base, n)
                 live = jnp.arange(out_items, dtype=jnp.int32) < total
                 metas = [total, maxc]
                 for c in op.gather_refs:
                     cv = verts if c == op.level else get[c][src]
                     metas.append(jnp.max(jnp.where(live, g.degrees[cv], 0)))
+                if want_count:
+                    metas += [jnp.sum(counts >> 16, dtype=jnp.int32),
+                              jnp.sum(counts & 0xFFFF, dtype=jnp.int32)]
                 return rows2, src, verts, jnp.stack(metas)
             return fn
         return self._executable(
             ("pexpand", op, caps_sig, cap_base, out_cap, out_items,
-             self.fused_level), build)
+             self.fused_level, want_count), build)
 
     def _plan_expand_host_fn(self, op: LevelOp, caps_sig: tuple,
                              cap_base: int, out_cap: int):
@@ -679,7 +702,7 @@ class WaveRunner:
                 get = dict(zip(in_cols, vals))
                 base = carry if op.use_carry else \
                     padded_rows(g, get[op.base], caps[op.base])[0]
-                _, src, verts, total, _ = core(g, get, base, n)
+                _, _, src, verts, total, _ = core(g, get, base, n)
                 live = jnp.arange(out_items, dtype=jnp.int32) < total
                 cols_out = [verts if c == op.level
                             else jnp.where(live, get[c][src], 0)
@@ -823,22 +846,38 @@ class WaveRunner:
             for i in node.plans:
                 acc[i].extend(parts)
             return
+        if node.ride_plans:
+            self.stats["count_rides"] += len(node.ride_plans)
         if not self.device_compact:
+            ride_out: dict = {}
             chunks = self._expand_chunks_host(op, caps_sig, cap_base,
                                               out_cap, cols, vals, carry_in,
-                                              n)
+                                              n, ride_out=ride_out)
             for cols2, caps2, carry2, vch, m in chunks:
                 self._record(op.level + 1,
                              self._wave_repr(cols2, op.out_cols, carry2, vch),
                              vch, m)
                 for child in node.children:
                     self._forest_descend(child, cols2, caps2, carry2, m, acc)
+            part = ride_out.get("count_part")
+            if part is not None:
+                for i in node.ride_plans:
+                    acc[i].append(part)
+                # host-resident partials: no sync at finalize (see above)
+                self.stats["host_syncs"] -= len(node.ride_plans)
             return
         exp = self._expand_device(op, caps_sig, cap_base, out_cap, out_items,
-                                  vals, carry_in, n)
+                                  vals, carry_in, n,
+                                  want_count=bool(node.ride_plans))
         if exp is None:
             return
-        rows2, src, verts2, total, caps2, cap2 = exp
+        rows2, src, verts2, total, caps2, cap2, ride = exp
+        if ride is not None:
+            for i in node.ride_plans:
+                acc[i].append(ride)
+            # ride partials arrived inside the expand's existing meta sync;
+            # offset run_set's per-part tally so they aren't double-counted
+            self.stats["host_syncs"] -= len(node.ride_plans)
         # children that kept every constraint of the shared node consume the
         # compacted worklist as-is (one chunk stream for all of them);
         # children whose branch deferred constraints into residuals get a
@@ -929,13 +968,20 @@ class WaveRunner:
         return [np.stack(cols_out, axis=1)]
 
     def _expand_device(self, op, caps_sig, cap_base, out_cap, out_items,
-                       vals, carry_in, n):
+                       vals, carry_in, n, want_count: bool = False):
         """Run one expand executable + meta sync. Returns ``None`` when no
-        survivors, else (rows2, src, verts2, total, caps2, cap2)."""
+        survivors, else (rows2, src, verts2, total, caps2, cap2, ride) —
+        ``ride`` is the (hi, lo) survivor-count partial when ``want_count``
+        (count-rides-expand), else None."""
         self._bump(op)
-        fn = self._plan_expand_fn(op, caps_sig, cap_base, out_cap, out_items)
+        fn = self._plan_expand_fn(op, caps_sig, cap_base, out_cap, out_items,
+                                  want_count)
         rows2, src, verts2, meta = fn(self.g, vals, carry_in, n)
         meta = [int(x) for x in np.asarray(meta)]
+        if want_count:
+            meta, ride = meta[:-2], np.asarray(meta[-2:], dtype=np.int32)
+        else:
+            ride = None
         total, maxc, dmaxs = meta[0], meta[1], meta[2:]
         self.stats["host_syncs"] += 1
         self.stats["device_compactions"] += 1
@@ -945,7 +991,7 @@ class WaveRunner:
         caps2 = {c: _pow2cap(max(d, 1))
                  for c, d in zip(op.gather_refs, dmaxs)}
         cap2 = round_capacity(maxc) if op.carry_out else 0
-        return rows2, src, verts2, total, caps2, cap2
+        return rows2, src, verts2, total, caps2, cap2, ride
 
     def _expand_chunks(self, op, b, out_cap, cap2, rows2, src, verts2, cols,
                        total):
@@ -974,7 +1020,7 @@ class WaveRunner:
                                   vals, carry_in, n)
         if exp is None:
             return
-        rows2, src, verts2, total, caps2, cap2 = exp
+        rows2, src, verts2, total, caps2, cap2, _ = exp
         for cols2, carry2, vch, m in self._expand_chunks(
                 op, b, out_cap, cap2, rows2, src, verts2, cols, total):
             yield cols2, caps2, carry2, vch, m
@@ -1010,12 +1056,18 @@ class WaveRunner:
                                 build), refs
 
     def _expand_chunks_host(self, op, caps_sig, cap_base, out_cap, cols,
-                            vals, carry_in, n):
+                            vals, carry_in, n, ride_out: dict | None = None):
         """Oracle twin of ``_expand_chunks_device``: same masks, np.nonzero
-        compaction + re-upload; same (cols2, caps2, carry2, vch, m) yield."""
+        compaction + re-upload; same (cols2, caps2, carry2, vch, m) yield.
+        ``ride_out`` (forest count-rides) receives the survivor-count sum as
+        an (hi, lo) int32 partial under ``"count_part"``."""
         self._bump(op, host=True)
         hfn = self._plan_expand_host_fn(op, caps_sig, cap_base, out_cap)
         rows2, counts2 = hfn(self.g, vals, carry_in, n)
+        if ride_out is not None:
+            t = int(np.asarray(counts2, dtype=np.int64).sum())
+            ride_out["count_part"] = np.asarray([t >> 16, t & 0xFFFF],
+                                                dtype=np.int32)
         wave, ii = compact(np.asarray(rows2), np.asarray(counts2),
                            return_src=True)
         self.stats["host_syncs"] += 1

@@ -46,6 +46,30 @@ further down. Relaxation therefore never changes any leaf's result, only
 *where* constraints are enforced — ``run_set`` output is bit-identical to
 running each plan independently (property-tested in tests/test_forest.py).
 
+**Count-rides-expand fusion**: a terminal count leaf (no degree tail)
+whose stream key AND full constraint set (ub/lb/exclude/residual) equal a
+sibling expand node's relaxed op dispatches no kernel at all — the expand
+already computes that exact per-item survivor-count vector, so the leaf's
+plans are recorded in the node's ``ride_plans`` and ``run_set`` credits
+them with the expand's count partial (a 4-clique leaf rides a 5-clique's
+level-3 expand; the 4-clique leaf does NOT ride the 4-motif wing expand,
+which is relaxed below its bounds).
+
+Schedule search (``schedule_patterns``)
+---------------------------------------
+
+Which *matching order* each pattern uses decides what can share. For
+``Motif`` inputs (unordered shapes, no hand-written order or restrictions)
+``schedule_patterns`` runs AutoMine's compilation loop: every motif's
+candidate orders (``plan.matching_orders``, restrictions derived from the
+automorphism group) are searched by coordinate descent to minimise a
+static cost — one trie-node dispatch weight per feed edge orientation
+(directed feeds iterate twice the half-edge feed's chunks) plus the feed
+passes themselves — which maximises shared canonical prefixes across the
+batch. Explicit ``Pattern`` inputs are respected as-is (fixed points of
+the search). The 4-motif batch lands on 3 shared level-2 nodes over 2
+feed passes with no hand-ordered definitions anywhere.
+
 Trie interpretation contract (``WaveRunner.run_set``)
 -----------------------------------------------------
 
@@ -68,19 +92,26 @@ import dataclasses
 from collections import Counter
 from typing import Sequence
 
-from .plan import LevelOp, WavePlan
+from .plan import LevelOp, Motif, Pattern, WavePlan, compile_pattern, \
+    matching_orders
 
-__all__ = ["ForestNode", "PlanForest", "build_forest"]
+__all__ = ["ForestNode", "PlanForest", "build_forest", "schedule_patterns"]
 
 
 @dataclasses.dataclass(frozen=True)
 class ForestNode:
     """One trie node: an expand interior (``children``) or a count/emit leaf
-    (``plans`` = indices of the source plans credited with its output)."""
+    (``plans`` = indices of the source plans credited with its output).
+
+    ``ride_plans`` (interior expands only) are plans whose terminal count
+    leaf matched this node's stream AND constraints exactly: they dispatch
+    no kernel — the engine credits them with this expand's survivor-count
+    sum (count-rides-expand fusion)."""
 
     op: LevelOp
     children: tuple["ForestNode", ...] = ()
     plans: tuple[int, ...] = ()
+    ride_plans: tuple[int, ...] = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,15 +129,20 @@ class PlanForest:
         """Static fusion report: per-(kind, level) op counts, plans vs trie.
 
         ``feed_passes`` counts level-1 edge-feed traversals: one per plan
-        when run independently, one per used orientation when fused."""
+        when run independently, one per used orientation when fused.
+        ``count_rides`` counts terminal count leaves folded into a sibling
+        expand (they appear in ``plan_ops`` but dispatch nothing)."""
         plan_ops: Counter = Counter()
         for p in self.plans:
             for op in p.ops:
                 plan_ops[(op.kind, op.level)] += 1
         forest_ops: Counter = Counter()
+        rides = 0
 
         def walk(node: ForestNode) -> None:
+            nonlocal rides
             forest_ops[(node.op.kind, node.op.level)] += 1
+            rides += len(node.ride_plans)
             for ch in node.children:
                 walk(ch)
 
@@ -117,6 +153,7 @@ class PlanForest:
             "plans": len(self.plans),
             "plan_ops": dict(plan_ops),
             "forest_ops": dict(forest_ops),
+            "count_rides": rides,
             "ops_saved": sum(plan_ops.values()) - sum(forest_ops.values()),
             "feed_passes": {"independent": len(self.plans), "fused": feeds},
         }
@@ -131,7 +168,6 @@ def _merge(branches: list[tuple[int, list[LevelOp]]]) -> tuple[ForestNode, ...]:
     """Merge one trie level. ``branches`` = (plan index, remaining ops) with
     any constraints deferred from relaxed ancestors already folded into
     ``ops[0]``. Deterministic: groups keep first-seen plan order."""
-    nodes: list[ForestNode] = []
     leaves: dict[LevelOp, list[int]] = {}
     groups: dict[tuple, list[tuple[int, list[LevelOp]]]] = {}
     for idx, ops in branches:
@@ -139,12 +175,24 @@ def _merge(branches: list[tuple[int, list[LevelOp]]]) -> tuple[ForestNode, ...]:
             groups.setdefault(ops[0].stream_key(), []).append((idx, ops))
         else:
             leaves.setdefault(ops[0], []).append(idx)
-    for op, idxs in leaves.items():
-        nodes.append(ForestNode(op=op, plans=tuple(idxs)))
-    for group in groups.values():
+    merged: dict[tuple, list] = {}       # stream key -> [relaxed, kids, rides]
+    for key, group in groups.items():
         relaxed, sub = _relax(group)
-        children = _merge(sub)
-        nodes.append(_with_liveness(relaxed, children))
+        merged[key] = [relaxed, _merge(sub), []]
+    nodes: list[ForestNode] = []
+    for op, idxs in leaves.items():
+        # count-rides-expand: a tail-free count leaf matching a sibling
+        # expand's stream AND relaxed constraints reads that expand's
+        # survivor-count vector instead of dispatching its own kernel
+        tgt = merged.get(op.stream_key()) \
+            if op.kind == "count" and op.tail is None else None
+        if tgt is not None and (op.ub, op.lb, op.exclude, op.residual) == \
+                (tgt[0].ub, tgt[0].lb, tgt[0].exclude, tgt[0].residual):
+            tgt[2].extend(idxs)
+        else:
+            nodes.append(ForestNode(op=op, plans=tuple(idxs)))
+    for relaxed, children, rides in merged.values():
+        nodes.append(_with_liveness(relaxed, children, tuple(rides)))
     return tuple(nodes)
 
 
@@ -196,10 +244,12 @@ def _subtree_refs(node: ForestNode) -> tuple[set[int], set[int]]:
     return vals, rows
 
 
-def _with_liveness(op: LevelOp, children: tuple[ForestNode, ...]) -> ForestNode:
+def _with_liveness(op: LevelOp, children: tuple[ForestNode, ...],
+                   ride_plans: tuple[int, ...] = ()) -> ForestNode:
     """Interior-node liveness = union over the child subtrees (residual
     columns included via ``val_refs``); carry is produced iff any child
-    consumes it."""
+    consumes it. Riding count leaves add no liveness: their constraint set
+    equals the node's, so every column they read is already consumed."""
     vals: set[int] = set()
     rows: set[int] = set()
     for ch in children:
@@ -212,7 +262,98 @@ def _with_liveness(op: LevelOp, children: tuple[ForestNode, ...]) -> ForestNode:
             out_cols=tuple(sorted(c for c in vals if c <= op.level)),
             gather_refs=tuple(sorted(c for c in rows if c <= op.level)),
             carry_out=any(ch.op.use_carry for ch in children)),
-        children=children)
+        children=children, ride_plans=ride_plans)
+
+
+# ---------------------------------------------------------------------------
+# automatic matching-order search (the schedule stage)
+# ---------------------------------------------------------------------------
+
+
+def _schedule_score(forest: PlanForest) -> tuple:
+    """Static cost of a candidate schedule, lower is better.
+
+    Every trie node dispatches once per level-1 feed chunk of its
+    orientation, and the directed feed iterates all E edges where the
+    half-edge feed iterates E/2 — so nodes under directed roots weigh 2,
+    nodes under symmetric roots weigh 1, and each used orientation adds its
+    own feed-materialisation weight. Total forest ops and feed-pass count
+    break ties; all components are schedule facts (machine-independent)."""
+    weighted = 0
+
+    def walk(node: ForestNode, w: int) -> None:
+        nonlocal weighted
+        weighted += w
+        for ch in node.children:
+            walk(ch, w)
+
+    for root in forest.symmetric_roots:
+        walk(root, 1)
+    for root in forest.directed_roots:
+        walk(root, 2)
+    feeds = int(bool(forest.symmetric_roots)) \
+        + 2 * int(bool(forest.directed_roots))
+    stats = forest.sharing_stats()
+    return (weighted + feeds, sum(stats["forest_ops"].values()),
+            stats["feed_passes"]["fused"])
+
+
+_SCHEDULE_CACHE: dict[tuple, tuple[Pattern, ...]] = {}
+
+
+def schedule_patterns(items: Sequence, context: Sequence[WavePlan] = ()) \
+        -> list[Pattern]:
+    """Pick a matching order per pattern to maximise batch sharing.
+
+    ``items`` mixes ``Motif``s (unordered shapes — every candidate order
+    from ``plan.matching_orders`` is in play) and ``Pattern``s (explicit
+    schedules, respected as-is). ``context`` plans join the scoring forest
+    without being rescheduled (a session batch alongside fixed queries).
+    Coordinate descent over the candidate lists minimises
+    ``_schedule_score`` until a fixpoint — AutoMine's compilation loop on
+    the plan IR. Deterministic (pure host combinatorics, first-improvement
+    in stable order) and memoised; returns one ``Pattern`` per item, in
+    input order."""
+    items = tuple(items)
+    key = (items, tuple(p.canonical_key() for p in context))
+    hit = _SCHEDULE_CACHE.get(key)
+    if hit is not None:
+        return list(hit)
+    cands: list[tuple[Pattern, ...]] = []
+    for it in items:
+        if isinstance(it, Pattern):
+            cands.append((it,))
+        elif isinstance(it, Motif):
+            cands.append(matching_orders(it))
+        else:
+            raise TypeError(f"schedule_patterns wants Pattern|Motif, got "
+                            f"{type(it).__name__}")
+    fixed = list(context)
+    choice = [0] * len(cands)
+
+    def score(ch: list[int]) -> tuple:
+        plans = [compile_pattern(c[i]) for c, i in zip(cands, ch)] + fixed
+        return _schedule_score(build_forest(plans))
+
+    best = score(choice)
+    improved = True
+    while improved:
+        improved = False
+        for pi, cand in enumerate(cands):
+            if len(cand) < 2:
+                continue
+            for ci in range(len(cand)):
+                if ci == choice[pi]:
+                    continue
+                trial = list(choice)
+                trial[pi] = ci
+                sc = score(trial)
+                if sc < best:
+                    best, choice = sc, trial
+                    improved = True
+    picked = tuple(c[i] for c, i in zip(cands, choice))
+    _SCHEDULE_CACHE[key] = picked
+    return list(picked)
 
 
 def build_forest(plans: Sequence[WavePlan]) -> PlanForest:

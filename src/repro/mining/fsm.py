@@ -17,7 +17,9 @@ all its (k-1)-edge sub-patterns were frequent.
 Engineering: domains are boolean masks over V computed vectorised from
 neighbor-label count tables; embeddings come from the wavefront engine's
 FSM pattern batch (``apps.fsm_pattern_feed``) — the engine-fed plans merged
-into one ``PlanForest`` and executed in a single feed pass. Today the batch
+into one ``PlanForest`` and executed in a single feed pass on a
+``mining.session.Miner`` (pass ``miner=`` to reuse a caller-held session;
+repeated FSM sweeps over one graph then retrace nothing). Today the batch
 is the compiled triangle *emit* plan, whose worklists are compacted on
 device (``ops.xinter_compact`` src output) so the embedding feed never
 round-trips through host ``np.nonzero``; further engine-fed patterns join
@@ -156,26 +158,26 @@ def _eval_triangle(ctx: _Ctx, tris: np.ndarray, la, lb, lc):
 def _eval_star3(ctx: _Ctx, center_l: int, leaves: tuple[int, int, int]):
     import math
     L, nlc = ctx.labels, ctx.nlc
-    mult = {l: leaves.count(l) for l in set(leaves)}
+    mult = {lab: leaves.count(lab) for lab in set(leaves)}
     ok = L == center_l
-    for l, m in mult.items():
-        ok &= nlc[:, l] >= m
+    for lab, m in mult.items():
+        ok &= nlc[:, lab] >= m
     count = 0
     if ok.any():
         per = np.ones(int(ok.sum()), dtype=np.int64)
-        for l, m in mult.items():
-            c = nlc[ok][:, l].astype(np.int64)
+        for lab, m in mult.items():
+            c = nlc[ok][:, lab].astype(np.int64)
             num = np.ones_like(c)          # C(c, m), vectorised
             for i in range(m):
                 num = num * (c - i)
             per *= num // math.factorial(m)
         count = int(per.sum())
     doms = {("center",): ok}
-    for l in set(leaves):
+    for lab in set(leaves):
         leaf = np.zeros(ctx.g.num_vertices, bool)
-        sel = (L[ctx.indices] == l) & ok[ctx.src]
+        sel = (L[ctx.indices] == lab) & ok[ctx.src]
         leaf[ctx.indices[sel]] = True
-        doms[("leaf", l)] = leaf
+        doms[("leaf", lab)] = leaf
     return _support(doms), count
 
 
@@ -230,8 +232,9 @@ def _eval_path4(ctx: _Ctx, canon: tuple[int, int, int, int]):
 
 
 def _mine(g: CSRGraph, labels: np.ndarray, min_support: int, max_edges: int,
-          metric: str):
-    """metric='mni' (fsm) or 'count' (sfsm)."""
+          metric: str, miner=None):
+    """metric='mni' (fsm) or 'count' (sfsm); ``miner`` is an optional
+    ``mining.session.Miner`` the engine feed runs on."""
     ctx = _Ctx(g, labels)
     ls = sorted(set(ctx.labels.tolist()))
     results: dict = {}
@@ -270,7 +273,7 @@ def _mine(g: CSRGraph, labels: np.ndarray, min_support: int, max_edges: int,
         return results
 
     # --- level 3 ---
-    tris = fsm_pattern_feed(g)[0]          # forest-scheduled triangle emit
+    tris = fsm_pattern_feed(g, miner=miner)[0]   # session triangle emit
     # triangles: all 3 edges + all 3 wedges frequent
     for la, lb, lc in itertools.combinations_with_replacement(ls, 3):
         edges_ok = all(edge_key(x, y) in freq_edges
@@ -287,7 +290,7 @@ def _mine(g: CSRGraph, labels: np.ndarray, min_support: int, max_edges: int,
     # 3-stars
     for center in ls:
         for leaves in itertools.combinations_with_replacement(ls, 3):
-            if not all(edge_key(center, l) in freq_edges for l in leaves):
+            if not all(edge_key(center, lf) in freq_edges for lf in leaves):
                 continue
             if not all(wedge_key(x, center, y) in freq_wedges
                        for x, y in itertools.combinations(leaves, 2)):
@@ -323,12 +326,12 @@ def _mine(g: CSRGraph, labels: np.ndarray, min_support: int, max_edges: int,
 
 
 def fsm(g: CSRGraph, labels: np.ndarray, min_support: int,
-        max_edges: int = 3) -> dict:
+        max_edges: int = 3, miner=None) -> dict:
     """FSM with MNI support (downward-closure sound)."""
-    return _mine(g, labels, min_support, max_edges, "mni")
+    return _mine(g, labels, min_support, max_edges, "mni", miner=miner)
 
 
 def sfsm(g: CSRGraph, labels: np.ndarray, min_support: int,
-         max_edges: int = 3) -> dict:
-    """simple-FSM: GRAMER's embedding-count support (for comparison only)."""
-    return _mine(g, labels, min_support, max_edges, "count")
+         max_edges: int = 3, miner=None) -> dict:
+    """simple-FSM: GRAMER's embedding-count support (comparison only)."""
+    return _mine(g, labels, min_support, max_edges, "count", miner=miner)

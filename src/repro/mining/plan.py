@@ -45,6 +45,21 @@ implies it.  The compiler additionally performs:
     columns deeper levels still reference, so the engine forwards (and
     meta-sizes) only those.
 
+Beyond the ordered ``Pattern``, this module also models the *unordered*
+shape a user actually asks for: a ``Motif`` is adjacency (+ inducedness)
+only — no matching order, no hand-written symmetry-breaking restrictions.
+``matching_orders`` enumerates every connected matching order of a motif
+and derives each order's restrictions automatically from the automorphism
+group (``auto_restrictions``: keep exactly the lexicographically largest
+matched sequence of every embedding orbit, so each subgraph is counted
+once and ``div`` is always 1). The batch-aware choice *between* those
+orders — AutoMine's compilation loop, maximising shared canonical prefixes
+across a pattern set — lives in ``mining.forest.schedule_patterns``; the
+``FOUR_MOTIFS`` dict (and the per-motif names ``DIAMOND``/``CYCLE4``/
+``PAW_INDUCED``/``PATH4``/``STAR4``) are resolved lazily from the
+``FOUR_MOTIF_SHAPES`` adjacency-only definitions through that search, so
+no 4-motif schedule is hand-ordered anywhere.
+
 Nothing in this module touches a device: a ``WavePlan`` is a pure host
 datum, and compiling the same ``Pattern`` twice yields structurally equal
 (hashable) ops, so ``WaveRunner``'s executable cache keys on them directly.
@@ -54,11 +69,13 @@ from __future__ import annotations
 import dataclasses
 import itertools
 
+# FOUR_MOTIFS / DIAMOND / CYCLE4 / PAW_INDUCED / PATH4 / STAR4 are module
+# attributes too, resolved lazily via __getattr__ (schedule search).
 __all__ = [
     "Pattern", "LevelOp", "WavePlan", "compile_pattern", "pattern",
-    "clique_pattern", "TRIANGLE", "TRIANGLE_NESTED", "THREE_CHAIN_INDUCED",
-    "TAILED_TRIANGLE", "PAW_INDUCED", "DIAMOND", "CYCLE4", "PATH4", "STAR4",
-    "FOUR_MOTIFS",
+    "clique_pattern", "Motif", "motif", "auto_restrictions",
+    "matching_orders", "resolve_query", "TRIANGLE", "TRIANGLE_NESTED",
+    "THREE_CHAIN_INDUCED", "TAILED_TRIANGLE", "FOUR_MOTIF_SHAPES",
 ]
 
 
@@ -113,6 +130,109 @@ def clique_pattern(k: int) -> Pattern:
     """k-clique: complete adjacency, descending chain v_{i+1} < v_i."""
     return pattern(f"{k}-clique", k, itertools.combinations(range(k), 2),
                    restrictions=[(i + 1, i) for i in range(k - 1)])
+
+
+# ---------------------------------------------------------------------------
+# unordered motif shapes + automatic symmetry breaking
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Motif:
+    """An unordered pattern *shape*: adjacency + inducedness, nothing else.
+
+    A ``Motif`` is what a query names ("count paws") before any schedule
+    decision is made: it carries no matching order and no hand-written
+    symmetry-breaking restrictions. ``matching_orders`` lowers it to the
+    candidate ``Pattern``s (one per structurally distinct matching order,
+    restrictions derived from the automorphism group), and the forest
+    scheduler picks between them per batch."""
+
+    name: str
+    adj: tuple[tuple[bool, ...], ...]
+    induced: bool = False
+
+    @property
+    def k(self) -> int:
+        return len(self.adj)
+
+
+def motif(name: str, k: int, edges, induced: bool = False) -> Motif:
+    """Build a validated ``Motif`` from an edge list over vertices 0..k-1."""
+    adj = [[False] * k for _ in range(k)]
+    for i, j in edges:
+        if i == j:
+            raise ValueError(f"{name}: self loop ({i},{j})")
+        adj[i][j] = adj[j][i] = True
+    return Motif(name=name, adj=tuple(tuple(r) for r in adj),
+                 induced=induced)
+
+
+def _automorphisms(adj) -> list[tuple[int, ...]]:
+    """All adjacency-preserving vertex permutations (brute force; k <= 5
+    for every mining pattern, so k! stays trivial)."""
+    k = len(adj)
+    return [perm for perm in itertools.permutations(range(k))
+            if all(adj[i][j] == adj[perm[i]][perm[j]]
+                   for i in range(k) for j in range(k))]
+
+
+def auto_restrictions(adj) -> tuple[tuple[int, int], ...]:
+    """Symmetry-breaking restrictions for a matching order, derived from
+    the automorphism group.
+
+    For each non-identity automorphism σ, let i be the first position σ
+    moves; requiring v_{σ(i)} < v_i keeps exactly the lexicographically
+    *largest* matched sequence of each embedding orbit (positions before i
+    are fixed by σ, so the orbit comparison is decided at i). Every
+    embedding is therefore counted exactly once — no residual ``div`` —
+    and since σ(i) > i always, every restriction points at a lower level
+    (acyclic, and any v0/v1 constraint is the half-edge feed's (1, 0)).
+    Transitively implied restrictions are pruned."""
+    k = len(adj)
+    ident = tuple(range(k))
+    restr = set()
+    for sig in _automorphisms(adj):
+        if sig == ident:
+            continue
+        i = min(p for p in range(k) if sig[p] != p)
+        restr.add((sig[i], i))            # v_sig(i) < v_i, and sig(i) > i
+    for e in sorted(restr):               # transitive reduction
+        if e in _closure(k, restr - {e}):
+            restr.discard(e)
+    return tuple(sorted(restr))
+
+
+def matching_orders(m: Motif) -> tuple[Pattern, ...]:
+    """All structurally distinct matching orders of ``m`` as ``Pattern``s.
+
+    Enumerates vertex permutations that yield a valid matching order (v0-v1
+    an edge, every later vertex adjacent to an earlier one), attaches each
+    order's ``auto_restrictions``, and dedupes by compiled canonical plan
+    key — orders that perform identical work item-for-item collapse to one
+    candidate (a k-clique has exactly one)."""
+    k = len(m.adj)
+    out: list[Pattern] = []
+    seen: set[tuple] = set()
+    for perm in itertools.permutations(range(k)):
+        radj = tuple(tuple(m.adj[perm[a]][perm[b]] for b in range(k))
+                     for a in range(k))
+        if not radj[0][1]:
+            continue
+        if any(not any(radj[lvl][j] for j in range(lvl))
+               for lvl in range(2, k)):
+            continue
+        p = Pattern(name=m.name, adj=radj,
+                    restrictions=auto_restrictions(radj),
+                    induced=m.induced, div=1)
+        key = compile_pattern(p).canonical_key()
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append(p)
+    if not out:
+        raise ValueError(f"{m.name}: no connected matching order")
+    return tuple(out)
 
 
 # ---------------------------------------------------------------------------
@@ -240,10 +360,10 @@ def _validate(p: Pattern) -> None:
                 raise ValueError("pattern adjacency must be symmetric")
     if not p.adj[0][1]:
         raise ValueError("matching order must start on an edge (v0, v1)")
-    for l in range(2, k):
-        if not any(p.adj[l][j] for j in range(l)):
+    for lvl in range(2, k):
+        if not any(p.adj[lvl][j] for j in range(lvl)):
             raise ValueError(
-                f"{p.name}: vertex {l} not adjacent to any earlier vertex "
+                f"{p.name}: vertex {lvl} not adjacent to any earlier vertex "
                 "(matching order must keep the pattern connected)")
     for i, j in p.restrictions:
         if not (0 <= i < k and 0 <= j < k and i != j):
@@ -254,12 +374,21 @@ def _validate(p: Pattern) -> None:
             "feed enumerates v1 < v0")
 
 
+# compiled-plan memo: the schedule search and the session compile stage both
+# revisit patterns; Pattern/WavePlan are immutable so sharing is free
+_PLAN_CACHE: dict[tuple[Pattern, bool], WavePlan] = {}
+
+
 def compile_pattern(p: Pattern, emit: bool = False) -> WavePlan:
     """Lower a ``Pattern`` to a ``WavePlan`` (§IV-F translation, on host).
 
     ``emit=True`` compiles an enumeration program: the final level
     materialises embeddings instead of counting (FSM's triangle feed).
+    Compilation is memoised (host-pure, immutable output).
     """
+    cached = _PLAN_CACHE.get((p, emit))
+    if cached is not None:
+        return cached
     _validate(p)
     k = p.k
     less = _closure(k, p.restrictions)
@@ -272,54 +401,58 @@ def compile_pattern(p: Pattern, emit: bool = False) -> WavePlan:
     eff_ub: dict[int, set] = {}
     eff_lb: dict[int, set] = {}
     raw_ops: list[dict] = []
-    for l in range(2, k):
-        I = {j for j in range(l) if p.adj[l][j]}
-        S = {j for j in range(l) if not p.adj[l][j]} if p.induced else set()
-        ub = {j for (i, j) in p.restrictions if i == l and j < l}
-        lb = {j for (j, i) in p.restrictions if i == l and j < l}
-        ordered = {j for j in range(l) if (l, j) in less or (j, l) in less}
-        exclude = {j for j in range(l) if j not in I and j not in ordered}
-        eff_i[l], eff_s[l], eff_ub[l], eff_lb[l] = I, S, ub, lb
+    for lvl in range(2, k):
+        icols = {j for j in range(lvl) if p.adj[lvl][j]}
+        scols = {j for j in range(lvl)
+                 if not p.adj[lvl][j]} if p.induced else set()
+        ub = {j for (i, j) in p.restrictions if i == lvl and j < lvl}
+        lb = {j for (j, i) in p.restrictions if i == lvl and j < lvl}
+        ordered = {j for j in range(lvl)
+                   if (lvl, j) in less or (j, lvl) in less}
+        exclude = {j for j in range(lvl)
+                   if j not in icols and j not in ordered}
+        eff_i[lvl], eff_s[lvl], eff_ub[lvl], eff_lb[lvl] = \
+            icols, scols, ub, lb
         # ---- carry reuse: is the parent's survivor stream a superset? ----
         use_carry = False
-        if l > 2:
-            pi, ps, pub, plb = eff_i[l - 1], eff_s[l - 1], eff_ub[l - 1], \
-                eff_lb[l - 1]
+        if lvl > 2:
+            pi, ps, pub, plb = eff_i[lvl - 1], eff_s[lvl - 1], \
+                eff_ub[lvl - 1], eff_lb[lvl - 1]
             ub_ok = all(any(u2 == u or (u2, u) in less for u2 in ub)
                         for u in pub)
             lb_ok = all(any(w2 == w or (w, w2) in less for w2 in lb)
                         for w in plb)
-            use_carry = (raw_ops[-1]["kind"] == "expand" and pi <= I
-                         and ps <= S and ub_ok and lb_ok)
+            use_carry = (raw_ops[-1]["kind"] == "expand" and pi <= icols
+                         and ps <= scols and ub_ok and lb_ok)
         if use_carry:
-            inter = I - eff_i[l - 1]
-            sub = S - eff_s[l - 1]
+            inter = icols - eff_i[lvl - 1]
+            sub = scols - eff_s[lvl - 1]
             base = -1
         else:
-            inter = set(I)
+            inter = set(icols)
             base = min(inter)
             inter.discard(base)
-            sub = set(S)
+            sub = set(scols)
         raw_ops.append(dict(
-            level=l, use_carry=use_carry, base=base,
+            level=lvl, use_carry=use_carry, base=base,
             inter=tuple(sorted(inter)), sub=tuple(sorted(sub)),
             ub=tuple(sorted(ub)), lb=tuple(sorted(lb)),
             exclude=tuple(sorted(exclude)),
-            kind=("emit" if emit else "count") if l == k - 1 else "expand",
+            kind=("emit" if emit else "count") if lvl == k - 1 else "expand",
             tail=None))
     # ---- tail folding: closed-form final level -> degree multiplier ----
     last = raw_ops[-1]
     if (not emit and len(raw_ops) >= 2 and last["kind"] == "count"
             and not last["sub"] and not last["ub"] and not last["lb"]
             and last["use_carry"] is False and not last["inter"]):
-        l, b = last["level"], last["base"]
+        lvl, b = last["level"], last["base"]
         # every earlier vertex must be statically a member of N(v_b), so the
         # exclusion count is a compile-time constant (non-induced only:
         # an induced pattern would have sub refs and fail the guard above)
-        if b <= l - 2 and all(p.adj[j][b] for j in range(l) if j != b):
+        if b <= lvl - 2 and all(p.adj[j][b] for j in range(lvl) if j != b):
             raw_ops.pop()
             raw_ops[-1]["kind"] = "count"
-            raw_ops[-1]["tail"] = (b, l - 1)
+            raw_ops[-1]["tail"] = (b, lvl - 1)
     # ---- liveness: which columns do deeper levels still touch? ----
     ops: list[LevelOp] = []
     for idx, ro in enumerate(raw_ops):
@@ -344,8 +477,10 @@ def compile_pattern(p: Pattern, emit: bool = False) -> WavePlan:
             gather_refs=tuple(sorted(rows_needed)),
             carry_out=(idx + 1 < len(raw_ops)
                        and raw_ops[idx + 1]["use_carry"])))
-    return WavePlan(pattern=p, symmetric=symmetric, ops=tuple(ops),
+    plan = WavePlan(pattern=p, symmetric=symmetric, ops=tuple(ops),
                     div=1 if emit else p.div)
+    _PLAN_CACHE[(p, emit)] = plan
+    return plan
 
 
 # ---------------------------------------------------------------------------
@@ -373,43 +508,64 @@ TAILED_TRIANGLE = pattern("tailed-triangle", 4,
                           [(0, 1), (0, 2), (1, 2), (1, 3)],
                           restrictions=[(2, 0)])
 
-# induced paw — the 4-motif variant of TT, scheduled *wings-first*: v0, v1
-# are the triangle's interchangeable wing vertices (broken v1 < v0), v2 the
-# center, v3 the tail hanging off the center. Matching the wings' edge first
-# puts the paw on the half-edge feed with the same level-2 stream as the
-# diamond's (v2 ∈ N(v0) ∩ N(v1), unbounded) — AutoMine-style multi-pattern
-# schedule choice so the forest scheduler shares that expand.
-PAW_INDUCED = pattern("paw", 4, [(0, 1), (0, 2), (1, 2), (2, 3)],
-                      restrictions=[(1, 0)], induced=True)
-
-# diamond: two triangles sharing edge (0,1); wings 2,3 non-adjacent.
-# Aut = {swap 0,1} x {swap 2,3}, broken by v1 < v0 and v3 < v2.
-DIAMOND = pattern("diamond", 4, [(0, 1), (0, 2), (1, 2), (0, 3), (1, 3)],
-                  restrictions=[(1, 0), (3, 2)], induced=True)
-
-# 4-cycle scheduled *corner-first*: v0 the largest vertex, v1/v2 its two
-# cycle neighbors (ordered v2 < v1), v3 the opposite corner. Level 2 then
-# draws from N(v0) \ N(v1) — the same stream as the 4-path's level 2 — and
-# the dihedral group (order 8) is fully broken by v0-max (4 rotations) plus
-# the v1/v2 reflection swap.
-CYCLE4 = pattern("4-cycle", 4, [(0, 1), (0, 2), (1, 3), (2, 3)],
-                 restrictions=[(1, 0), (2, 0), (3, 0), (2, 1)], induced=True)
-
-# 4-path a—b—c—d matched middle-edge-first (v0=b, v1=c, v2=a, v3=d);
-# path reversal (v0<->v1, v2<->v3) broken by v1 < v0.
-PATH4 = pattern("4-path", 4, [(0, 1), (0, 2), (1, 3)],
-                restrictions=[(1, 0)], induced=True)
-
-# 4-star: center v0, interchangeable leaves ordered v3 < v2 < v1.
-STAR4 = pattern("4-star", 4, [(0, 1), (0, 2), (0, 3)],
-                restrictions=[(2, 1), (3, 2)], induced=True)
-
-# the six connected 4-vertex motifs (induced counts)
-FOUR_MOTIFS: dict[str, Pattern] = {
-    "4-clique": clique_pattern(4),
-    "diamond": DIAMOND,
-    "4-cycle": CYCLE4,
-    "paw": PAW_INDUCED,
-    "4-path": PATH4,
-    "4-star": STAR4,
+# the six connected 4-vertex motifs as *unordered shapes* (induced counts).
+# Vertex numbering here is arbitrary — matching order and symmetry-breaking
+# restrictions are derived automatically (auto_restrictions + the forest
+# scheduler's matching-order search), so nothing below is hand-scheduled.
+FOUR_MOTIF_SHAPES: dict[str, Motif] = {
+    "4-clique": motif("4-clique", 4,
+                      itertools.combinations(range(4), 2), induced=True),
+    "diamond": motif("diamond", 4,
+                     [(0, 1), (0, 2), (0, 3), (1, 2), (1, 3)], induced=True),
+    "4-cycle": motif("4-cycle", 4,
+                     [(0, 1), (1, 2), (2, 3), (0, 3)], induced=True),
+    "paw": motif("paw", 4, [(0, 1), (0, 2), (1, 2), (2, 3)], induced=True),
+    "4-path": motif("4-path", 4, [(0, 1), (1, 2), (2, 3)], induced=True),
+    "4-star": motif("4-star", 4, [(0, 1), (0, 2), (0, 3)], induced=True),
 }
+
+# named query surface for the session API (mining.session.Miner): strings a
+# query may use, each resolving to a paper-faithful Pattern (fixed schedule)
+# or a Motif (schedule chosen by the batch-aware matching-order search)
+_NAMED_QUERIES: dict[str, object] = {
+    "triangle": TRIANGLE,
+    "triangle-nested": TRIANGLE_NESTED,
+    "three-chain": THREE_CHAIN_INDUCED,
+    "three-chain-induced": THREE_CHAIN_INDUCED,
+    "tailed-triangle": TAILED_TRIANGLE,
+    "5-clique": clique_pattern(5),
+    **FOUR_MOTIF_SHAPES,
+}
+
+
+def resolve_query(q):
+    """Resolve a session query — a name, ``Motif`` or ``Pattern`` — to the
+    ``Motif``/``Pattern`` object the compile/schedule stages consume."""
+    if isinstance(q, (Motif, Pattern)):
+        return q
+    try:
+        return _NAMED_QUERIES[q]
+    except (KeyError, TypeError):
+        raise ValueError(
+            f"unknown pattern query {q!r}; use a Pattern, a Motif or one of "
+            f"{sorted(_NAMED_QUERIES)}") from None
+
+
+# per-motif names + FOUR_MOTIFS resolve lazily through the schedule search
+# (mining.forest.schedule_patterns) the first time they are touched — the
+# search needs build_forest, which imports this module
+_SCHEDULED_NAMES = {"DIAMOND": "diamond", "CYCLE4": "4-cycle",
+                    "PAW_INDUCED": "paw", "PATH4": "4-path",
+                    "STAR4": "4-star"}
+
+
+def __getattr__(name: str):
+    if name == "FOUR_MOTIFS" or name in _SCHEDULED_NAMES:
+        from .forest import schedule_patterns
+        pats = schedule_patterns(list(FOUR_MOTIF_SHAPES.values()))
+        four = dict(zip(FOUR_MOTIF_SHAPES, pats))
+        globals()["FOUR_MOTIFS"] = four
+        for attr, motif_name in _SCHEDULED_NAMES.items():
+            globals()[attr] = four[motif_name]
+        return globals()[name]
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

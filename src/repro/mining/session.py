@@ -1,0 +1,253 @@
+"""Miner session API: a graph-resident query engine.
+
+IntersectX's core claim is that stream state — the SMT, the S-Cache, the
+cached stream registers — persists *across* intersections, so repeated
+queries over one graph amortise all data movement. The one-shot entry
+points this repo grew up with (``WaveRunner.run(plan)``, ``run_set``, the
+per-app wrappers in ``mining.apps``) re-stage the graph and re-derive
+every schedule per call. A ``Miner`` is the session that owns a graph for
+its lifetime and serves any number of queries against it:
+
+    m = Miner(graph)
+    m.count("triangle")                 # -> int
+    m.count_many(["4-clique", "diamond", "4-cycle",
+                  "paw", "4-path", "4-star"])   # -> list[int], one pass
+    m.embeddings("triangle")            # -> (N, 3) int32 matrix
+
+Every query runs through an explicit three-stage pipeline, each stage
+memoised for the session's lifetime:
+
+**compile** — a query (a name from ``plan._NAMED_QUERIES``, a ``Motif``
+shape, or an explicit ``Pattern``) lowers to a ``WavePlan`` via
+``plan.compile_pattern``. Plans are cached per (query, emit) pair.
+
+**schedule** — for batches, the automatic matching-order search
+(``forest.schedule_patterns``) picks each ``Motif``'s matching order to
+maximise shared canonical prefixes across the batch (explicit ``Pattern``
+queries are fixed points), then ``forest.build_forest`` merges the
+compiled plans into a ``PlanForest``. Forests are cached on the batch's
+canonical plan keys, so a repeated batch re-derives nothing.
+
+**execute** — the ``WaveRunner`` machinery interprets the plan/forest,
+with two session-level residency guarantees: the graph's CSR buffers are
+staged to device ONCE at construction (``jax.device_put``), and every
+jitted executable lives in the session's ``ExecutableCache``, so repeated
+queries never retrace. A ``Miner`` is single-threaded (no locking around
+the cache or the runner's mutable stats): a concurrent server gives each
+worker its own session — per-worker warm-up, zero retraces after it.
+
+Executable-cache key
+--------------------
+
+``ExecutableCache`` keys are::
+
+    (mesh/shape signature) + (chunk, backend, device_compact, fused_level)
+        + (kind, LevelOp, capacity signature, ...)
+
+The mesh/shape signature (platform + device count today, the mesh axes
+when multi-device sharding lands) isolates executables compiled for
+different device topologies; the runner-config segment isolates chunk
+shapes and kernel-path flags; the trailing segment is the runner's
+per-executable key (LevelOps hash by value, so structurally equal levels
+of different patterns share one trace). A cache *miss* is a retrace —
+``Miner.stats`` exposes hit/miss counters, and the session-reuse contract
+(tested in tests/test_session.py, gated in benchmarks/ci_gate.py) is that
+a repeated query produces **zero** new traces.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import numpy as np
+
+from repro.graph.csr import CSRGraph
+from .engine import WaveRunner
+from .forest import PlanForest, build_forest, schedule_patterns
+from .plan import Motif, WavePlan, compile_pattern, resolve_query
+
+__all__ = ["ExecutableCache", "Miner", "MinerConfig", "mesh_signature"]
+
+
+def mesh_signature() -> tuple:
+    """Device-topology component of the executable-cache key: platform +
+    device count (to become the mesh axis spec once mining shards across a
+    mesh — the ROADMAP multi-device item lands against this key)."""
+    return (jax.default_backend(), jax.device_count())
+
+
+class ExecutableCache:
+    """Session-lifetime cache of jitted executables, with hit/miss stats.
+
+    Lifted out of ``WaveRunner`` so executables survive the runner that
+    built them: every entry is keyed by the full signature documented in
+    the module docstring, making the cache safe to share across runners
+    (and, later, across meshes). ``misses`` counts traces actually built —
+    the session's *retrace* counter."""
+
+    def __init__(self, prefix: tuple = ()):
+        self.prefix = prefix + (mesh_signature(),)
+        self._entries: dict[tuple, Callable] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get_or_build(self, key: tuple, build: Callable):
+        """Return (executable, freshly_built?) for ``key``."""
+        key = self.prefix + key
+        fn = self._entries.get(key)
+        if fn is None:
+            fn = self._entries[key] = build()
+            self.misses += 1
+            return fn, True
+        self.hits += 1
+        return fn, False
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def snapshot(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "entries": len(self._entries)}
+
+
+@dataclasses.dataclass(frozen=True)
+class MinerConfig:
+    """Execution knobs for a session (fixed for its lifetime — they are
+    part of every executable's cache key)."""
+
+    chunk: int | None = None          # wave chunk; None = auto-sized
+    backend: str = "auto"             # kernel backend (pallas/xla/auto)
+    device_compact: bool = True       # False: host np.nonzero oracle path
+    fused_level: bool = True          # k-operand fused level kernels
+
+
+class Miner:
+    """A graph-resident mining session: compile → schedule → execute.
+
+    Owns the graph (device-staged once), the compiled-plan and forest
+    caches, and the executable cache for its whole lifetime. See the
+    module docstring for the pipeline contract.
+    """
+
+    def __init__(self, graph: CSRGraph, config: MinerConfig | None = None,
+                 **overrides):
+        if config is None:
+            config = MinerConfig(**overrides)
+        elif overrides:
+            config = dataclasses.replace(config, **overrides)
+        self.config = config
+        # stage the CSR buffers to device once per session — queries only
+        # ever ship scalars and per-chunk vertex ids after this
+        self.graph: CSRGraph = jax.device_put(graph)
+        self.exec_cache = ExecutableCache()
+        self._runner = WaveRunner(
+            self.graph, chunk=config.chunk, backend=config.backend,
+            device_compact=config.device_compact,
+            fused_level=config.fused_level, exec_cache=self.exec_cache)
+        self._plans: dict[tuple, WavePlan] = {}
+        self._forests: dict[tuple, PlanForest] = {}
+        self._stats = {"queries": 0, "plan_hits": 0, "plan_misses": 0,
+                       "schedule_hits": 0, "schedule_misses": 0}
+
+    # ------------------------------------------------------------ compile
+    def compile(self, query, emit: bool = False) -> WavePlan:
+        """Stage 1: lower one query to a ``WavePlan`` (cached).
+
+        ``Motif`` queries are scheduled standalone (batch-aware order
+        choice happens in ``schedule``); explicit ``Pattern``s and named
+        paper patterns keep their declared matching order."""
+        resolved = resolve_query(query)
+        key = (resolved, emit)
+        plan = self._plans.get(key)
+        if plan is not None:
+            self._stats["plan_hits"] += 1
+            return plan
+        self._stats["plan_misses"] += 1
+        if isinstance(resolved, Motif):
+            resolved = schedule_patterns([resolved])[0]
+        plan = compile_pattern(resolved, emit=emit)
+        self._plans[key] = plan
+        return plan
+
+    # ----------------------------------------------------------- schedule
+    def schedule(self, queries: Sequence, emit: bool = False) -> PlanForest:
+        """Stage 2: batch matching-order search + forest merge (cached).
+
+        Returns the ``PlanForest`` for the batch: ``Motif`` members get
+        their order from the shared-prefix search (jointly, with any
+        explicit ``Pattern`` members as fixed context), and the compiled
+        plans merge into one prefix trie. Cached on the resolved batch, so
+        repeated and permuted-config queries skip both the search and the
+        merge."""
+        resolved = tuple(resolve_query(q) for q in queries)
+        key = (resolved, emit)
+        forest = self._forests.get(key)
+        if forest is not None:
+            self._stats["schedule_hits"] += 1
+            return forest
+        self._stats["schedule_misses"] += 1
+        # Motifs are searched jointly; Pattern members are fixed points of
+        # the search but still shape its score (they sit in the trial trie)
+        pats = schedule_patterns(resolved)
+        plans = []
+        for r, p in zip(resolved, pats):
+            plan = compile_pattern(p, emit=emit)
+            self._plans.setdefault((r, emit), plan)
+            plans.append(plan)
+        forest = build_forest(plans)
+        self._forests[key] = forest
+        return forest
+
+    # ------------------------------------------------------------ execute
+    def count(self, query) -> int:
+        """Count embeddings of one pattern query."""
+        self._stats["queries"] += 1
+        return self._runner.run(self.compile(query))
+
+    def count_many(self, queries: Sequence) -> list[int]:
+        """Count a batch of pattern queries in one fused forest pass.
+
+        Results are positional and bit-identical to per-query ``count``
+        calls on the same scheduled patterns."""
+        self._stats["queries"] += 1
+        return self._runner.run_set(self.schedule(queries))
+
+    def embeddings(self, query) -> np.ndarray:
+        """Enumerate embeddings of one query as an (N, k) int32 matrix."""
+        self._stats["queries"] += 1
+        return self._runner.run(self.compile(query, emit=True))
+
+    def run_plans(self, plans: Sequence[WavePlan]) -> list:
+        """Execute pre-compiled plans (FSM's feed, power users): one plan
+        runs directly, several fuse through a cached forest."""
+        self._stats["queries"] += 1
+        plans = list(plans)
+        if len(plans) == 1:
+            return [self._runner.run(plans[0])]
+        key = ("plans", tuple(p.canonical_key() for p in plans))
+        forest = self._forests.get(key)
+        if forest is None:
+            self._stats["schedule_misses"] += 1
+            forest = self._forests[key] = build_forest(plans)
+        else:
+            self._stats["schedule_hits"] += 1
+        return self._runner.run_set(forest)
+
+    # -------------------------------------------------------------- stats
+    @property
+    def runner(self) -> WaveRunner:
+        """The session's execute-stage interpreter (stats, level_execs)."""
+        return self._runner
+
+    @property
+    def stats(self) -> dict:
+        """Session counters: pipeline-stage cache hits/misses, the
+        executable cache (``exec_cache.misses`` == retraces), and the
+        runner's dispatch/sync counters."""
+        return {
+            **self._stats,
+            "exec_cache": self.exec_cache.snapshot(),
+            "retraces": self.exec_cache.misses,
+            "runner": dict(self._runner.stats),
+        }

@@ -190,7 +190,7 @@ def _sdpa_blocked(q, k, v, pos_q, pos_k, causal, window, softcap, block_k):
     qf = q.astype(jnp.float32) * scale
 
     def step(carry, blk):
-        m, l, acc = carry
+        m, lse, acc = carry
         kt, vt, pk = blk
         s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kt.astype(jnp.float32))
         if softcap is not None:
@@ -200,7 +200,7 @@ def _sdpa_blocked(q, k, v, pos_q, pos_k, causal, window, softcap, block_k):
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         corr = jnp.exp(m - m_new)
         p = jnp.exp(s - m_new[..., None])
-        l_new = l * corr + jnp.sum(p, axis=-1)
+        l_new = lse * corr + jnp.sum(p, axis=-1)
         acc_new = acc * corr[..., None] + jnp.einsum(
             "bhgqk,bkhd->bhgqd", p, vt.astype(jnp.float32))
         return (m_new, l_new, acc_new), None
@@ -208,8 +208,8 @@ def _sdpa_blocked(q, k, v, pos_q, pos_k, causal, window, softcap, block_k):
     m0 = jnp.full((B, Hk, G, Sq), -jnp.inf, jnp.float32)
     l0 = jnp.zeros((B, Hk, G, Sq), jnp.float32)
     a0 = jnp.zeros((B, Hk, G, Sq, hd), jnp.float32)
-    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kb, vb, pb))
-    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    (m, lse, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kb, vb, pb))
+    out = acc / jnp.maximum(lse, 1e-30)[..., None]
     return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)   # (B,Sq,Hk,G,hd)
 
 

@@ -95,8 +95,8 @@ def mamba_apply(params, u, cfg: MambaConfig):
         dtf = dtc.astype(jnp.float32)
         decay = jnp.exp(dtf[..., None] * A)                # (B,Q,di,n)
         inp = (dtf * xc.astype(jnp.float32))[..., None] * bc.astype(jnp.float32)[:, :, None, :]
-        def comb(l, r):
-            return (r[0] * l[0], r[0] * l[1] + r[1])
+        def comb(lhs, rhs):
+            return (rhs[0] * lhs[0], rhs[0] * lhs[1] + rhs[1])
         a_cum, b_cum = jax.lax.associative_scan(comb, (decay, inp), axis=1)
         hs = a_cum * h[:, None] + b_cum                    # (B,Q,di,n)
         y = jnp.einsum("bqdn,bqn->bqd", hs, cc.astype(jnp.float32))

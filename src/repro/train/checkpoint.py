@@ -120,11 +120,11 @@ class CheckpointManager:
         if shard_tree is not None:
             flat_sh = jax.tree.leaves(
                 shard_tree, is_leaf=lambda x: hasattr(x, "spec"))
-            placed = [jax.device_put(a.astype(l.dtype), s)
-                      for a, l, s in zip(leaves, like_leaves, flat_sh)]
+            placed = [jax.device_put(a.astype(lk.dtype), s)
+                      for a, lk, s in zip(leaves, like_leaves, flat_sh)]
         else:
-            placed = [jax.numpy.asarray(a.astype(l.dtype))
-                      for a, l in zip(leaves, like_leaves)]
+            placed = [jax.numpy.asarray(a.astype(lk.dtype))
+                      for a, lk in zip(leaves, like_leaves)]
         restored = jax.tree.unflatten(treedef, placed)
         params = restored["params"]
         opt = restored.get("opt")

@@ -49,7 +49,7 @@ except ImportError:                                            # pragma: no cove
         def decorate(fn):
             @functools.wraps(fn)
             def skipper(*a, **k):
-                pytest.skip("hypothesis not installed (see requirements-dev.txt)")
+                pytest.skip("hypothesis not installed (see requirements.txt)")
             # drop hypothesis-bound params so pytest doesn't demand fixtures
             skipper.__wrapped__ = None
             skipper.__signature__ = __import__("inspect").Signature()

@@ -1,20 +1,37 @@
 import os
 import sys
 
+import pytest
+
 # tests see the 1 real device — the 512-device override lives ONLY in
 # launch/dryrun.py (spawned as a subprocess where needed).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
+def pytest_collection(session):
+    """TIER1_REQUIRE_DEPS=1 (set by scripts/tier1.sh == CI) asserts that
+    zero tests will skip for a missing dependency: a missing ``hypothesis``
+    fails the run outright instead of silently downgrading the property
+    tests to their seeded twins."""
+    if os.environ.get("TIER1_REQUIRE_DEPS") == "1":
+        try:
+            import hypothesis  # noqa: F401
+        except ImportError:
+            raise pytest.UsageError(
+                "TIER1_REQUIRE_DEPS=1 but hypothesis is not installed — "
+                "the property tests would skip. Install requirements.txt "
+                "(scripts/tier1.sh does) or unset TIER1_REQUIRE_DEPS.")
+
+
 def pytest_report_header(config):
     """Make a missing ``hypothesis`` loud instead of silently skipping the
     random-plan/forest property tests (the documented tier-1 flow —
-    scripts/tier1.sh — installs requirements-dev.txt first, matching CI)."""
+    scripts/tier1.sh — installs requirements.txt first, matching CI)."""
     try:
         import hypothesis
         return f"hypothesis {hypothesis.__version__}: property tests active"
     except ImportError:
         return ("WARNING: hypothesis NOT installed -> property tests SKIP "
                 "(seeded twins still run). Documented flow: "
-                "`pip install -r requirements-dev.txt` or scripts/tier1.sh "
+                "`pip install -r requirements.txt` or scripts/tier1.sh "
                 "— CI always runs with hypothesis.")

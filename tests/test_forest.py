@@ -196,7 +196,9 @@ def test_triangle_emit_through_forest_matches_host_oracle():
     tris = apps.triangle_list(g)                 # forest-scheduled emit plan
     host = apps.triangle_list_host(g)
     assert tris.shape == host.shape == (reference.triangle_count(g), 3)
-    key = lambda t: t[np.lexsort(t.T[::-1])]
+
+    def key(t):
+        return t[np.lexsort(t.T[::-1])]
     np.testing.assert_array_equal(key(tris), key(host))
 
 

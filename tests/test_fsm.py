@@ -45,7 +45,7 @@ def test_sfsm_matches_oracle_modulo_closure_bug(seed):
                     wedge_key(la, lc, lb)]
         elif kind == "star3":
             c, leaves = lab
-            subs = [edge_key(c, l) for l in leaves]
+            subs = [edge_key(c, lf) for lf in leaves]
             subs += [wedge_key(x, c, y)
                      for i, x in enumerate(leaves) for y in leaves[i + 1:]]
         elif kind == "path4":

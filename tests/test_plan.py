@@ -154,7 +154,8 @@ def test_triangle_list_device_matches_host_oracle(name):
     host = apps.triangle_list_host(g)
     assert dev.shape == host.shape == (reference.triangle_count(g), 3)
     # same triangles (chunk orders differ): compare as sorted row sets
-    key = lambda t: t[np.lexsort(t.T[::-1])]
+    def key(t):
+        return t[np.lexsort(t.T[::-1])]
     np.testing.assert_array_equal(key(dev), key(host))
 
 
@@ -175,8 +176,9 @@ def test_triangle_list_uses_device_compaction():
 def _draw_pattern(data) -> P.Pattern:
     k = data.draw(st.integers(3, 4), label="k")
     edges = {(0, 1)}
-    for l in range(2, k):                      # keep matching order connected
-        edges.add((data.draw(st.integers(0, l - 1), label=f"anchor{l}"), l))
+    for lvl in range(2, k):                    # keep matching order connected
+        edges.add((data.draw(st.integers(0, lvl - 1), label=f"anchor{lvl}"),
+                   lvl))
     for i, j in itertools.combinations(range(k), 2):
         if (i, j) not in edges and data.draw(st.booleans(), label=f"e{i}{j}"):
             edges.add((i, j))
@@ -225,9 +227,14 @@ def _seeded_pattern(seed: int) -> P.Pattern:
     class _Draw:
         def draw(self, strat, label=None):
             return strat(rng)
-    int_st = lambda lo, hi: (lambda r: r.randint(lo, hi))
-    bool_st = lambda r: r.random() < 0.5
-    perm_st = lambda xs: (lambda r: r.sample(xs, len(xs)))
+    def int_st(lo, hi):
+        return lambda r: r.randint(lo, hi)
+
+    def bool_st(r):
+        return r.random() < 0.5
+
+    def perm_st(xs):
+        return lambda r: r.sample(xs, len(xs))
 
     class _St:
         integers = staticmethod(int_st)

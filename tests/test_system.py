@@ -50,3 +50,12 @@ def test_serve_driver():
                "--tokens", "8"])
     assert out.returncode == 0, out.stderr[-2000:]
     assert "tok/s" in out.stdout
+
+
+def test_serve_driver_mining_session():
+    """One resident Miner serving the app mix: the steady-state round must
+    execute from cache alone (the driver asserts 0 retraces itself)."""
+    out = run(["repro.launch.serve", "--mine", "citeseer", "--rounds", "2"])
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "queries/s" in out.stdout
+    assert "0 retraces" in out.stdout
