@@ -251,6 +251,116 @@ def session_serving_report(g) -> dict:
     }
 
 
+def sharded_scaling_report(g, shard_counts=(1, 2, 4, 8)) -> dict:
+    """Mesh-sharded session vs single device: the full app mix {T, TC, TT,
+    4C, fused 4M} on 1/2/4/8(-fake-CPU)-device meshes from one ``Miner``
+    each (on CPU, devices come from
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+
+    Per mesh width the report records the warm second-pass wall clock,
+    per-shard dynamic dispatches (every executable call is one lockstep
+    dispatch on each shard, so the host-side dispatch count IS the
+    per-shard count), psum leaf reductions, the per-shard feed-item split
+    and its max/min balance ratio, plus ``speedup_vs_1dev``. Counts are
+    asserted bit-identical across widths.
+
+    ``dispatch_scaling_ok`` is the scaling acceptance: per-shard dispatches
+    on an S-way mesh must be <= single-device dispatches / S + a per-level
+    constant. Every dispatch happens inside a chunking loop (the level-1
+    feed or a compacted-worklist slice loop) whose sharded step count is
+    <= ceil(single-device steps / S): summing the ceil tax over all
+    executable call sites x degree buckets gives the static allowance
+    (``dispatch_allowance`` = plan/forest op sites x feed buckets)."""
+    import jax
+    import numpy as np
+    from repro.mining.engine import _pow2cap
+    from repro.mining.plan import FOUR_MOTIF_SHAPES
+    from repro.mining.session import Miner
+    names = list(FOUR_MOTIF_SHAPES)
+    deg = np.asarray(g.degrees)
+    n_buckets = len(np.unique(
+        [_pow2cap(max(int(d), 1)) for d in deg[deg > 0]])) or 1
+    out: dict = {"devices_visible": jax.device_count(),
+                 "shard_counts": [], "per_mesh": {}}
+    ref_counts = None
+
+    for s in shard_counts:
+        if s > jax.device_count():
+            out["per_mesh"][str(s)] = {
+                "skipped": f"only {jax.device_count()} device(s) visible"}
+            continue
+        miner = Miner(g, mesh=None if s == 1 else s)
+
+        def mix():
+            res = {"T": miner.count("triangle"),
+                   "TC": miner.count("three-chain"),
+                   "TT": miner.count("tailed-triangle"),
+                   "4C": miner.count("4-clique")}
+            res.update(zip(names, miner.count_many(names)))
+            return res
+
+        mix()                                   # warm-up: traces + schedules
+        warm = {"retraces": miner.stats["retraces"],
+                "dispatches": sum(miner.runner.level_execs.values()),
+                "psums": miner.stats["runner"].get("psum_reductions", 0)}
+        t0 = time.time()
+        counts = mix()
+        dt = time.time() - t0
+        if ref_counts is None:
+            ref_counts = counts
+        assert counts == ref_counts, (s, counts, ref_counts)
+        rs = miner.stats["runner"]
+        feed = rs.get("shard_feed_items")
+        row = {
+            "counts": counts,
+            "wall_s": round(dt, 4),
+            "dispatches_per_pass": (sum(miner.runner.level_execs.values())
+                                    - warm["dispatches"]),
+            "retraces_second_pass": miner.stats["retraces"]
+            - warm["retraces"],
+            "psum_reductions_per_pass": rs.get("psum_reductions", 0)
+            - warm["psums"],
+        }
+        if feed is not None:
+            half = [v // 2 for v in feed]       # two passes accumulated
+            row["shard_feed_items"] = half
+            row["feed_balance_ratio"] = round(
+                max(half) / max(min(half), 1), 3)
+        # executable call sites per pass — a schedule fact, identical for
+        # every mesh width; sizes the per-level dispatch allowance
+        if "n_sites" not in out:
+            sites = sum(len(miner.compile(q).ops) for q in
+                        ("triangle", "three-chain", "tailed-triangle",
+                         "4-clique"))
+            forest = miner.schedule(names)
+            stack = list(forest.symmetric_roots) + \
+                list(forest.directed_roots)
+            while stack:
+                node = stack.pop()
+                sites += 1
+                stack.extend(node.children)
+            out["n_sites"] = sites
+        out["per_mesh"][str(s)] = row
+        out["shard_counts"].append(s)
+
+    out["n_buckets"] = n_buckets
+    base = out["per_mesh"].get("1")
+    if base and "wall_s" in base:
+        # ceil tax of dividing every chunking loop's steps over S shards:
+        # at most one extra step per call site per degree bucket
+        allowance = n_buckets * out["n_sites"]
+        for s in out["shard_counts"]:
+            row = out["per_mesh"][str(s)]
+            row["speedup_vs_1dev"] = round(
+                base["wall_s"] / max(row["wall_s"], 1e-9), 2)
+            if s > 1:
+                row["dispatch_allowance"] = allowance
+                row["dispatch_scaling_ok"] = bool(
+                    row["dispatches_per_pass"]
+                    <= base["dispatches_per_pass"] / s + allowance)
+    return out
+
+
 def plan_overhead_report(g) -> dict:
     """Interpreter tax: the same clique/TT workloads through compiled
     ``WavePlan``s vs the frozen pre-refactor hand-coded engine paths
@@ -319,6 +429,37 @@ def run(quick: bool = True):
             "per_ref_dispatches": fl["per_ref"]["kernel_dispatches"],
             "fused_dispatches": fl["fused"]["kernel_dispatches"],
             "fused_level_speedup": fl["fused_level_speedup"]}))
+        if name == "email-eu-core":
+            import jax as _jax
+            sr = sharded_scaling_report(g)
+            for s in sr["shard_counts"]:
+                pm = sr["per_mesh"][str(s)]
+                print(f"[mining] {name:14s} mesh x{s}: "
+                      f"{pm['wall_s']:.3f}s "
+                      f"({pm['dispatches_per_pass']} dispatches/pass, "
+                      f"{pm['psum_reductions_per_pass']} psums, "
+                      f"speedup {pm.get('speedup_vs_1dev', 1.0)}x"
+                      + (f", feed ratio {pm['feed_balance_ratio']}"
+                         if "feed_balance_ratio" in pm else "")
+                      + (", dispatch scaling "
+                         + ("OK" if pm.get("dispatch_scaling_ok") else "FAIL")
+                         if s > 1 else "") + ")", flush=True)
+                rows.append(dict(
+                    dataset=name, app=f"sharded-x{s}",
+                    wall_s=pm["wall_s"],
+                    dispatches_per_pass=pm["dispatches_per_pass"],
+                    psum_reductions_per_pass=pm["psum_reductions_per_pass"],
+                    retraces_second_pass=pm["retraces_second_pass"],
+                    speedup_vs_1dev=pm.get("speedup_vs_1dev", 1.0),
+                    **({"feed_balance_ratio": pm["feed_balance_ratio"]}
+                       if "feed_balance_ratio" in pm else {}),
+                    **({"dispatch_scaling_ok": pm["dispatch_scaling_ok"]}
+                       if "dispatch_scaling_ok" in pm else {})))
+            if any("skipped" in v for v in sr["per_mesh"].values()):
+                print(f"[mining] {name:14s} mesh: only "
+                      f"{_jax.device_count()} device(s) visible — set "
+                      "XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+                      "for the full scaling sweep", flush=True)
         ff = forest_fusion_report(g)
         print(f"[mining] {name:14s} 4M forest fusion: "
               f"fused {ff['fused_s']:.3f}s vs independent "

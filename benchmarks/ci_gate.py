@@ -43,12 +43,18 @@ from benchmarks.bench_mining import (fused_level_report,   # noqa: E402
                                      forest_fusion_report,
                                      plan_overhead_report,
                                      session_serving_report,
+                                     sharded_scaling_report,
                                      wave_throughput_report)
 
 # exact app counts: small + cheap (deterministic synthetic graphs)
 COUNT_SETS = [("citeseer", 1.0), ("email-eu-core", 0.25)]
 # session-API smoke: one Miner serving the app mix twice on this set
 SESSION_SET = ("email-eu-core", 0.25)
+# mesh-sharded leg (--sharded, needs >= 8 devices: CI sets
+# XLA_FLAGS=--xla_force_host_platform_device_count=8): counts parity,
+# shard/psum counters, retraces and the dispatch-scaling bound
+SHARDED_SET = ("email-eu-core", 0.25)
+SHARDED_WIDTHS = (1, 8)
 # wall-clock ratios + structural counters: dense enough that the timed
 # region is hundreds of ms, not noise (see stability note in tolerances)
 PERF_SET = ("email-eu-core", 1.0)
@@ -72,7 +78,67 @@ DIRECTIONS = {
 }
 
 
-def measure() -> dict:
+def measure_sharded(exact: dict) -> None:
+    """Mesh-sharded gate section (CI's multi-device leg): every key is an
+    exact schedule/count fact under 8 fake CPU devices.
+
+    * counts parity — the sharded mix must equal the 1-device mix
+      bit-for-bit (asserted inside ``sharded_scaling_report``; the counts
+      land in the baseline once);
+    * retraces — a repeated sharded pass builds 0 new executables;
+    * dispatch/psum counters — per-shard dispatches and psum leaf
+      reductions per pass are schedule facts, including the scaling bound
+      ``dispatches_8 <= dispatches_1 / 8 + allowance``;
+    * feed balance — the round-robin partitioner's per-shard feed items on
+      FULL email-eu-core (host-only sweep, no mining) with the max/min
+      ratio <= 2 acceptance bound.
+    """
+    import jax
+    from repro.graph import get_dataset
+    from repro.mining.engine import choose_chunk
+    from repro.mining.shard import shard_edge_steps
+    if jax.device_count() < max(SHARDED_WIDTHS):
+        raise SystemExit(
+            f"[gate] --sharded needs {max(SHARDED_WIDTHS)} devices, have "
+            f"{jax.device_count()}: set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={max(SHARDED_WIDTHS)}")
+
+    name, scale = SHARDED_SET
+    g = get_dataset(name, scale=scale)
+    tag = f"{name}@{scale}"
+    print(f"[gate] {tag}: sharded scaling ...", flush=True)
+    sr = sharded_scaling_report(g, SHARDED_WIDTHS)
+    s_max = max(SHARDED_WIDTHS)
+    many = sr["per_mesh"][str(s_max)]
+    exact[f"sharded.{tag}.counts"] = many["counts"]
+    exact[f"sharded.{tag}.retraces_second_pass"] = \
+        many["retraces_second_pass"]
+    exact[f"sharded.{tag}.dispatches_per_pass"] = {
+        str(s): sr["per_mesh"][str(s)]["dispatches_per_pass"]
+        for s in SHARDED_WIDTHS}
+    exact[f"sharded.{tag}.psum_reductions_per_pass"] = \
+        many["psum_reductions_per_pass"]
+    exact[f"sharded.{tag}.shard_feed_items_{s_max}"] = \
+        many["shard_feed_items"]
+    exact[f"sharded.{tag}.dispatch_scaling_ok"] = \
+        bool(many["dispatch_scaling_ok"])
+
+    # full-graph partitioner balance: host-only feed sweep, no mining
+    g_full = get_dataset(name, scale=1.0)
+    chunk = min(choose_chunk(g_full.padded_max_degree), 1 << 15)
+    items = [0] * s_max
+    for _cap, _v0, _v1, n in shard_edge_steps(g_full, chunk, s_max):
+        for s in range(s_max):
+            items[s] += int(n[s])
+    ratio = max(items) / max(min(items), 1)
+    exact[f"sharded.{name}.feed_items_{s_max}"] = items
+    exact[f"sharded.{name}.feed_balance_ratio_le_2"] = bool(ratio <= 2.0)
+    print(f"[gate] sharded: feed ratio {ratio:.3f} on {name}, "
+          f"dispatches {exact[f'sharded.{tag}.dispatches_per_pass']}, "
+          f"{many['psum_reductions_per_pass']} psums/pass", flush=True)
+
+
+def measure(sharded: bool = False) -> dict:
     from repro.graph import get_dataset
     from repro.mining import apps
     exact: dict = {}
@@ -129,6 +195,9 @@ def measure() -> dict:
 
     wt = wave_throughput_report(g)
     ratios[f"{tag}.wave_speedup"] = wt["wave_speedup"]
+
+    if sharded:
+        measure_sharded(exact)
     return {
         "meta": {
             "python": platform.python_version(),
@@ -151,10 +220,18 @@ def _tolerance_for(metric: str, baseline: dict) -> tuple[float, str]:
 
 
 def compare(got: dict, baseline: dict) -> list[str]:
-    """Return a list of regression messages (empty = gate passes)."""
+    """Return a list of regression messages (empty = gate passes).
+
+    The ``sharded.*`` exact keys only exist when the gate ran with
+    ``--sharded`` (the multi-device CI leg). A run without it skips those
+    baseline keys instead of failing, so the single-device bench job stays
+    green against a baseline recorded under 8 fake devices."""
     failures = []
     base_exact = baseline.get("exact", {})
+    ran_sharded = any(k.startswith("sharded.") for k in got["exact"])
     for key, want in base_exact.items():
+        if key.startswith("sharded.") and not ran_sharded:
+            continue
         have = got["exact"].get(key, "<missing>")
         if have != want:
             failures.append(f"EXACT {key}: baseline {want!r} != got {have!r}")
@@ -189,13 +266,28 @@ def main(argv=None) -> int:
     ap.add_argument("--out", default="BENCH_mining.json")
     ap.add_argument("--baseline", default="benchmarks/baseline.json")
     ap.add_argument("--update-baseline", action="store_true")
+    ap.add_argument("--sharded", action="store_true",
+                    help="also run the mesh-sharded gate section (needs "
+                         "8 devices; CI sets XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8)")
     args = ap.parse_args(argv)
 
-    got = measure()
+    got = measure(sharded=args.sharded)
     Path(args.out).write_text(json.dumps(got, indent=2, sort_keys=True))
     print(f"[gate] wrote {args.out}")
 
     if args.update_baseline:
+        exact = got["exact"]
+        if not any(k.startswith("sharded.") for k in exact):
+            # keep the sharded section recorded by a previous --sharded
+            # update rather than silently dropping it
+            try:
+                old = json.loads(Path(args.baseline).read_text())
+            except (FileNotFoundError, json.JSONDecodeError):
+                old = {}
+            exact = {**{k: v for k, v in old.get("exact", {}).items()
+                        if k.startswith("sharded.")}, **exact}
+            got = {**got, "exact": exact}
         doc = {
             "_doc": ("CI perf-regression baseline (benchmarks/ci_gate.py). "
                      "'exact' must match bit-for-bit; 'ratios' fail when "

@@ -49,3 +49,10 @@ before = m.stats["retraces"]
 m.count("triangle")
 m.count_many(names)
 print("retraces on repeat :", m.stats["retraces"] - before)
+
+# multi-device? the same session mines data-parallel over a mesh — counts
+# are bit-identical (on CPU: XLA_FLAGS=--xla_force_host_platform_device_count=8)
+import jax
+if jax.device_count() > 1:
+    ms = Miner(g, mesh=jax.device_count())
+    print("triangles (mesh)   :", ms.count("triangle"))

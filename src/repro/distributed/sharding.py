@@ -46,6 +46,28 @@ def make_mesh_compat(axis_shapes, axis_names, *, devices=None) -> Mesh:
     return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
 
 
+def make_mining_mesh(shards: int | None = None, axis: str = "mine", *,
+                     devices=None) -> Mesh:
+    """1-D device mesh for data-parallel pattern mining (mining.shard).
+
+    ``shards=None`` takes every visible device; an explicit count uses the
+    first ``shards`` devices (a strict prefix keeps the mesh deterministic,
+    so cache signatures and psum groups are stable across runs). The mining
+    axis is the only axis — wavefront sharding is pure DP over the level-1
+    edge feed, there is no model axis to compose with.
+    """
+    devs = list(devices) if devices is not None else jax.devices()
+    n = int(shards) if shards else len(devs)
+    if n < 1:
+        raise ValueError(f"mining mesh needs >= 1 shard, got {n}")
+    if n > len(devs):
+        raise ValueError(
+            f"mining mesh wants {n} shards but only {len(devs)} device(s) "
+            f"are visible; on CPU set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n}")
+    return make_mesh_compat((n,), (axis,), devices=devs[:n])
+
+
 def abstract_mesh(axis_shapes, axis_names):
     """``jax.sharding.AbstractMesh`` across jax versions.
 

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import jax
 
-from repro.distributed.sharding import make_mesh_compat
+from repro.distributed.sharding import make_mesh_compat, make_mining_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -39,3 +39,7 @@ def make_host_mesh(model_parallel: int | None = None):
 
 def mesh_chips(mesh) -> int:
     return int(mesh.devices.size)
+
+
+__all__ = ["make_host_mesh", "make_mining_mesh", "make_production_mesh",
+           "mesh_chips"]

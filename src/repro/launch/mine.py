@@ -121,11 +121,18 @@ def main(argv=None):
                     help="print degree-balanced partition stats (straggler)")
     ap.add_argument("--session-stats", action="store_true",
                     help="print the session's cache/retrace counters")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="mine data-parallel over an N-way device mesh "
+                         "(on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     args = ap.parse_args(argv)
 
     g = get_dataset(args.dataset, scale=args.scale)
     print(f"[mine] {args.dataset} x{args.scale}: {dataset_stats(g)}")
-    miner = Miner(g)
+    miner = Miner(g, mesh=args.shards if args.shards > 1 else None)
+    if miner.mesh is not None:
+        print(f"[mine] mesh: {args.shards}-way "
+              f"({dict(miner.mesh.shape)})")
     labels = random_labels(g.num_vertices, args.labels, seed=1) \
         if args.app in ("FSM", "sFSM") else None
     if args.app in ("F3M", "F4M"):
@@ -170,6 +177,12 @@ def main(argv=None):
               f"{st['exec_cache']['misses']} traces, "
               f"plan cache {st['plan_hits']}/{st['plan_misses']}, "
               f"schedule cache {st['schedule_hits']}/{st['schedule_misses']}")
+        if miner.mesh is not None:
+            rs = st["runner"]
+            fi = rs["shard_feed_items"]
+            print(f"[mine] shards: feed items {fi} "
+                  f"(max/min {max(fi)/max(min(fi), 1):.2f}), "
+                  f"{rs['psum_reductions']} psum reductions")
 
 
 if __name__ == "__main__":

@@ -17,8 +17,13 @@ import argparse
 import time
 
 
-def serve_mining(dataset: str, scale: float, rounds: int) -> None:
-    """Serve ``rounds`` passes of the app mix from one resident session."""
+def serve_mining(dataset: str, scale: float, rounds: int,
+                 shards: int = 0) -> None:
+    """Serve ``rounds`` passes of the app mix from one resident session.
+
+    ``shards > 1`` serves from a mesh-sharded session (data-parallel
+    wavefronts, ``mining.shard``): the 0-retrace steady-state contract is
+    identical — sharded executables live in the same session cache."""
     from repro.graph import get_dataset
     from repro.graph.datasets import dataset_stats
     from repro.mining.plan import FOUR_MOTIF_SHAPES
@@ -28,7 +33,9 @@ def serve_mining(dataset: str, scale: float, rounds: int) -> None:
         raise SystemExit("[serve] --rounds must be >= 1")
     g = get_dataset(dataset, scale=scale)
     print(f"[serve] mining {dataset} x{scale}: {dataset_stats(g)}")
-    miner = Miner(g)
+    miner = Miner(g, mesh=shards if shards > 1 else None)
+    if miner.mesh is not None:
+        print(f"[serve] mesh: {dict(miner.mesh.shape)}")
     motif_names = list(FOUR_MOTIF_SHAPES)
 
     def mix() -> dict:
@@ -79,10 +86,13 @@ def main(argv=None):
                          "on this dataset instead of LLM decoding")
     ap.add_argument("--scale", type=float, default=1.0)
     ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--shards", type=int, default=0,
+                    help="with --mine: serve from an N-way mesh-sharded "
+                         "session")
     args = ap.parse_args(argv)
 
     if args.mine:
-        serve_mining(args.mine, args.scale, args.rounds)
+        serve_mining(args.mine, args.scale, args.rounds, args.shards)
         return
 
     import jax

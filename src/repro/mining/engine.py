@@ -317,7 +317,27 @@ class WaveRunner:
     ``compact`` oracle (np.nonzero + re-upload) — the twin the fast path is
     property-tested against. ``record=True`` captures each wave's live
     (carry-or-prefix-columns, verts) into ``trace`` for those comparisons.
+
+    Every executable is built in two halves: an unjitted *body*
+    (``_count_body`` / ``_expand_body`` / ``_emit_body`` / ``_chunk_body`` /
+    ``_rpack_body``) holding the traced computation, and a ``_jit_*`` hook
+    that wraps it for dispatch (plain ``jax.jit`` here). The mesh-sharded
+    runner (``mining.shard.ShardedWaveRunner``) overrides only the hooks —
+    wrapping each body in ``shard_map`` with a ``psum`` leaf reduction —
+    plus the feed/meta plumbing, so both runners interpret plans through
+    the exact same per-level semantics. The bodies are written to accept
+    the live count ``n`` as either a scalar (this runner) or a shape-(1,)
+    per-shard slice (broadcast against ``jnp.arange`` either way).
     """
+
+    # data-parallel width of the wave arrays: every (items,) buffer holds
+    # ``_shards`` per-shard blocks back to back; 1 here (single device),
+    # the mesh size on ShardedWaveRunner (which also divides the host-side
+    # batch arithmetic below by it).
+    _shards: int = 1
+    # prepended to every executable-cache key so sharded (shard_map-wrapped)
+    # traces can never collide with unsharded traces of the same LevelOp
+    _exec_prefix: tuple = ()
 
     def __init__(self, g: CSRGraph, chunk: int | None = None,
                  backend: str = "auto", device_compact: bool = True,
@@ -373,6 +393,7 @@ class WaveRunner:
 
     # ------------------------------------------------------------------ cache
     def _executable(self, key: tuple, build: Callable) -> Callable:
+        key = self._exec_prefix + key
         if self._exec_cache is not None:
             key = (self.chunk, self.backend, self.device_compact,
                    self.fused_level) + key
@@ -539,6 +560,15 @@ class WaveRunner:
         whenever maxc * max_degree < 2^31 (the old host path multiplied in
         int64 but pulled the whole count vector to do it).
         """
+        def build():
+            return self._jit_count(
+                op, self._count_body(op, caps_sig, cap_base))
+        return self._executable(
+            ("pcount", op, caps_sig, cap_base, self.fused_level), build)
+
+    def _count_body(self, op: LevelOp, caps_sig: tuple, cap_base: int):
+        """Unjitted count-level body (see the two-halves note in the class
+        docstring); ``_jit_count`` wraps it for dispatch."""
         backend = self.backend
         in_cols = self._in_cols(op)
         caps = dict(caps_sig)
@@ -548,39 +578,62 @@ class WaveRunner:
         pol = (1,) * len(op.inter) + (0,) * len(op.sub)
         use_xlevel = fused is None and self.fused_level
 
-        def build():
-            @jax.jit
-            def fn(g, vals, carry, n):
-                get = dict(zip(in_cols, vals))
-                base = carry if op.use_carry else \
-                    padded_rows(g, get[op.base], caps[op.base])[0]
-                if fused:
-                    ub = self._ub_vec(op, get, n, base.shape[0])
-                    lb = self._max_lb(op, get) if op.lb else None
-                    ref = op.inter[0] if fused == "inter" else op.sub[0]
-                    nbr, _ = padded_rows(g, get[ref], caps[ref])
-                    cfun = xinter_count if fused == "inter" else xsub_count
-                    counts = cfun(base, nbr, ub, backend=backend, lbounds=lb)
-                elif use_xlevel:
-                    ub = self._ub_vec(op, get, n, base.shape[0])
-                    lb = self._max_lb(op, get) if op.lb else None
-                    bs = self._stack_refs(g, get, caps, refs) if refs \
-                        else None
-                    counts = xlevel_count(base, bs, pol, ub, backend=backend,
-                                          lbounds=lb,
-                                          excludes=self._excl_vals(op, get))
-                else:
-                    counts = jnp.sum(keep_of(g, base, get, n), axis=1,
-                                     dtype=jnp.int32)
-                if op.tail is not None:
-                    col, c = op.tail
-                    counts = counts * (g.degrees[get[col]].astype(jnp.int32)
-                                       - c)
-                return jnp.stack([jnp.sum(counts >> 16, dtype=jnp.int32),
-                                  jnp.sum(counts & 0xFFFF, dtype=jnp.int32)])
-            return fn
-        return self._executable(
-            ("pcount", op, caps_sig, cap_base, self.fused_level), build)
+        def fn(g, vals, carry, n):
+            get = dict(zip(in_cols, vals))
+            base = carry if op.use_carry else \
+                padded_rows(g, get[op.base], caps[op.base])[0]
+            if fused:
+                ub = self._ub_vec(op, get, n, base.shape[0])
+                lb = self._max_lb(op, get) if op.lb else None
+                ref = op.inter[0] if fused == "inter" else op.sub[0]
+                nbr, _ = padded_rows(g, get[ref], caps[ref])
+                cfun = xinter_count if fused == "inter" else xsub_count
+                counts = cfun(base, nbr, ub, backend=backend, lbounds=lb)
+            elif use_xlevel:
+                ub = self._ub_vec(op, get, n, base.shape[0])
+                lb = self._max_lb(op, get) if op.lb else None
+                bs = self._stack_refs(g, get, caps, refs) if refs \
+                    else None
+                counts = xlevel_count(base, bs, pol, ub, backend=backend,
+                                      lbounds=lb,
+                                      excludes=self._excl_vals(op, get))
+            else:
+                counts = jnp.sum(keep_of(g, base, get, n), axis=1,
+                                 dtype=jnp.int32)
+            if op.tail is not None:
+                col, c = op.tail
+                counts = counts * (g.degrees[get[col]].astype(jnp.int32)
+                                   - c)
+            return jnp.stack([jnp.sum(counts >> 16, dtype=jnp.int32),
+                              jnp.sum(counts & 0xFFFF, dtype=jnp.int32)])
+        return fn
+
+    # -------------------------------------------------------- jit hooks
+    # Single-device dispatch is a plain jit of each body; the sharded
+    # runner overrides these to wrap the same bodies in shard_map (psum
+    # reductions for count partials, per-shard meta/total rows otherwise).
+    def _jit_count(self, op: LevelOp, body: Callable) -> Callable:
+        return jax.jit(body)
+
+    def _jit_expand(self, op: LevelOp, body: Callable,
+                    want_count: bool) -> Callable:
+        return jax.jit(body)
+
+    def _jit_emit(self, op: LevelOp, body: Callable) -> Callable:
+        return jax.jit(body)
+
+    def _jit_chunk(self, op: LevelOp, body: Callable) -> Callable:
+        return jax.jit(body)
+
+    def _jit_rpack(self, body: Callable, nrefs: int) -> Callable:
+        return jax.jit(body)
+
+    def _pack_total(self, tot):
+        """Host view of a residual-pack live total: (orchestration value,
+        any-survivors?). The sharded runner returns the per-shard total
+        vector so downstream chunking stays lockstep SPMD."""
+        tot = int(tot)
+        return tot, bool(tot)
 
     def _survivor_core(self, op: LevelOp, caps: dict, out_cap: int,
                        out_items: int):
@@ -641,31 +694,39 @@ class WaveRunner:
         credited with, at zero extra dispatches (same envelope as
         ``_plan_count_fn``: counts are already per-row exact).
         """
+        def build():
+            return self._jit_expand(
+                op, self._expand_body(op, caps_sig, cap_base, out_cap,
+                                      out_items, want_count), want_count)
+        return self._executable(
+            ("pexpand", op, caps_sig, cap_base, out_cap, out_items,
+             self.fused_level, want_count), build)
+
+    def _expand_body(self, op: LevelOp, caps_sig: tuple, cap_base: int,
+                     out_cap: int, out_items: int, want_count: bool):
+        """Unjitted expand-level body; meta layout as in
+        ``_plan_expand_fn``, the (hi, lo) ride pair (when ``want_count``)
+        in the last two slots."""
         in_cols = self._in_cols(op)
         caps = dict(caps_sig)
         core = self._survivor_core(op, caps, out_cap, out_items)
 
-        def build():
-            @jax.jit
-            def fn(g, vals, carry, n):
-                get = dict(zip(in_cols, vals))
-                base = carry if op.use_carry else \
-                    padded_rows(g, get[op.base], caps[op.base])[0]
-                rows2, counts, src, verts, total, maxc = \
-                    core(g, get, base, n)
-                live = jnp.arange(out_items, dtype=jnp.int32) < total
-                metas = [total, maxc]
-                for c in op.gather_refs:
-                    cv = verts if c == op.level else get[c][src]
-                    metas.append(jnp.max(jnp.where(live, g.degrees[cv], 0)))
-                if want_count:
-                    metas += [jnp.sum(counts >> 16, dtype=jnp.int32),
-                              jnp.sum(counts & 0xFFFF, dtype=jnp.int32)]
-                return rows2, src, verts, jnp.stack(metas)
-            return fn
-        return self._executable(
-            ("pexpand", op, caps_sig, cap_base, out_cap, out_items,
-             self.fused_level, want_count), build)
+        def fn(g, vals, carry, n):
+            get = dict(zip(in_cols, vals))
+            base = carry if op.use_carry else \
+                padded_rows(g, get[op.base], caps[op.base])[0]
+            rows2, counts, src, verts, total, maxc = \
+                core(g, get, base, n)
+            live = jnp.arange(out_items, dtype=jnp.int32) < total
+            metas = [total, maxc]
+            for c in op.gather_refs:
+                cv = verts if c == op.level else get[c][src]
+                metas.append(jnp.max(jnp.where(live, g.degrees[cv], 0)))
+            if want_count:
+                metas += [jnp.sum(counts >> 16, dtype=jnp.int32),
+                          jnp.sum(counts & 0xFFFF, dtype=jnp.int32)]
+            return rows2, src, verts, jnp.stack(metas)
+        return fn
 
     def _plan_expand_host_fn(self, op: LevelOp, caps_sig: tuple,
                              cap_base: int, out_cap: int):
@@ -692,26 +753,32 @@ class WaveRunner:
                       out_cap: int, out_items: int):
         """Terminal emit level: compacted embeddings stay device-side until
         one bulk pull per chunk (FSM's triangle feed; ROADMAP item)."""
+        def build():
+            return self._jit_emit(
+                op, self._emit_body(op, caps_sig, cap_base, out_cap,
+                                    out_items))
+        return self._executable(
+            ("pemit", op, caps_sig, cap_base, out_cap, out_items,
+             self.fused_level), build)
+
+    def _emit_body(self, op: LevelOp, caps_sig: tuple, cap_base: int,
+                   out_cap: int, out_items: int):
+        """Unjitted emit-level body: (embedding matrix, live total)."""
         in_cols = self._in_cols(op)
         caps = dict(caps_sig)
         core = self._survivor_core(op, caps, out_cap, out_items)
 
-        def build():
-            @jax.jit
-            def fn(g, vals, carry, n):
-                get = dict(zip(in_cols, vals))
-                base = carry if op.use_carry else \
-                    padded_rows(g, get[op.base], caps[op.base])[0]
-                _, _, src, verts, total, _ = core(g, get, base, n)
-                live = jnp.arange(out_items, dtype=jnp.int32) < total
-                cols_out = [verts if c == op.level
-                            else jnp.where(live, get[c][src], 0)
-                            for c in op.out_cols]
-                return jnp.stack(cols_out, axis=1), total
-            return fn
-        return self._executable(
-            ("pemit", op, caps_sig, cap_base, out_cap, out_items,
-             self.fused_level), build)
+        def fn(g, vals, carry, n):
+            get = dict(zip(in_cols, vals))
+            base = carry if op.use_carry else \
+                padded_rows(g, get[op.base], caps[op.base])[0]
+            _, _, src, verts, total, _ = core(g, get, base, n)
+            live = jnp.arange(out_items, dtype=jnp.int32) < total
+            cols_out = [verts if c == op.level
+                        else jnp.where(live, get[c][src], 0)
+                        for c in op.out_cols]
+            return jnp.stack(cols_out, axis=1), total
+        return fn
 
     def _plan_chunk_fn(self, op: LevelOp, b: int, out_cap: int, cap2: int,
                        chunk: int):
@@ -720,22 +787,25 @@ class WaveRunner:
         count so padding items carry bound-0 everywhere), the new vertex
         column comes from ``verts``, and the survivor streams become the next
         carry when the compiler proved reuse."""
-        carry_out = op.carry_out
-
         def build():
-            @jax.jit
-            def fn(rows2, src, verts2, colvals, lo, m):
-                s = jax.lax.dynamic_slice_in_dim(src, lo, chunk)
-                v = jax.lax.dynamic_slice_in_dim(verts2, lo, chunk)
-                valid = jnp.arange(chunk, dtype=jnp.int32) < m
-                v = jnp.where(valid, v, 0)
-                outs = tuple(jnp.where(valid, cv[s], 0) for cv in colvals)
-                if carry_out:
-                    return outs, v, rows2[s, :cap2]
-                return outs, v
-            return fn
+            return self._jit_chunk(op, self._chunk_body(op, cap2, chunk))
         return self._executable(("pchunk", op, b, out_cap, cap2, chunk),
                                 build)
+
+    def _chunk_body(self, op: LevelOp, cap2: int, chunk: int):
+        """Unjitted worklist-slice body for ``_plan_chunk_fn``."""
+        carry_out = op.carry_out
+
+        def fn(rows2, src, verts2, colvals, lo, m):
+            s = jax.lax.dynamic_slice_in_dim(src, lo, chunk)
+            v = jax.lax.dynamic_slice_in_dim(verts2, lo, chunk)
+            valid = jnp.arange(chunk, dtype=jnp.int32) < m
+            v = jnp.where(valid, v, 0)
+            outs = tuple(jnp.where(valid, cv[s], 0) for cv in colvals)
+            if carry_out:
+                return outs, v, rows2[s, :cap2]
+            return outs, v
+        return fn
 
     # ------------------------------------------------------- the interpreter
     def _record(self, level: int, rows, verts, n: int) -> None:
@@ -759,8 +829,13 @@ class WaveRunner:
                 return np.zeros((0, plan.k), dtype=np.int32)
             return np.concatenate(parts, axis=0).astype(np.int32)
         total = 0
-        for p in parts:                     # (hi, lo) int32 pairs, exact
-            hi, lo = (int(x) for x in np.asarray(p))
+        for p in parts:
+            v = np.asarray(p)
+            if v.shape[0] == 4:     # psum'd 16-bit limb quad (sharded runner)
+                hi = (int(v[0]) << 16) + int(v[1])
+                lo = (int(v[2]) << 16) + int(v[3])
+            else:                   # (hi, lo) int32 pair, exact
+                hi, lo = (int(x) for x in v)
             total += (hi << 16) + lo
         if plan.div > 1:
             assert total % plan.div == 0, (plan.pattern.name, total, plan.div)
@@ -837,7 +912,8 @@ class WaveRunner:
             for i in node.plans:
                 acc[i].append(part)
             return
-        b = int(carry.shape[0]) if op.use_carry else int(cols[op.base].shape[0])
+        b = (int(carry.shape[0]) if op.use_carry
+             else int(cols[op.base].shape[0])) // self._shards
         out_cap = min([cap_base] + [caps[j] for j in op.inter])
         out_items = -(-b * out_cap // self.chunk) * self.chunk
         if op.kind == "emit":
@@ -890,13 +966,13 @@ class WaveRunner:
         for ch in node.children:
             if not ch.op.residual:
                 continue
-            pfn, refs = self._residual_pack_fn(op.level, ch.op.residual,
-                                               int(src.shape[0]))
+            pfn, refs = self._residual_pack_fn(
+                op.level, ch.op.residual, int(src.shape[0]) // self._shards)
             rvals = tuple(cols[c] for c in refs)
             src_b, verts_b, tot_b = pfn(rvals, src, verts2, total)
-            tot_b = int(tot_b)
+            tot_b, has_b = self._pack_total(tot_b)
             self.stats["host_syncs"] += 1
-            if tot_b:
+            if has_b:
                 feeds.append(([ch], src_b, verts_b, tot_b))
         for children, s, v, t in feeds:
             for cols2, carry2, vch, m in self._expand_chunks(
@@ -919,7 +995,8 @@ class WaveRunner:
             self._bump(op)
             fn = self._plan_count_fn(op, caps_sig, cap_base)
             return [fn(self.g, vals, carry_in, n)]
-        b = int(carry.shape[0]) if op.use_carry else int(cols[op.base].shape[0])
+        b = (int(carry.shape[0]) if op.use_carry
+             else int(cols[op.base].shape[0])) // self._shards
         out_cap = min([cap_base] + [caps[j] for j in op.inter])
         out_items = -(-b * out_cap // self.chunk) * self.chunk
         if op.kind == "emit":
@@ -1036,24 +1113,30 @@ class WaveRunner:
                              if c < level}))
 
         def build():
-            @jax.jit
-            def fn(rvals, src, verts, total):
-                get = dict(zip(refs, rvals))
-
-                def val(c):
-                    return verts if c == level else get[c][src]
-                idx = jnp.arange(out_items, dtype=jnp.int32)
-                ok = idx < total
-                for kind, i, j in residual:
-                    ok = ok & ((val(i) < val(j)) if kind == "lt"
-                               else (val(i) != val(j)))
-                order, tot = compact_indices_scan(ok)
-                live = idx < tot
-                return src[order], \
-                    jnp.where(live, verts[order], 0).astype(jnp.int32), tot
-            return fn
+            return self._jit_rpack(
+                self._rpack_body(level, residual, refs, out_items),
+                len(refs))
         return self._executable(("rpack", level, residual, out_items),
                                 build), refs
+
+    def _rpack_body(self, level: int, residual: tuple, refs: tuple,
+                    out_items: int):
+        """Unjitted residual-pack body for ``_residual_pack_fn``."""
+        def fn(rvals, src, verts, total):
+            get = dict(zip(refs, rvals))
+
+            def val(c):
+                return verts if c == level else get[c][src]
+            idx = jnp.arange(out_items, dtype=jnp.int32)
+            ok = idx < total
+            for kind, i, j in residual:
+                ok = ok & ((val(i) < val(j)) if kind == "lt"
+                           else (val(i) != val(j)))
+            order, tot = compact_indices_scan(ok)
+            live = idx < tot
+            return src[order], \
+                jnp.where(live, verts[order], 0).astype(jnp.int32), tot
+        return fn
 
     def _expand_chunks_host(self, op, caps_sig, cap_base, out_cap, cols,
                             vals, carry_in, n, ride_out: dict | None = None):

@@ -45,6 +45,10 @@ branch of a node are applied at the node; disagreeing residuals defer
 further down. Relaxation therefore never changes any leaf's result, only
 *where* constraints are enforced — ``run_set`` output is bit-identical to
 running each plan independently (property-tested in tests/test_forest.py).
+The same forest interprets unchanged on the mesh-sharded runner
+(``mining.shard.ShardedWaveRunner``): the fan-out and residual packs are
+per-shard SPMD, count leaves psum across the mesh, and per-plan results
+stay bit-identical to both the single-device forest and independent runs.
 
 **Count-rides-expand fusion**: a terminal count leaf (no degree tail)
 whose stream key AND full constraint set (ub/lb/exclude/residual) equal a

@@ -44,8 +44,8 @@ Executable-cache key
     (mesh/shape signature) + (chunk, backend, device_compact, fused_level)
         + (kind, LevelOp, capacity signature, ...)
 
-The mesh/shape signature (platform + device count today, the mesh axes
-when multi-device sharding lands) isolates executables compiled for
+The mesh/shape signature (platform + device count, plus the actual mesh
+axes for a sharded session — see below) isolates executables compiled for
 different device topologies; the runner-config segment isolates chunk
 shapes and kernel-path flags; the trailing segment is the runner's
 per-executable key (LevelOps hash by value, so structurally equal levels
@@ -53,6 +53,32 @@ of different patterns share one trace). A cache *miss* is a retrace —
 ``Miner.stats`` exposes hit/miss counters, and the session-reuse contract
 (tested in tests/test_session.py, gated in benchmarks/ci_gate.py) is that
 a repeated query produces **zero** new traces.
+
+Mesh contract (sharded sessions)
+--------------------------------
+
+``Miner(g, mesh=S)`` (S > 1) mines data-parallel over a 1-D device mesh:
+
+* **mesh** — ``distributed.sharding.make_mining_mesh(S, axis=mesh_axis)``
+  over the first S visible devices; ``mesh_axis`` defaults to ``"mine"``
+  and is the only axis. On CPU, fake devices come from
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+* **cache key** — ``mesh_signature(mesh)`` appends the axis spec
+  ``((name, size), ...)`` to the platform/device-count signature, and the
+  sharded runner additionally prefixes its per-executable keys with
+  ``("mesh", axis, shards)``: sharded and unsharded traces can never
+  collide, and a repeated sharded query is still 0 retraces.
+* **partials layout** — the graph is replicated (``PartitionSpec()``);
+  wave buffers are sharded on the mining axis as S back-to-back per-shard
+  blocks; count leaves ``psum`` their (hi, lo) partials as four 16-bit
+  limbs (exact at any mesh size, reassembled host-side); expand levels
+  return per-shard ``(S, m)`` boundary meta (live totals drive lockstep
+  chunking, capacities take the max over shards); emit gathers per-shard
+  survivor blocks. Counts are bit-identical to the unsharded session.
+* **feed** — ``shard.shard_edge_steps`` deals each degree bucket's edges
+  round-robin across shards (``feed_partition="contiguous"`` keeps the
+  hub-pinning foil); per-shard feed items ride
+  ``stats["runner"]["shard_feed_items"]``.
 """
 from __future__ import annotations
 
@@ -70,11 +96,16 @@ from .plan import Motif, WavePlan, compile_pattern, resolve_query
 __all__ = ["ExecutableCache", "Miner", "MinerConfig", "mesh_signature"]
 
 
-def mesh_signature() -> tuple:
+def mesh_signature(mesh=None) -> tuple:
     """Device-topology component of the executable-cache key: platform +
-    device count (to become the mesh axis spec once mining shards across a
-    mesh — the ROADMAP multi-device item lands against this key)."""
-    return (jax.default_backend(), jax.device_count())
+    device count, extended with the actual mesh axes ``((name, size), ...)``
+    when the session mines over a device mesh. Meshes with different axis
+    names or sizes therefore never share an executable, and the unsharded
+    signature (no mesh segment) can never equal a sharded one."""
+    sig: tuple = (jax.default_backend(), jax.device_count())
+    if mesh is not None:
+        sig += tuple((str(a), int(s)) for a, s in dict(mesh.shape).items())
+    return sig
 
 
 class ExecutableCache:
@@ -86,8 +117,8 @@ class ExecutableCache:
     (and, later, across meshes). ``misses`` counts traces actually built —
     the session's *retrace* counter."""
 
-    def __init__(self, prefix: tuple = ()):
-        self.prefix = prefix + (mesh_signature(),)
+    def __init__(self, prefix: tuple = (), mesh=None):
+        self.prefix = prefix + (mesh_signature(mesh),)
         self._entries: dict[tuple, Callable] = {}
         self.hits = 0
         self.misses = 0
@@ -120,6 +151,9 @@ class MinerConfig:
     backend: str = "auto"             # kernel backend (pallas/xla/auto)
     device_compact: bool = True       # False: host np.nonzero oracle path
     fused_level: bool = True          # k-operand fused level kernels
+    mesh: int | None = None           # >1: shard over that many devices
+    mesh_axis: str = "mine"           # mesh axis name (cache-key relevant)
+    feed_partition: str = "round_robin"  # edge-feed dealing (shard.py)
 
 
 class Miner:
@@ -137,14 +171,30 @@ class Miner:
         elif overrides:
             config = dataclasses.replace(config, **overrides)
         self.config = config
-        # stage the CSR buffers to device once per session — queries only
-        # ever ship scalars and per-chunk vertex ids after this
-        self.graph: CSRGraph = jax.device_put(graph)
-        self.exec_cache = ExecutableCache()
-        self._runner = WaveRunner(
-            self.graph, chunk=config.chunk, backend=config.backend,
-            device_compact=config.device_compact,
-            fused_level=config.fused_level, exec_cache=self.exec_cache)
+        if config.mesh is not None and int(config.mesh) > 1:
+            from repro.distributed.sharding import make_mining_mesh
+            from .shard import ShardedWaveRunner
+            self.mesh = make_mining_mesh(int(config.mesh),
+                                         axis=config.mesh_axis)
+            self.exec_cache = ExecutableCache(mesh=self.mesh)
+            self._runner = ShardedWaveRunner(
+                graph, self.mesh, axis=config.mesh_axis,
+                feed_partition=config.feed_partition, chunk=config.chunk,
+                backend=config.backend,
+                device_compact=config.device_compact,
+                fused_level=config.fused_level, exec_cache=self.exec_cache)
+            # the runner replicated the CSR buffers across the mesh
+            self.graph: CSRGraph = self._runner.g
+        else:
+            # stage the CSR buffers to device once per session — queries
+            # only ever ship scalars and per-chunk vertex ids after this
+            self.mesh = None
+            self.graph = jax.device_put(graph)
+            self.exec_cache = ExecutableCache()
+            self._runner = WaveRunner(
+                self.graph, chunk=config.chunk, backend=config.backend,
+                device_compact=config.device_compact,
+                fused_level=config.fused_level, exec_cache=self.exec_cache)
         self._plans: dict[tuple, WavePlan] = {}
         self._forests: dict[tuple, PlanForest] = {}
         self._stats = {"queries": 0, "plan_hits": 0, "plan_misses": 0,
@@ -247,6 +297,7 @@ class Miner:
         runner's dispatch/sync counters."""
         return {
             **self._stats,
+            "mesh": mesh_signature(self.mesh),
             "exec_cache": self.exec_cache.snapshot(),
             "retraces": self.exec_cache.misses,
             "runner": dict(self._runner.stats),

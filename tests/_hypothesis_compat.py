@@ -1,63 +1,152 @@
-"""Import hypothesis if available, else degrade property tests to skips.
+"""Import hypothesis if available, else run property tests on a seeded twin.
 
-The property suites (test_kernels / test_sparse / test_stream_isa) mix
-hypothesis `@given` tests with plain parametrized sweeps. Without this shim a
-missing `hypothesis` turns all three modules into collection *errors*, taking
-the non-property tests down with them. With it:
+The property suites (test_kernels / test_sparse / test_stream_isa /
+test_plan / test_forest / test_fused_level) mix hypothesis ``@given`` tests
+with plain parametrized sweeps. Without this shim a missing ``hypothesis``
+turns those modules into collection *errors*, taking the non-property tests
+down with them. With it:
 
   * hypothesis installed  -> everything runs, unchanged semantics
-  * hypothesis missing    -> `@given` tests skip at call time with a clear
-                             reason; every other test still collects and runs
+  * hypothesis missing    -> ``@given`` tests run under a deterministic
+                             mini-runner: each strategy draws from a
+                             ``random.Random`` seeded on the test's
+                             qualified name, for ``max_examples``
+                             iterations. Weaker than hypothesis (no
+                             shrinking, no coverage-guided search, fixed
+                             corpus) but the properties are genuinely
+                             exercised instead of silently skipped.
 
-The stub only implements what module-level strategy definitions need:
-strategy factories returning chainable dummies (`.map`/`.filter`/`.flatmap`),
-a no-op `settings`, and a `given` that swaps the test body for a skip.
+CI never relies on the fallback: scripts/tier1.sh installs requirements.txt
+and sets TIER1_REQUIRE_DEPS=1, which makes conftest fail the run outright
+if the real hypothesis is missing.
+
+The mini-runner implements only what the suites use: ``integers``,
+``booleans``, ``floats``, ``lists``, ``permutations``, ``none``,
+``one_of``, ``sampled_from``, ``data`` and the chainable
+``map``/``filter``/``flatmap`` combinators.
 """
 from __future__ import annotations
 
 import functools
+import inspect
+import random
 
 try:
     from hypothesis import given, settings, strategies as st  # noqa: F401
     HAVE_HYPOTHESIS = True
 except ImportError:                                            # pragma: no cover
-    import pytest
-
     HAVE_HYPOTHESIS = False
 
     class _Strategy:
-        """Chainable placeholder for a hypothesis SearchStrategy."""
+        """A draw function ``rng -> value`` with hypothesis' combinators."""
+
+        def __init__(self, draw):
+            self._draw = draw
 
         def map(self, fn):
-            return self
+            return _Strategy(lambda rng: fn(self._draw(rng)))
 
-        def filter(self, fn):
-            return self
+        def filter(self, pred):
+            def draw(rng):
+                for _ in range(1000):
+                    v = self._draw(rng)
+                    if pred(v):
+                        return v
+                raise ValueError("mini-hypothesis: filter rejected 1000 "
+                                 "consecutive draws")
+            return _Strategy(draw)
 
         def flatmap(self, fn):
-            return self
+            return _Strategy(lambda rng: fn(self._draw(rng))._draw(rng))
+
+    class _Data:
+        """Stand-in for the object ``st.data()`` injects: interactive
+        draws pull from the test's seeded stream (labels are ignored —
+        they only matter for hypothesis' reporting)."""
+
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy, label=None):
+            return strategy._draw(self._rng)
 
     class _Strategies:
-        def __getattr__(self, name):
-            def factory(*args, **kwargs):
-                return _Strategy()
-            return factory
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                size = rng.randint(min_size, max_size)
+                return [elements._draw(rng) for _ in range(size)]
+            return _Strategy(draw)
+
+        @staticmethod
+        def permutations(values):
+            def draw(rng):
+                out = list(values)
+                rng.shuffle(out)
+                return out
+            return _Strategy(draw)
+
+        @staticmethod
+        def none():
+            return _Strategy(lambda rng: None)
+
+        @staticmethod
+        def one_of(*strategies):
+            return _Strategy(lambda rng: rng.choice(strategies)._draw(rng))
+
+        @staticmethod
+        def sampled_from(values):
+            values = list(values)
+            return _Strategy(lambda rng: rng.choice(values))
+
+        @staticmethod
+        def data():
+            return _Strategy(lambda rng: _Data(rng))
 
     st = _Strategies()
 
-    def given(*_args, **_kwargs):
+    def given(*gargs, **gkwargs):
         def decorate(fn):
             @functools.wraps(fn)
-            def skipper(*a, **k):
-                pytest.skip("hypothesis not installed (see requirements.txt)")
-            # drop hypothesis-bound params so pytest doesn't demand fixtures
-            skipper.__wrapped__ = None
-            skipper.__signature__ = __import__("inspect").Signature()
-            return skipper
+            def runner(*a, **k):
+                n = getattr(runner, "_mini_max_examples", 10)
+                rng = random.Random(
+                    f"mini:{fn.__module__}.{fn.__qualname__}")
+                for i in range(n):
+                    vals = [s._draw(rng) for s in gargs]
+                    kvals = {name: s._draw(rng)
+                             for name, s in gkwargs.items()}
+                    try:
+                        fn(*a, *vals, **k, **kvals)
+                    except Exception:
+                        print(f"mini-hypothesis falsified {fn.__qualname__} "
+                              f"on example {i}: args={vals!r} "
+                              f"kwargs={kvals!r}")
+                        raise
+            # hide the strategy-bound params so pytest doesn't demand
+            # fixtures for them; drop __wrapped__ so introspection stops here
+            runner.__wrapped__ = None
+            runner.__signature__ = inspect.Signature()
+            return runner
         return decorate
 
-    def settings(*_args, **_kwargs):
+    def settings(*_args, **kwargs):
+        max_examples = kwargs.get("max_examples", 10)
+
         def decorate(fn):
+            fn._mini_max_examples = max_examples
             return fn
         return decorate
 
