@@ -5,14 +5,29 @@ CPU wall-clock stands in for the paper's zSim cycles; the *relative* trends
 the paper claims are what we reproduce: pattern enumeration >> exhaustive
 check, engine >> scalar baseline, bigger wins on denser graphs, and
 intersection dominating the engine's time (Fig. 13).
+
+Timing rides ``repro.obs``: every timed region is a span on the
+module-level ``TELEMETRY`` (``perf_counter`` under the hood), so
+``telemetry_snapshot()`` hands consumers (benchmarks/ci_gate.py ->
+BENCH_mining.json) the per-report span aggregates instead of bespoke
+stopwatch plumbing. The timed runners themselves stay UNTRACED — outer
+stopwatch spans only — so no per-dispatch ``block_until_ready`` skews the
+gated wall-clock ratios.
 """
 from __future__ import annotations
-
-import time
 
 from repro.graph import get_dataset
 from repro.graph.datasets import dataset_stats
 from repro.mining import apps, baseline, exhaustive
+from repro.obs import Telemetry
+
+# bench-local telemetry: outer stopwatch spans only (runners untraced)
+TELEMETRY = Telemetry(enabled=True)
+
+
+def telemetry_snapshot() -> dict:
+    """Metrics + per-span timing aggregates of every report run so far."""
+    return TELEMETRY.snapshot()
 
 # datasets kept CPU-benchable; big twins run scaled (noted in output)
 BENCH_SETS = [
@@ -33,12 +48,18 @@ APPS = [
 ]
 
 
-def _time(fn, *a, warm: bool = True):
+def _stopwatch(name: str, fn, **attrs):
+    """Run ``fn()`` inside one bench span; returns (result, wall seconds)."""
+    with TELEMETRY.tracer.span(name, cat="bench", **attrs) as sp:
+        out = fn()
+    return out, sp.seconds
+
+
+def _time(fn, *a, warm: bool = True, label: str | None = None):
     if warm:
         fn(*a)                                 # JIT warm-up excluded
-    t0 = time.time()
-    out = fn(*a)
-    return out, time.time() - t0
+    return _stopwatch(label or getattr(fn, "__name__", "timed"),
+                      lambda: fn(*a))
 
 
 def modeled_tpu_triangle_time(g) -> float:
@@ -87,9 +108,8 @@ def wave_throughput_report(g, k: int = 4) -> dict:
         runner = WaveRunner(g, device_compact=dc)
         runner.clique(k)                    # warm-up: traces + compiles
         warm = dict(runner.stats)
-        t0 = time.time()
-        count = runner.clique(k)
-        dt = time.time() - t0
+        count, dt = _stopwatch(f"wave_throughput:{label}",
+                               lambda: runner.clique(k))
         items = runner.stats["items"] - warm["items"]
         out[label] = {
             "count": count, "seconds": round(dt, 4), "items": items,
@@ -124,16 +144,14 @@ def forest_fusion_report(g) -> dict:
     runner_i = WaveRunner(g)
     [runner_i.run(pl) for pl in plans]          # warm-up
     runner_i.level_execs.clear()
-    t0 = time.time()
-    indep = [runner_i.run(pl) for pl in plans]
-    t_ind = time.time() - t0
+    indep, t_ind = _stopwatch("forest_fusion:independent",
+                              lambda: [runner_i.run(pl) for pl in plans])
     # fused: one forest pass
     runner_f = WaveRunner(g)
     runner_f.run_set(forest)                    # warm-up
     runner_f.level_execs.clear()
-    t0 = time.time()
-    fused = runner_f.run_set(forest)
-    t_fus = time.time() - t0
+    fused, t_fus = _stopwatch("forest_fusion:fused",
+                              lambda: runner_f.run_set(forest))
     assert fused == indep, (fused, indep)
     st = forest.sharing_stats()
     out = {
@@ -172,9 +190,8 @@ def fused_level_report(g) -> dict:
         runner.run(plan)                    # warm-up: traces + compiles
         warm = dict(runner.stats)
         warm_execs = dict(runner.level_execs)
-        t0 = time.time()
-        count = runner.run(plan)
-        dt = time.time() - t0
+        count, dt = _stopwatch(f"fused_level:{label}",
+                               lambda: runner.run(plan))
         gen_execs = (runner.level_execs.get(("count", 3), 0)
                      - warm_execs.get(("count", 3), 0))
         dispatches = (runner.stats["level_kernel_dispatches"]
@@ -224,13 +241,9 @@ def session_serving_report(g) -> dict:
         lvl2_4m.append(_level2_dispatches(miner.runner.level_execs) - before)
         return out
 
-    t0 = time.time()
-    first = mix()
-    t_first = time.time() - t0
+    first, t_first = _stopwatch("session_serving:first_pass", mix)
     retraces_first = miner.stats["retraces"]
-    t0 = time.time()
-    second = mix()
-    t_second = time.time() - t0
+    second, t_second = _stopwatch("session_serving:second_pass", mix)
     assert first == second, (first, second)
     st = miner.schedule(names).sharing_stats()
     return {
@@ -303,9 +316,7 @@ def sharded_scaling_report(g, shard_counts=(1, 2, 4, 8)) -> dict:
         warm = {"retraces": miner.stats["retraces"],
                 "dispatches": sum(miner.runner.level_execs.values()),
                 "psums": miner.stats["runner"].get("psum_reductions", 0)}
-        t0 = time.time()
-        counts = mix()
-        dt = time.time() - t0
+        counts, dt = _stopwatch(f"sharded_scaling:x{s}", mix)
         if ref_counts is None:
             ref_counts = counts
         assert counts == ref_counts, (s, counts, ref_counts)

@@ -27,6 +27,13 @@ Usage (CI runs exactly this):
 ``--update-baseline`` rewrites baseline.json from the current measurement
 (keeping tolerances/directions) — run locally when a PR legitimately moves
 a ratio, and say so in the PR.
+
+``--telemetry`` adds the observability parity section (exact keys): the
+``repro.obs`` registry-derived stats view must equal the legacy counters
+bit-for-bit on the full app mix, tracing on must change nothing (zero
+extra dispatches), and span counts per category are recorded as schedule
+facts. The traced span timings land in the output JSON (artifact) under
+``telemetry_spans`` but are never baselined — they are wall clock.
 """
 from __future__ import annotations
 
@@ -55,6 +62,9 @@ SESSION_SET = ("email-eu-core", 0.25)
 # shard/psum counters, retraces and the dispatch-scaling bound
 SHARDED_SET = ("email-eu-core", 0.25)
 SHARDED_WIDTHS = (1, 8)
+# telemetry leg (--telemetry): registry-derived stats view must equal the
+# legacy counters bit-for-bit, and enabling tracing must not change them
+TELEMETRY_SET = ("email-eu-core", 0.25)
 # wall-clock ratios + structural counters: dense enough that the timed
 # region is hundreds of ms, not noise (see stability note in tolerances)
 PERF_SET = ("email-eu-core", 1.0)
@@ -138,7 +148,85 @@ def measure_sharded(exact: dict) -> None:
           f"{many['psum_reductions_per_pass']} psums/pass", flush=True)
 
 
-def measure(sharded: bool = False) -> dict:
+def measure_telemetry(exact: dict, sharded: bool = False) -> dict:
+    """Telemetry gate section (``--telemetry``): the ``repro.obs`` registry
+    is the source of truth for runner/session counters and the legacy
+    ``stats`` dicts are derived views — this leg runs the full app mix on
+    one traced ``Miner`` and one untraced one, then records as exact keys:
+
+    * ``registry_equals_legacy`` — every legacy stats key read back through
+      the public ``MetricsRegistry`` API matches the view bit-for-bit
+      (including the per-shard ``shard_feed_items`` labeled series);
+    * ``enabled_disabled_parity`` — counts AND the complete stats dict are
+      identical with tracing on vs off (tracing is observationally free:
+      zero extra kernel dispatches, no counter drift);
+    * the traced run's runner/session counters and per-category span counts
+      — all schedule facts, machine-independent.
+
+    With ``--sharded`` too, the same checks repeat on a mesh=8 session.
+    Returns the traced spans summary (seconds — machine-dependent, so it
+    rides in the output doc ungated, never in the baseline)."""
+    from repro.graph import get_dataset
+    from repro.mining.plan import FOUR_MOTIF_SHAPES
+    from repro.mining.session import Miner
+    from repro.obs import Telemetry
+
+    name, scale = TELEMETRY_SET
+    g = get_dataset(name, scale=scale)
+    tag = f"{name}@{scale}"
+    motifs = list(FOUR_MOTIF_SHAPES)
+
+    def mix(miner):
+        return {"T": miner.count("triangle"),
+                "TC": miner.count("three-chain"),
+                "TT": miner.count("tailed-triangle"),
+                "4C": miner.count("4-clique"),
+                "4M": list(miner.count_many(motifs))}
+
+    spans_doc: dict = {}
+    for mesh in [None] + ([8] if sharded else []):
+        mtag = tag if mesh is None else f"{tag}.mesh{mesh}"
+        print(f"[gate] {mtag}: telemetry parity ...", flush=True)
+        telemetry = Telemetry(enabled=True)
+        traced = Miner(g, mesh=mesh, telemetry=telemetry)
+        counts = mix(traced)
+        plain = Miner(g, mesh=mesh)
+        counts_plain = mix(plain)
+
+        # legacy view == registry, re-read through the public metrics API
+        # (a drifted exposure — wrong counter bound to a key — fails here)
+        reg = telemetry.metrics
+        rs = dict(traced.runner.stats)
+        reg_ok = all(reg.value(k) == v for k, v in rs.items()
+                     if not isinstance(v, list))
+        if "shard_feed_items" in rs:
+            fam = reg.series("shard_feed_items")
+            per = [fam[(("shard", s),)].value
+                   for s in range(len(rs["shard_feed_items"]))]
+            reg_ok = reg_ok and per == rs["shard_feed_items"]
+        sess = traced.stats
+        sess_keys = ("queries", "plan_hits", "plan_misses",
+                     "schedule_hits", "schedule_misses")
+        reg_ok = reg_ok and all(reg.value(k) == sess[k] for k in sess_keys)
+
+        by_cat: dict[str, int] = {}
+        for sp in telemetry.tracer.spans():
+            by_cat[sp.cat] = by_cat.get(sp.cat, 0) + 1
+
+        exact[f"telemetry.{mtag}.registry_equals_legacy"] = bool(reg_ok)
+        exact[f"telemetry.{mtag}.enabled_disabled_parity"] = bool(
+            counts == counts_plain and sess == plain.stats)
+        exact[f"telemetry.{mtag}.runner_stats"] = rs
+        exact[f"telemetry.{mtag}.session_counters"] = {
+            k: sess[k] for k in sess_keys}
+        exact[f"telemetry.{mtag}.span_counts"] = dict(sorted(by_cat.items()))
+        spans_doc[mtag] = telemetry.snapshot()["spans"]
+        print(f"[gate] telemetry {mtag}: registry==legacy {reg_ok}, "
+              f"spans {by_cat}", flush=True)
+    return spans_doc
+
+
+def measure(sharded: bool = False, telemetry: bool = False) -> dict:
     from repro.graph import get_dataset
     from repro.mining import apps
     exact: dict = {}
@@ -198,7 +286,7 @@ def measure(sharded: bool = False) -> dict:
 
     if sharded:
         measure_sharded(exact)
-    return {
+    out = {
         "meta": {
             "python": platform.python_version(),
             "machine": platform.machine(),
@@ -207,6 +295,10 @@ def measure(sharded: bool = False) -> dict:
         "exact": exact,
         "ratios": ratios,
     }
+    if telemetry:
+        # spans carry wall-clock seconds: artifact-only, never baselined
+        out["telemetry_spans"] = measure_telemetry(exact, sharded=sharded)
+    return out
 
 
 def _tolerance_for(metric: str, baseline: dict) -> tuple[float, str]:
@@ -223,15 +315,23 @@ def compare(got: dict, baseline: dict) -> list[str]:
     """Return a list of regression messages (empty = gate passes).
 
     The ``sharded.*`` exact keys only exist when the gate ran with
-    ``--sharded`` (the multi-device CI leg). A run without it skips those
-    baseline keys instead of failing, so the single-device bench job stays
-    green against a baseline recorded under 8 fake devices."""
+    ``--sharded`` (the multi-device CI leg), and ``telemetry.*`` keys only
+    with ``--telemetry``. A run without those flags skips the matching
+    baseline keys instead of failing, so a partial invocation stays green
+    against the full baseline."""
     failures = []
     base_exact = baseline.get("exact", {})
     ran_sharded = any(k.startswith("sharded.") for k in got["exact"])
+    ran_telemetry = any(k.startswith("telemetry.") for k in got["exact"])
     for key, want in base_exact.items():
         if key.startswith("sharded.") and not ran_sharded:
             continue
+        if key.startswith("telemetry."):
+            if not ran_telemetry:
+                continue
+            if ".mesh" in key and not ran_sharded:
+                # the mesh-N telemetry leg needs --sharded too
+                continue
         have = got["exact"].get(key, "<missing>")
         if have != want:
             failures.append(f"EXACT {key}: baseline {want!r} != got {have!r}")
@@ -270,23 +370,29 @@ def main(argv=None) -> int:
                     help="also run the mesh-sharded gate section (needs "
                          "8 devices; CI sets XLA_FLAGS="
                          "--xla_force_host_platform_device_count=8)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="also run the telemetry parity section: registry-"
+                         "derived stats must equal the legacy counters "
+                         "bit-for-bit, with tracing on and off")
     args = ap.parse_args(argv)
 
-    got = measure(sharded=args.sharded)
+    got = measure(sharded=args.sharded, telemetry=args.telemetry)
     Path(args.out).write_text(json.dumps(got, indent=2, sort_keys=True))
     print(f"[gate] wrote {args.out}")
 
     if args.update_baseline:
         exact = got["exact"]
-        if not any(k.startswith("sharded.") for k in exact):
-            # keep the sharded section recorded by a previous --sharded
-            # update rather than silently dropping it
+        kept = tuple(p for p in ("sharded.", "telemetry.")
+                     if not any(k.startswith(p) for k in exact))
+        if kept:
+            # keep the sections recorded by a previous --sharded /
+            # --telemetry update rather than silently dropping them
             try:
                 old = json.loads(Path(args.baseline).read_text())
             except (FileNotFoundError, json.JSONDecodeError):
                 old = {}
             exact = {**{k: v for k, v in old.get("exact", {}).items()
-                        if k.startswith("sharded.")}, **exact}
+                        if k.startswith(kept)}, **exact}
             got = {**got, "exact": exact}
         doc = {
             "_doc": ("CI perf-regression baseline (benchmarks/ci_gate.py). "

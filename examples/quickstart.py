@@ -50,6 +50,25 @@ m.count("triangle")
 m.count_many(names)
 print("retraces on repeat :", m.stats["retraces"] - before)
 
+# --- observability: trace a query, see where its time went ----------------
+# a Telemetry(enabled=True) session records a span tree per query (query ->
+# compile/schedule/execute -> per-level -> per-dispatch, perf_counter wall
+# time around dispatch + block_until_ready); counters live in the same
+# registry the stats dicts above are views of. write_trace() exports
+# Chrome-trace JSON for ui.perfetto.dev (same as `launch/mine.py --trace`).
+from repro.obs import Telemetry
+
+tel = Telemetry(enabled=True)
+mt = Miner(g, telemetry=tel)
+mt.count("4-clique")
+q = tel.tracer.last("query")
+print("traced query       :", f"{q.seconds * 1e3:.1f}ms,",
+      sum(1 for _ in q.walk()), "spans,",
+      len(q.find("dispatch")), "dispatches")
+top = sorted(tel.tracer.level_seconds().items(),
+             key=lambda kv: -kv[1])[:3]
+print("hottest spans      :", {k: f"{v * 1e3:.1f}ms" for k, v in top})
+
 # multi-device? the same session mines data-parallel over a mesh — counts
 # are bit-identical (on CPU: XLA_FLAGS=--xla_force_host_platform_device_count=8)
 import jax

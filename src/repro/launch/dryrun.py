@@ -87,9 +87,9 @@ def _active_params(model: Model) -> tuple[int, int]:
 
 
 def _measure(lowered, label: str):
-    t0 = time.time()
+    t0 = time.perf_counter()
     compiled = lowered.compile()
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     ca = compiled.cost_analysis()
     cost = parse_cost(ca[0] if isinstance(ca, (list, tuple)) else ca)
     ma = compiled.memory_analysis()
@@ -249,9 +249,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     model = Model(cfg)
     kind = sh["kind"]
     try:
-        t0 = time.time()
+        t0 = time.perf_counter()
         lowered = LOWER[kind](spec, model, mesh, rules, sh)
-        lower_s = time.time() - t0
+        lower_s = time.perf_counter() - t0
         scan_m = _measure(lowered, "scan")
         chips = mesh_chips(mesh)
         units = cfg.num_units

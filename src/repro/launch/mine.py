@@ -7,7 +7,13 @@
 The driver is a thin consumer of the session API: it builds a single
 ``mining.session.Miner`` for the dataset and issues every query against
 it, so schedules and executables are derived once per invocation
-(``--session-stats`` prints the cache counters that prove it).
+(``--session-stats`` prints the cache counters that prove it, plus the
+full Prometheus-style metrics snapshot).
+
+Observability flags (repro.obs): ``--trace out.json`` enables span
+tracing on the session and writes a Chrome-trace/Perfetto JSON of the
+query's span tree; ``--jax-profile LOGDIR`` additionally wraps the query
+in ``jax.profiler`` start/stop for an XLA-level profile.
 """
 from __future__ import annotations
 
@@ -24,6 +30,7 @@ from repro.mining.fsm import fsm, random_labels, sfsm
 from repro.mining.plan import FOUR_MOTIF_SHAPES, TRIANGLE, \
     THREE_CHAIN_INDUCED
 from repro.mining.session import Miner
+from repro.obs import Telemetry
 
 # per-pattern 4-motif codes (auto-scheduled Motif queries, zero engine code)
 PATTERN_APPS = {"DM": "diamond", "CY": "4-cycle", "PW": "paw",
@@ -120,16 +127,25 @@ def main(argv=None):
     ap.add_argument("--partitions", type=int, default=0,
                     help="print degree-balanced partition stats (straggler)")
     ap.add_argument("--session-stats", action="store_true",
-                    help="print the session's cache/retrace counters")
+                    help="print the session's cache/retrace counters and "
+                         "the Prometheus-style metrics snapshot")
     ap.add_argument("--shards", type=int, default=0,
                     help="mine data-parallel over an N-way device mesh "
                          "(on CPU set XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--trace", default="", metavar="OUT.json",
+                    help="enable span tracing and write a Chrome-trace "
+                         "(Perfetto) JSON of the run's span tree")
+    ap.add_argument("--jax-profile", default="", metavar="LOGDIR",
+                    help="wrap the query in jax.profiler start/stop "
+                         "(XLA-level trace written to LOGDIR)")
     args = ap.parse_args(argv)
 
     g = get_dataset(args.dataset, scale=args.scale)
     print(f"[mine] {args.dataset} x{args.scale}: {dataset_stats(g)}")
-    miner = Miner(g, mesh=args.shards if args.shards > 1 else None)
+    telemetry = Telemetry(enabled=bool(args.trace))
+    miner = Miner(g, mesh=args.shards if args.shards > 1 else None,
+                  telemetry=telemetry)
     if miner.mesh is not None:
         print(f"[mine] mesh: {args.shards}-way "
               f"({dict(miner.mesh.shape)})")
@@ -137,11 +153,19 @@ def main(argv=None):
         if args.app in ("FSM", "sFSM") else None
     if args.app in ("F3M", "F4M"):
         print(f"[mine] forest: {_forest_report(args.app, miner)}")
-    t0 = time.time()
-    res = run_app(args.app, miner, args.support, labels,
-                  fused=not args.independent)
-    dt = time.time() - t0
+    t0 = time.perf_counter()
+    with telemetry.jax_profile(args.jax_profile or None):
+        res = run_app(args.app, miner, args.support, labels,
+                      fused=not args.independent)
+    dt = time.perf_counter() - t0
     print(f"[mine] {args.app} = {res}  ({dt:.2f}s, IntersectX engine)")
+    if args.trace:
+        path = telemetry.write_trace(args.trace)
+        agg = telemetry.tracer.level_seconds()
+        top = sorted(agg.items(), key=lambda kv: -kv[1])[:6]
+        print(f"[mine] trace: {sum(1 for _ in telemetry.tracer.spans())} "
+              f"spans -> {path}; self-time "
+              + " ".join(f"{k}={v*1e3:.1f}ms" for k, v in top))
     if args.check and args.app in ("F3M", "F4M"):
         indep = run_app(args.app, miner, args.support, labels, fused=False)
         assert res == indep, (res, indep)
@@ -152,17 +176,17 @@ def main(argv=None):
             assert res == census, (res, census)
             print("[mine] fused == brute-force census OK")
     if args.baseline and args.app in ("T", "TC", "TT", "TM", "4C", "5C"):
-        t0 = time.time()
+        t0 = time.perf_counter()
         rb = run_baseline(args.app, g)
-        dtb = time.time() - t0
+        dtb = time.perf_counter() - t0
         assert rb == res, (rb, res)
         print(f"[mine] baseline(InHouseAutoMine) = {rb} ({dtb:.2f}s) "
               f"=> engine speedup {dtb/max(dt,1e-9):.1f}x")
     if args.exhaustive:
-        t0 = time.time()
+        t0 = time.perf_counter()
         re_ = exhaustive.exhaustive_count(g, args.exhaustive)
         print(f"[mine] exhaustive({args.exhaustive}) = {re_} "
-              f"({time.time()-t0:.2f}s, GRAMER-style)")
+              f"({time.perf_counter()-t0:.2f}s, GRAMER-style)")
     if args.partitions:
         assign = balanced_vertex_partition(np.asarray(g.degrees),
                                            args.partitions)
@@ -183,6 +207,8 @@ def main(argv=None):
             print(f"[mine] shards: feed items {fi} "
                   f"(max/min {max(fi)/max(min(fi), 1):.2f}), "
                   f"{rs['psum_reductions']} psum reductions")
+        print("[mine] metrics:")
+        print(telemetry.prometheus_text(), end="")
 
 
 if __name__ == "__main__":

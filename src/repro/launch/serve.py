@@ -10,6 +10,11 @@ once, schedules and executables are derived on the first round, and every
 later round is pure cache-hit execution — the serving story the session
 API exists for. Reports per-round latency, steady-state queries/s and the
 retrace counter (0 after warm-up).
+
+Observability (repro.obs): ``--session-stats`` appends the session's
+Prometheus-style metrics snapshot (the scrape-endpoint text a real server
+would expose); ``--trace out.json`` span-traces every round and writes
+the Chrome-trace/Perfetto JSON on exit.
 """
 from __future__ import annotations
 
@@ -18,7 +23,8 @@ import time
 
 
 def serve_mining(dataset: str, scale: float, rounds: int,
-                 shards: int = 0) -> None:
+                 shards: int = 0, trace: str = "",
+                 session_stats: bool = False) -> None:
     """Serve ``rounds`` passes of the app mix from one resident session.
 
     ``shards > 1`` serves from a mesh-sharded session (data-parallel
@@ -28,12 +34,15 @@ def serve_mining(dataset: str, scale: float, rounds: int,
     from repro.graph.datasets import dataset_stats
     from repro.mining.plan import FOUR_MOTIF_SHAPES
     from repro.mining.session import Miner
+    from repro.obs import Telemetry
 
     if rounds < 1:
         raise SystemExit("[serve] --rounds must be >= 1")
     g = get_dataset(dataset, scale=scale)
     print(f"[serve] mining {dataset} x{scale}: {dataset_stats(g)}")
-    miner = Miner(g, mesh=shards if shards > 1 else None)
+    telemetry = Telemetry(enabled=bool(trace))
+    miner = Miner(g, mesh=shards if shards > 1 else None,
+                  telemetry=telemetry)
     if miner.mesh is not None:
         print(f"[serve] mesh: {dict(miner.mesh.shape)}")
     motif_names = list(FOUR_MOTIF_SHAPES)
@@ -51,9 +60,9 @@ def serve_mining(dataset: str, scale: float, rounds: int,
     warm_retraces = steady = 0.0
     for r in range(rounds):
         before = miner.stats["retraces"]
-        t0 = time.time()
+        t0 = time.perf_counter()
         res = mix()
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
         retraces = miner.stats["retraces"] - before
         if first is None:
             first, warm_retraces = res, retraces
@@ -73,6 +82,13 @@ def serve_mining(dataset: str, scale: float, rounds: int,
     print(f"[serve] session: {st['queries']} queries, exec cache "
           f"{st['exec_cache']['hits']} hits / {st['exec_cache']['misses']} "
           f"traces, counts sample: T={first['T']} 4C={first['4C']}")
+    if trace:
+        path = telemetry.write_trace(trace)
+        print(f"[serve] trace: "
+              f"{sum(1 for _ in telemetry.tracer.spans())} spans -> {path}")
+    if session_stats:
+        print("[serve] metrics:")
+        print(telemetry.prometheus_text(), end="")
 
 
 def main(argv=None):
@@ -89,10 +105,17 @@ def main(argv=None):
     ap.add_argument("--shards", type=int, default=0,
                     help="with --mine: serve from an N-way mesh-sharded "
                          "session")
+    ap.add_argument("--trace", default="", metavar="OUT.json",
+                    help="with --mine: span-trace the rounds and write a "
+                         "Chrome-trace (Perfetto) JSON")
+    ap.add_argument("--session-stats", action="store_true",
+                    help="with --mine: print the Prometheus-style metrics "
+                         "snapshot after serving")
     args = ap.parse_args(argv)
 
     if args.mine:
-        serve_mining(args.mine, args.scale, args.rounds, args.shards)
+        serve_mining(args.mine, args.scale, args.rounds, args.shards,
+                     trace=args.trace, session_stats=args.session_stats)
         return
 
     import jax
@@ -129,12 +152,12 @@ def main(argv=None):
 
     tok = jnp.zeros((args.batch, 1), jnp.int32)
     out = [tok]
-    t0 = time.time()
+    t0 = time.perf_counter()
     for i in range(args.tokens):
         logits, caches = step(params, tok, jnp.int32(i), caches)
         tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)[..., 0][:, None]
         out.append(tok)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     seqs = jnp.concatenate(out, axis=1)
     print(f"[serve] {args.arch}: {args.batch}x{args.tokens} tokens in "
           f"{dt:.2f}s = {args.batch*args.tokens/dt:.1f} tok/s")

@@ -37,6 +37,7 @@ bound=0 so they contribute nothing (branch-free masking, no special cases).
 from __future__ import annotations
 
 import dataclasses
+from contextlib import nullcontext
 from typing import Callable
 
 import numpy as np
@@ -45,6 +46,7 @@ import jax.numpy as jnp
 
 from repro.core.batch import (batch_compact_scan, batch_inter,
                               batch_inter_count, compact_indices_scan)
+from repro.obs import LegacyStatsView, Telemetry
 from repro.core.stream import LANE, SENTINEL, round_capacity
 from repro.graph.csr import CSRGraph, padded_rows
 from repro.kernels.ops import (xinter_compact, xinter_count, xlevel_compact,
@@ -339,10 +341,16 @@ class WaveRunner:
     # traces can never collide with unsharded traces of the same LevelOp
     _exec_prefix: tuple = ()
 
+    # legacy ``stats`` keys, in their historical insertion order — each is
+    # a registry counter the view derives from (see __init__)
+    _STAT_KEYS = ("exec_hits", "exec_misses", "host_syncs",
+                  "device_compactions", "host_compactions", "items",
+                  "level_kernel_dispatches", "count_rides")
+
     def __init__(self, g: CSRGraph, chunk: int | None = None,
                  backend: str = "auto", device_compact: bool = True,
                  record: bool = False, fused_level: bool = True,
-                 exec_cache=None):
+                 exec_cache=None, telemetry: Telemetry | None = None):
         self.g = g
         # chunk <= 2^15 is the exactness envelope of the (hi, lo) int32
         # per-chunk count partials (see _plan_count_fn): a 2^15-item chunk of
@@ -361,10 +369,20 @@ class WaveRunner:
         self._exec_cache = exec_cache
         self.trace: list[tuple[int, np.ndarray, np.ndarray]] = []
         self._exec: dict[tuple, Callable] = {}
-        self.stats = {"exec_hits": 0, "exec_misses": 0, "host_syncs": 0,
-                      "device_compactions": 0, "host_compactions": 0,
-                      "items": 0, "level_kernel_dispatches": 0,
-                      "count_rides": 0}
+        # telemetry substrate (repro.obs): the metrics registry is the
+        # single source of truth for every counter, and ``self.stats`` is
+        # the legacy dict DERIVED from it (bit-identical view, golden-
+        # tested). The tracer is off unless the session enables it —
+        # dispatch sites then open timed spans and block to completion.
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self.metrics = self.telemetry.metrics
+        self.stats = LegacyStatsView()
+        self._ct = {k: self.stats.expose_counter(k, self.metrics)
+                    for k in self._STAT_KEYS}
+        # registry-only extras (not part of the legacy view)
+        self._h_wave_items = self.metrics.histogram("wave_items")
+        self._ct_feed_chunks = self.metrics.counter("feed_chunks")
+        self._exec_fresh = False
         # per-(kind, level) executable dispatch counts — the fusion metric:
         # a PlanForest run dispatches each shared level once where the
         # independent-plan path dispatches it once per pattern.
@@ -388,8 +406,8 @@ class WaveRunner:
     def _bump(self, op: LevelOp, host: bool = False) -> None:
         key = (op.kind, op.level)
         self.level_execs[key] = self.level_execs.get(key, 0) + 1
-        self.stats["level_kernel_dispatches"] += \
-            self._level_dispatches(op, host)
+        self._ct["level_kernel_dispatches"].inc(
+            self._level_dispatches(op, host))
 
     # ------------------------------------------------------------------ cache
     def _executable(self, key: tuple, build: Callable) -> Callable:
@@ -398,15 +416,53 @@ class WaveRunner:
             key = (self.chunk, self.backend, self.device_compact,
                    self.fused_level) + key
             fn, fresh = self._exec_cache.get_or_build(key, build)
-            self.stats["exec_misses" if fresh else "exec_hits"] += 1
+            self._exec_fresh = fresh
+            self._ct["exec_misses" if fresh else "exec_hits"].inc()
             return fn
         fn = self._exec.get(key)
         if fn is None:
             fn = self._exec[key] = build()
-            self.stats["exec_misses"] += 1
+            self._exec_fresh = True
+            self._ct["exec_misses"].inc()
         else:
-            self.stats["exec_hits"] += 1
+            self._exec_fresh = False
+            self._ct["exec_hits"].inc()
         return fn
+
+    # -------------------------------------------------------- traced dispatch
+    def _dispatch(self, op: LevelOp, fn: Callable, args: tuple,
+                  items=None, caps_sig: tuple = (), host: bool = False):
+        """Run one level executable. With tracing enabled, the call is
+        wrapped in a ``dispatch`` span (op kind/level, wavefront items,
+        capacity signature, exec-cache hit/miss) and followed by
+        ``block_until_ready`` so the span measures device wall time, not
+        async dispatch time. Disabled: the bare call — no span, no sync."""
+        tr = self.telemetry.tracer
+        if not tr.enabled:
+            return fn(*args)
+        attrs = {"kind": op.kind, "level": op.level,
+                 "dispatches": self._level_dispatches(op, host),
+                 "exec_cached": not self._exec_fresh}
+        if items is not None:
+            attrs["items"] = int(np.asarray(items).sum())
+        if caps_sig:
+            attrs["caps"] = str(tuple(caps_sig))
+        if host:
+            attrs["host"] = True
+        with tr.span("dispatch", cat="dispatch", **attrs):
+            out = fn(*args)
+            jax.block_until_ready(out)
+        return out
+
+    def _level_span(self, op: LevelOp, n):
+        """Level-span context for one op's processing on one wave chunk
+        (children levels nest inside); no-op when tracing is off."""
+        tr = self.telemetry.tracer
+        if not tr.enabled:
+            return nullcontext()
+        return tr.span(f"L{op.level}:{op.kind}", cat="level",
+                       level=op.level, kind=op.kind,
+                       items=int(np.asarray(n).sum()))
 
     def _rows_fn(self, cap: int):
         def build():
@@ -850,16 +906,25 @@ class WaveRunner:
         """
         op0 = plan.ops[0]
         outs: list = []
-        for cap0, dv0, dv1, v1h, n in self._edge_feed(plan.symmetric):
-            caps = {0: cap0}
-            if 1 in op0.row_refs():
-                caps[1] = _neighbor_cap(self.g, v1h)
-            if self.record:
-                self._record(1, self._rows_fn(cap0)(self.g, dv0), dv1, n)
-            outs += self._plan_descend(plan, 0, {0: dv0, 1: dv1}, caps,
-                                       None, n)
-        self.stats["host_syncs"] += len(outs)
-        return self._finalize(plan, outs)
+        tr = self.telemetry.tracer
+        with (tr.span("execute", plan=plan.pattern.name)
+              if tr.enabled else nullcontext()):
+            for cap0, dv0, dv1, v1h, n in self._edge_feed(plan.symmetric):
+                self._ct_feed_chunks.inc()
+                with (tr.span("feed", cat="level", cap=cap0,
+                              items=int(np.asarray(n).sum()))
+                      if tr.enabled else nullcontext()):
+                    caps = {0: cap0}
+                    if 1 in op0.row_refs():
+                        caps[1] = _neighbor_cap(self.g, v1h)
+                    if self.record:
+                        self._record(1, self._rows_fn(cap0)(self.g, dv0),
+                                     dv1, n)
+                    outs += self._plan_descend(plan, 0, {0: dv0, 1: dv1},
+                                               caps, None, n)
+            self._ct["host_syncs"].inc(len(outs))
+            with tr.span("finalize") if tr.enabled else nullcontext():
+                return self._finalize(plan, outs)
 
     def run_set(self, forest):
         """Execute a ``mining.forest.PlanForest``: each feed orientation is
@@ -874,23 +939,32 @@ class WaveRunner:
         bit-identical to running each plan through ``run`` independently.
         """
         acc: list[list] = [[] for _ in forest.plans]
-        for symmetric, roots in ((True, forest.symmetric_roots),
-                                 (False, forest.directed_roots)):
-            if not roots:
-                continue
-            need1 = any(1 in r.op.row_refs() for r in roots)
-            for cap0, dv0, dv1, v1h, n in self._edge_feed(symmetric):
-                caps = {0: cap0}
-                if need1:
-                    caps[1] = _neighbor_cap(self.g, v1h)
-                if self.record:
-                    self._record(1, self._rows_fn(cap0)(self.g, dv0), dv1, n)
-                for root in roots:
-                    self._forest_descend(root, {0: dv0, 1: dv1}, caps,
-                                         None, n, acc)
-        self.stats["host_syncs"] += sum(len(a) for a in acc)
-        return [self._finalize(plan, parts)
-                for plan, parts in zip(forest.plans, acc)]
+        tr = self.telemetry.tracer
+        with (tr.span("execute", plans=len(forest.plans), forest=True)
+              if tr.enabled else nullcontext()):
+            for symmetric, roots in ((True, forest.symmetric_roots),
+                                     (False, forest.directed_roots)):
+                if not roots:
+                    continue
+                need1 = any(1 in r.op.row_refs() for r in roots)
+                for cap0, dv0, dv1, v1h, n in self._edge_feed(symmetric):
+                    self._ct_feed_chunks.inc()
+                    with (tr.span("feed", cat="level", cap=cap0,
+                                  items=int(np.asarray(n).sum()))
+                          if tr.enabled else nullcontext()):
+                        caps = {0: cap0}
+                        if need1:
+                            caps[1] = _neighbor_cap(self.g, v1h)
+                        if self.record:
+                            self._record(1, self._rows_fn(cap0)(self.g, dv0),
+                                         dv1, n)
+                        for root in roots:
+                            self._forest_descend(root, {0: dv0, 1: dv1},
+                                                 caps, None, n, acc)
+            self._ct["host_syncs"].inc(sum(len(a) for a in acc))
+            with tr.span("finalize") if tr.enabled else nullcontext():
+                return [self._finalize(plan, parts)
+                        for plan, parts in zip(forest.plans, acc)]
 
     def _forest_descend(self, node, cols: dict, caps: dict, carry, n: int,
                         acc: list) -> None:
@@ -905,83 +979,95 @@ class WaveRunner:
         cap_base = int(carry.shape[1]) if op.use_carry else caps[op.base]
         vals = tuple(cols[c] for c in self._in_cols(op))
         carry_in = carry if op.use_carry else np.int32(0)
-        if op.kind == "count":
-            self._bump(op)
-            fn = self._plan_count_fn(op, caps_sig, cap_base)
-            part = fn(self.g, vals, carry_in, n)
-            for i in node.plans:
-                acc[i].append(part)
-            return
-        b = (int(carry.shape[0]) if op.use_carry
-             else int(cols[op.base].shape[0])) // self._shards
-        out_cap = min([cap_base] + [caps[j] for j in op.inter])
-        out_items = -(-b * out_cap // self.chunk) * self.chunk
-        if op.kind == "emit":
-            parts = self._plan_emit(op, caps_sig, cap_base, out_cap,
-                                    out_items, cols, vals, carry_in, n)
-            for i in node.plans:
-                acc[i].extend(parts)
-            return
-        if node.ride_plans:
-            self.stats["count_rides"] += len(node.ride_plans)
-        if not self.device_compact:
-            ride_out: dict = {}
-            chunks = self._expand_chunks_host(op, caps_sig, cap_base,
-                                              out_cap, cols, vals, carry_in,
-                                              n, ride_out=ride_out)
-            for cols2, caps2, carry2, vch, m in chunks:
-                self._record(op.level + 1,
-                             self._wave_repr(cols2, op.out_cols, carry2, vch),
-                             vch, m)
-                for child in node.children:
-                    self._forest_descend(child, cols2, caps2, carry2, m, acc)
-            part = ride_out.get("count_part")
-            if part is not None:
-                for i in node.ride_plans:
+        with self._level_span(op, n):
+            if op.kind == "count":
+                self._bump(op)
+                fn = self._plan_count_fn(op, caps_sig, cap_base)
+                part = self._dispatch(op, fn, (self.g, vals, carry_in, n),
+                                      items=n, caps_sig=caps_sig)
+                for i in node.plans:
                     acc[i].append(part)
-                # host-resident partials: no sync at finalize (see above)
-                self.stats["host_syncs"] -= len(node.ride_plans)
-            return
-        exp = self._expand_device(op, caps_sig, cap_base, out_cap, out_items,
-                                  vals, carry_in, n,
-                                  want_count=bool(node.ride_plans))
-        if exp is None:
-            return
-        rows2, src, verts2, total, caps2, cap2, ride = exp
-        if ride is not None:
-            for i in node.ride_plans:
-                acc[i].append(ride)
-            # ride partials arrived inside the expand's existing meta sync;
-            # offset run_set's per-part tally so they aren't double-counted
-            self.stats["host_syncs"] -= len(node.ride_plans)
-        # children that kept every constraint of the shared node consume the
-        # compacted worklist as-is (one chunk stream for all of them);
-        # children whose branch deferred constraints into residuals get a
-        # per-branch packed worklist first, so relaxation never inflates a
-        # branch's downstream item count past its independent plan's.
-        feeds: list[tuple[list, object, object, int]] = []
-        shared = [ch for ch in node.children if not ch.op.residual]
-        if shared:
-            feeds.append((shared, src, verts2, total))
-        for ch in node.children:
-            if not ch.op.residual:
-                continue
-            pfn, refs = self._residual_pack_fn(
-                op.level, ch.op.residual, int(src.shape[0]) // self._shards)
-            rvals = tuple(cols[c] for c in refs)
-            src_b, verts_b, tot_b = pfn(rvals, src, verts2, total)
-            tot_b, has_b = self._pack_total(tot_b)
-            self.stats["host_syncs"] += 1
-            if has_b:
-                feeds.append(([ch], src_b, verts_b, tot_b))
-        for children, s, v, t in feeds:
-            for cols2, carry2, vch, m in self._expand_chunks(
-                    op, b, out_cap, cap2, rows2, s, v, cols, t):
-                self._record(op.level + 1,
-                             self._wave_repr(cols2, op.out_cols, carry2, vch),
-                             vch, m)
-                for child in children:
-                    self._forest_descend(child, cols2, caps2, carry2, m, acc)
+                return
+            b = (int(carry.shape[0]) if op.use_carry
+                 else int(cols[op.base].shape[0])) // self._shards
+            out_cap = min([cap_base] + [caps[j] for j in op.inter])
+            out_items = -(-b * out_cap // self.chunk) * self.chunk
+            if op.kind == "emit":
+                parts = self._plan_emit(op, caps_sig, cap_base, out_cap,
+                                        out_items, cols, vals, carry_in, n)
+                for i in node.plans:
+                    acc[i].extend(parts)
+                return
+            if node.ride_plans:
+                self._ct["count_rides"].inc(len(node.ride_plans))
+            if not self.device_compact:
+                ride_out: dict = {}
+                chunks = self._expand_chunks_host(op, caps_sig, cap_base,
+                                                  out_cap, cols, vals,
+                                                  carry_in, n,
+                                                  ride_out=ride_out)
+                for cols2, caps2, carry2, vch, m in chunks:
+                    self._record(op.level + 1,
+                                 self._wave_repr(cols2, op.out_cols, carry2,
+                                                 vch),
+                                 vch, m)
+                    for child in node.children:
+                        self._forest_descend(child, cols2, caps2, carry2, m,
+                                             acc)
+                part = ride_out.get("count_part")
+                if part is not None:
+                    for i in node.ride_plans:
+                        acc[i].append(part)
+                    # host-resident partials: no sync at finalize (see above).
+                    # Counter.dec raises on underflow — the ride credit can
+                    # never exceed syncs actually paid (invariant, tested).
+                    self._ct["host_syncs"].dec(len(node.ride_plans))
+                return
+            exp = self._expand_device(op, caps_sig, cap_base, out_cap,
+                                      out_items, vals, carry_in, n,
+                                      want_count=bool(node.ride_plans))
+            if exp is None:
+                return
+            rows2, src, verts2, total, caps2, cap2, ride = exp
+            if ride is not None:
+                for i in node.ride_plans:
+                    acc[i].append(ride)
+                # ride partials arrived inside the expand's existing meta
+                # sync; offset run_set's per-part tally so they aren't
+                # double-counted (guarded dec: underflow raises)
+                self._ct["host_syncs"].dec(len(node.ride_plans))
+            # children that kept every constraint of the shared node consume
+            # the compacted worklist as-is (one chunk stream for all of
+            # them); children whose branch deferred constraints into
+            # residuals get a per-branch packed worklist first, so relaxation
+            # never inflates a branch's downstream item count past its
+            # independent plan's.
+            feeds: list[tuple[list, object, object, int]] = []
+            shared = [ch for ch in node.children if not ch.op.residual]
+            if shared:
+                feeds.append((shared, src, verts2, total))
+            for ch in node.children:
+                if not ch.op.residual:
+                    continue
+                pfn, refs = self._residual_pack_fn(
+                    op.level, ch.op.residual,
+                    int(src.shape[0]) // self._shards)
+                rvals = tuple(cols[c] for c in refs)
+                src_b, verts_b, tot_b = pfn(rvals, src, verts2, total)
+                tot_b, has_b = self._pack_total(tot_b)
+                self._ct["host_syncs"].inc()
+                if has_b:
+                    feeds.append(([ch], src_b, verts_b, tot_b))
+            for children, s, v, t in feeds:
+                for cols2, carry2, vch, m in self._expand_chunks(
+                        op, b, out_cap, cap2, rows2, s, v, cols, t):
+                    self._record(op.level + 1,
+                                 self._wave_repr(cols2, op.out_cols, carry2,
+                                                 vch),
+                                 vch, m)
+                    for child in children:
+                        self._forest_descend(child, cols2, caps2, carry2, m,
+                                             acc)
 
     def _plan_descend(self, plan: WavePlan, oi: int, cols: dict, caps: dict,
                       carry, n: int) -> list:
@@ -991,33 +1077,36 @@ class WaveRunner:
         cap_base = int(carry.shape[1]) if op.use_carry else caps[op.base]
         vals = tuple(cols[c] for c in self._in_cols(op))
         carry_in = carry if op.use_carry else np.int32(0)
-        if op.kind == "count":
-            self._bump(op)
-            fn = self._plan_count_fn(op, caps_sig, cap_base)
-            return [fn(self.g, vals, carry_in, n)]
-        b = (int(carry.shape[0]) if op.use_carry
-             else int(cols[op.base].shape[0])) // self._shards
-        out_cap = min([cap_base] + [caps[j] for j in op.inter])
-        out_items = -(-b * out_cap // self.chunk) * self.chunk
-        if op.kind == "emit":
-            return self._plan_emit(op, caps_sig, cap_base, out_cap,
-                                   out_items, cols, vals, carry_in, n)
-        nxt = plan.ops[oi + 1]
-        if self.device_compact:
-            chunks = self._expand_chunks_device(op, caps_sig, cap_base,
-                                                out_cap, out_items, b, cols,
-                                                vals, carry_in, n)
-        else:
-            chunks = self._expand_chunks_host(op, caps_sig, cap_base,
-                                              out_cap, cols, vals, carry_in,
-                                              n)
-        parts: list = []
-        for cols2, caps2, carry2, vch, m in chunks:
-            self._record(nxt.level,
-                         self._wave_repr(cols2, op.out_cols, carry2, vch),
-                         vch, m)
-            parts += self._plan_descend(plan, oi + 1, cols2, caps2, carry2, m)
-        return parts
+        with self._level_span(op, n):
+            if op.kind == "count":
+                self._bump(op)
+                fn = self._plan_count_fn(op, caps_sig, cap_base)
+                return [self._dispatch(op, fn, (self.g, vals, carry_in, n),
+                                       items=n, caps_sig=caps_sig)]
+            b = (int(carry.shape[0]) if op.use_carry
+                 else int(cols[op.base].shape[0])) // self._shards
+            out_cap = min([cap_base] + [caps[j] for j in op.inter])
+            out_items = -(-b * out_cap // self.chunk) * self.chunk
+            if op.kind == "emit":
+                return self._plan_emit(op, caps_sig, cap_base, out_cap,
+                                       out_items, cols, vals, carry_in, n)
+            nxt = plan.ops[oi + 1]
+            if self.device_compact:
+                chunks = self._expand_chunks_device(op, caps_sig, cap_base,
+                                                    out_cap, out_items, b,
+                                                    cols, vals, carry_in, n)
+            else:
+                chunks = self._expand_chunks_host(op, caps_sig, cap_base,
+                                                  out_cap, cols, vals,
+                                                  carry_in, n)
+            parts: list = []
+            for cols2, caps2, carry2, vch, m in chunks:
+                self._record(nxt.level,
+                             self._wave_repr(cols2, op.out_cols, carry2, vch),
+                             vch, m)
+                parts += self._plan_descend(plan, oi + 1, cols2, caps2,
+                                            carry2, m)
+            return parts
 
     def _plan_emit(self, op, caps_sig, cap_base, out_cap, out_items, cols,
                    vals, carry_in, n) -> list:
@@ -1025,21 +1114,24 @@ class WaveRunner:
         if self.device_compact:
             fn = self._plan_emit_fn(op, caps_sig, cap_base, out_cap,
                                     out_items)
-            emb, total = fn(self.g, vals, carry_in, n)
+            emb, total = self._dispatch(op, fn, (self.g, vals, carry_in, n),
+                                        items=n, caps_sig=caps_sig)
             total = int(total)
-            self.stats["device_compactions"] += 1
-            self.stats["items"] += total
+            self._ct["device_compactions"].inc()
+            self._ct["items"].inc(total)
+            self._h_wave_items.observe(total)
             if total == 0:
                 return []
             return [np.asarray(emb)[:total]]
         hfn = self._plan_expand_host_fn(op, caps_sig, cap_base, out_cap)
-        rows2, counts2 = hfn(self.g, vals, carry_in, n)
+        rows2, counts2 = self._dispatch(op, hfn, (self.g, vals, carry_in, n),
+                                        items=n, caps_sig=caps_sig, host=True)
         wave, ii = compact(np.asarray(rows2), np.asarray(counts2),
                            return_src=True)
-        self.stats["host_compactions"] += 1
+        self._ct["host_compactions"].inc()
         if wave is None:
             return []
-        self.stats["items"] += len(wave)
+        self._ct["items"].inc(len(wave))
         cols_out = [wave.verts if c == op.level else np.asarray(cols[c])[ii]
                     for c in op.out_cols]
         return [np.stack(cols_out, axis=1)]
@@ -1053,16 +1145,18 @@ class WaveRunner:
         self._bump(op)
         fn = self._plan_expand_fn(op, caps_sig, cap_base, out_cap, out_items,
                                   want_count)
-        rows2, src, verts2, meta = fn(self.g, vals, carry_in, n)
+        rows2, src, verts2, meta = self._dispatch(
+            op, fn, (self.g, vals, carry_in, n), items=n, caps_sig=caps_sig)
         meta = [int(x) for x in np.asarray(meta)]
         if want_count:
             meta, ride = meta[:-2], np.asarray(meta[-2:], dtype=np.int32)
         else:
             ride = None
         total, maxc, dmaxs = meta[0], meta[1], meta[2:]
-        self.stats["host_syncs"] += 1
-        self.stats["device_compactions"] += 1
-        self.stats["items"] += total
+        self._ct["host_syncs"].inc()
+        self._ct["device_compactions"].inc()
+        self._ct["items"].inc(total)
+        self._h_wave_items.observe(total)
         if total == 0:
             return None
         caps2 = {c: _pow2cap(max(d, 1))
@@ -1146,19 +1240,21 @@ class WaveRunner:
         an (hi, lo) int32 partial under ``"count_part"``."""
         self._bump(op, host=True)
         hfn = self._plan_expand_host_fn(op, caps_sig, cap_base, out_cap)
-        rows2, counts2 = hfn(self.g, vals, carry_in, n)
+        rows2, counts2 = self._dispatch(op, hfn, (self.g, vals, carry_in, n),
+                                        items=n, caps_sig=caps_sig, host=True)
         if ride_out is not None:
             t = int(np.asarray(counts2, dtype=np.int64).sum())
             ride_out["count_part"] = np.asarray([t >> 16, t & 0xFFFF],
                                                 dtype=np.int32)
         wave, ii = compact(np.asarray(rows2), np.asarray(counts2),
                            return_src=True)
-        self.stats["host_syncs"] += 1
-        self.stats["host_compactions"] += 1
+        self._ct["host_syncs"].inc()
+        self._ct["host_compactions"].inc()
         if wave is None:
             return
         total = len(wave)
-        self.stats["items"] += total
+        self._ct["items"].inc(total)
+        self._h_wave_items.observe(total)
         fwd = [c for c in op.out_cols if c < op.level]
         hostcols = {c: np.asarray(cols[c])[ii] for c in fwd}
         caps2 = {c: _neighbor_cap(self.g, wave.verts if c == op.level

@@ -78,17 +78,45 @@ Mesh contract (sharded sessions)
 * **feed** — ``shard.shard_edge_steps`` deals each degree bucket's edges
   round-robin across shards (``feed_partition="contiguous"`` keeps the
   hub-pinning foil); per-shard feed items ride
-  ``stats["runner"]["shard_feed_items"]``.
+  ``stats["runner"]["shard_feed_items"]`` — backed by a *labeled* counter
+  series (``metrics.counter("shard_feed_items", shard=s)``), so exporters
+  see one series per shard while the legacy list shape is preserved.
+
+Observability
+-------------
+
+Every session carries a ``repro.obs.Telemetry``: ``miner.telemetry``.
+
+* **metrics** — ``telemetry.metrics`` is the registry backing every
+  counter in ``miner.stats`` (session pipeline counters AND the runner's
+  dispatch/sync counters — the legacy dicts are derived views, identical
+  key order and values). ``telemetry.prometheus_text()`` renders the
+  whole registry; labeled series (per-shard feed items) export one sample
+  per label set.
+* **tracing** — pass ``telemetry=Telemetry(enabled=True)`` (or call
+  ``miner.telemetry.enable()``) and every query records a span tree:
+  ``query`` → ``compile``/``schedule``/``execute`` → per-``feed`` and
+  per-level ``L{l}:{kind}`` spans → ``dispatch`` spans timed around the
+  kernel call + ``block_until_ready`` (op kind, items, capacities,
+  exec-cache hit/miss). Export with ``telemetry.write_trace(path)``
+  (Chrome-trace JSON — chrome://tracing / ui.perfetto.dev) or aggregate
+  with ``telemetry.snapshot()`` / ``tracer.level_seconds()``. Disabled
+  (the default), the engine takes the untraced branch: no spans, no
+  extra synchronization, no extra kernel dispatches.
+* **jax profiler** — ``with miner.telemetry.jax_profile(logdir): ...``
+  wraps a query in ``jax.profiler`` start/stop for an XLA-level trace.
 """
 from __future__ import annotations
 
 import dataclasses
+from contextlib import nullcontext
 from typing import Callable, Sequence
 
 import jax
 import numpy as np
 
 from repro.graph.csr import CSRGraph
+from repro.obs import LegacyStatsView, Telemetry
 from .engine import WaveRunner
 from .forest import PlanForest, build_forest, schedule_patterns
 from .plan import Motif, WavePlan, compile_pattern, resolve_query
@@ -164,13 +192,21 @@ class Miner:
     module docstring for the pipeline contract.
     """
 
+    # session pipeline counters, in their historical insertion order
+    _SESSION_KEYS = ("queries", "plan_hits", "plan_misses",
+                     "schedule_hits", "schedule_misses")
+
     def __init__(self, graph: CSRGraph, config: MinerConfig | None = None,
-                 **overrides):
+                 telemetry: Telemetry | None = None, **overrides):
         if config is None:
             config = MinerConfig(**overrides)
         elif overrides:
             config = dataclasses.replace(config, **overrides)
         self.config = config
+        # one Telemetry per session, shared with the runner: every counter
+        # (session pipeline + runner dispatch/sync) lands in one registry
+        # and every span of a traced query lands in one tracer
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
         if config.mesh is not None and int(config.mesh) > 1:
             from repro.distributed.sharding import make_mining_mesh
             from .shard import ShardedWaveRunner
@@ -182,7 +218,8 @@ class Miner:
                 feed_partition=config.feed_partition, chunk=config.chunk,
                 backend=config.backend,
                 device_compact=config.device_compact,
-                fused_level=config.fused_level, exec_cache=self.exec_cache)
+                fused_level=config.fused_level, exec_cache=self.exec_cache,
+                telemetry=self.telemetry)
             # the runner replicated the CSR buffers across the mesh
             self.graph: CSRGraph = self._runner.g
         else:
@@ -194,11 +231,14 @@ class Miner:
             self._runner = WaveRunner(
                 self.graph, chunk=config.chunk, backend=config.backend,
                 device_compact=config.device_compact,
-                fused_level=config.fused_level, exec_cache=self.exec_cache)
+                fused_level=config.fused_level, exec_cache=self.exec_cache,
+                telemetry=self.telemetry)
         self._plans: dict[tuple, WavePlan] = {}
         self._forests: dict[tuple, PlanForest] = {}
-        self._stats = {"queries": 0, "plan_hits": 0, "plan_misses": 0,
-                       "schedule_hits": 0, "schedule_misses": 0}
+        self.metrics = self.telemetry.metrics
+        self._stats = LegacyStatsView()
+        self._sct = {k: self._stats.expose_counter(k, self.metrics)
+                     for k in self._SESSION_KEYS}
 
     # ------------------------------------------------------------ compile
     def compile(self, query, emit: bool = False) -> WavePlan:
@@ -207,18 +247,21 @@ class Miner:
         ``Motif`` queries are scheduled standalone (batch-aware order
         choice happens in ``schedule``); explicit ``Pattern``s and named
         paper patterns keep their declared matching order."""
-        resolved = resolve_query(query)
-        key = (resolved, emit)
-        plan = self._plans.get(key)
-        if plan is not None:
-            self._stats["plan_hits"] += 1
+        tr = self.telemetry.tracer
+        with (tr.span("compile", query=str(query), emit=emit)
+              if tr.enabled else nullcontext()):
+            resolved = resolve_query(query)
+            key = (resolved, emit)
+            plan = self._plans.get(key)
+            if plan is not None:
+                self._sct["plan_hits"].inc()
+                return plan
+            self._sct["plan_misses"].inc()
+            if isinstance(resolved, Motif):
+                resolved = schedule_patterns([resolved])[0]
+            plan = compile_pattern(resolved, emit=emit)
+            self._plans[key] = plan
             return plan
-        self._stats["plan_misses"] += 1
-        if isinstance(resolved, Motif):
-            resolved = schedule_patterns([resolved])[0]
-        plan = compile_pattern(resolved, emit=emit)
-        self._plans[key] = plan
-        return plan
 
     # ----------------------------------------------------------- schedule
     def schedule(self, queries: Sequence, emit: bool = False) -> PlanForest:
@@ -230,59 +273,74 @@ class Miner:
         plans merge into one prefix trie. Cached on the resolved batch, so
         repeated and permuted-config queries skip both the search and the
         merge."""
-        resolved = tuple(resolve_query(q) for q in queries)
-        key = (resolved, emit)
-        forest = self._forests.get(key)
-        if forest is not None:
-            self._stats["schedule_hits"] += 1
+        tr = self.telemetry.tracer
+        with (tr.span("schedule", queries=len(queries), emit=emit)
+              if tr.enabled else nullcontext()):
+            resolved = tuple(resolve_query(q) for q in queries)
+            key = (resolved, emit)
+            forest = self._forests.get(key)
+            if forest is not None:
+                self._sct["schedule_hits"].inc()
+                return forest
+            self._sct["schedule_misses"].inc()
+            # Motifs are searched jointly; Pattern members are fixed points
+            # of the search but still shape its score (they sit in the
+            # trial trie)
+            pats = schedule_patterns(resolved)
+            plans = []
+            for r, p in zip(resolved, pats):
+                plan = compile_pattern(p, emit=emit)
+                self._plans.setdefault((r, emit), plan)
+                plans.append(plan)
+            forest = build_forest(plans)
+            self._forests[key] = forest
             return forest
-        self._stats["schedule_misses"] += 1
-        # Motifs are searched jointly; Pattern members are fixed points of
-        # the search but still shape its score (they sit in the trial trie)
-        pats = schedule_patterns(resolved)
-        plans = []
-        for r, p in zip(resolved, pats):
-            plan = compile_pattern(p, emit=emit)
-            self._plans.setdefault((r, emit), plan)
-            plans.append(plan)
-        forest = build_forest(plans)
-        self._forests[key] = forest
-        return forest
 
     # ------------------------------------------------------------ execute
+    def _query_span(self, kind: str, **attrs):
+        """Root span of one traced query (no-op when tracing is off)."""
+        tr = self.telemetry.tracer
+        if not tr.enabled:
+            return nullcontext()
+        return tr.span("query", kind=kind, **attrs)
+
     def count(self, query) -> int:
         """Count embeddings of one pattern query."""
-        self._stats["queries"] += 1
-        return self._runner.run(self.compile(query))
+        self._sct["queries"].inc()
+        with self._query_span("count", query=str(query)):
+            return self._runner.run(self.compile(query))
 
     def count_many(self, queries: Sequence) -> list[int]:
         """Count a batch of pattern queries in one fused forest pass.
 
         Results are positional and bit-identical to per-query ``count``
         calls on the same scheduled patterns."""
-        self._stats["queries"] += 1
-        return self._runner.run_set(self.schedule(queries))
+        self._sct["queries"].inc()
+        with self._query_span("count_many", queries=len(queries)):
+            return self._runner.run_set(self.schedule(queries))
 
     def embeddings(self, query) -> np.ndarray:
         """Enumerate embeddings of one query as an (N, k) int32 matrix."""
-        self._stats["queries"] += 1
-        return self._runner.run(self.compile(query, emit=True))
+        self._sct["queries"].inc()
+        with self._query_span("embeddings", query=str(query)):
+            return self._runner.run(self.compile(query, emit=True))
 
     def run_plans(self, plans: Sequence[WavePlan]) -> list:
         """Execute pre-compiled plans (FSM's feed, power users): one plan
         runs directly, several fuse through a cached forest."""
-        self._stats["queries"] += 1
+        self._sct["queries"].inc()
         plans = list(plans)
-        if len(plans) == 1:
-            return [self._runner.run(plans[0])]
-        key = ("plans", tuple(p.canonical_key() for p in plans))
-        forest = self._forests.get(key)
-        if forest is None:
-            self._stats["schedule_misses"] += 1
-            forest = self._forests[key] = build_forest(plans)
-        else:
-            self._stats["schedule_hits"] += 1
-        return self._runner.run_set(forest)
+        with self._query_span("run_plans", plans=len(plans)):
+            if len(plans) == 1:
+                return [self._runner.run(plans[0])]
+            key = ("plans", tuple(p.canonical_key() for p in plans))
+            forest = self._forests.get(key)
+            if forest is None:
+                self._sct["schedule_misses"].inc()
+                forest = self._forests[key] = build_forest(plans)
+            else:
+                self._sct["schedule_hits"].inc()
+            return self._runner.run_set(forest)
 
     # -------------------------------------------------------------- stats
     @property
@@ -294,11 +352,18 @@ class Miner:
     def stats(self) -> dict:
         """Session counters: pipeline-stage cache hits/misses, the
         executable cache (``exec_cache.misses`` == retraces), and the
-        runner's dispatch/sync counters."""
+        runner's dispatch/sync counters. Every scalar here is derived
+        from ``self.metrics`` (legacy view — identical keys and values to
+        the dicts this property historically assembled)."""
+        # mirror the executable cache into gauges at snapshot time, so a
+        # registry export (prometheus/trace) carries the retrace counters
+        cache = self.exec_cache.snapshot()
+        for k, v in cache.items():
+            self.metrics.gauge(f"exec_cache_{k}").set(v)
         return {
             **self._stats,
             "mesh": mesh_signature(self.mesh),
-            "exec_cache": self.exec_cache.snapshot(),
+            "exec_cache": cache,
             "retraces": self.exec_cache.misses,
             "runner": dict(self._runner.stats),
         }

@@ -133,7 +133,7 @@ class ShardedWaveRunner(WaveRunner):
                  feed_partition: str = "round_robin",
                  chunk: int | None = None, backend: str = "auto",
                  device_compact: bool = True, record: bool = False,
-                 fused_level: bool = True, exec_cache=None):
+                 fused_level: bool = True, exec_cache=None, telemetry=None):
         if not device_compact:
             raise ValueError(
                 "ShardedWaveRunner requires device_compact=True: the host "
@@ -153,7 +153,8 @@ class ShardedWaveRunner(WaveRunner):
         super().__init__(g, chunk=chunk,
                          backend="xla" if backend == "auto" else backend,
                          device_compact=True, record=False,
-                         fused_level=fused_level, exec_cache=exec_cache)
+                         fused_level=fused_level, exec_cache=exec_cache,
+                         telemetry=telemetry)
         self.mesh = mesh
         self.axis = axis
         self.feed_partition = feed_partition
@@ -165,8 +166,16 @@ class ShardedWaveRunner(WaveRunner):
         self._feed_sharding = NamedSharding(mesh, self._psh)
         # replicate the CSR buffers across the mesh once per runner
         self.g = jax.device_put(g, self._rep_sharding)
-        self.stats["psum_reductions"] = 0
-        self.stats["shard_feed_items"] = [0] * self._shards
+        # mesh-only metrics: the psum counter joins the legacy view as a
+        # plain counter; the per-shard feed tallies are a LABELED series
+        # (one counter per shard) whose legacy key derives the historical
+        # list-of-ints shape from the series
+        self._ct["psum_reductions"] = self.stats.expose_counter(
+            "psum_reductions", self.metrics)
+        self._shard_feed = [self.metrics.counter("shard_feed_items", shard=s)
+                            for s in range(self._shards)]
+        self.stats.expose("shard_feed_items",
+                          lambda: [c.value for c in self._shard_feed])
 
     # ----------------------------------------------------------- dispatch
     def _shmap(self, body: Callable, in_specs, out_specs) -> Callable:
@@ -228,7 +237,7 @@ class ShardedWaveRunner(WaveRunner):
     def _bump(self, op, host: bool = False) -> None:
         super()._bump(op, host)
         if op.kind == "count":
-            self.stats["psum_reductions"] += 1
+            self._ct["psum_reductions"].inc()
 
     # --------------------------------------------------------------- feed
     def _edge_feed(self, symmetric: bool = True):
@@ -237,14 +246,14 @@ class ShardedWaveRunner(WaveRunner):
         double-buffered — step N+1's shard transfers dispatch while the
         mesh computes step N). ``n`` is the per-shard live-count vector."""
         sh = self._feed_sharding
-        items = self.stats["shard_feed_items"]
+        feed = self._shard_feed
 
         def gen():
             for cap, v0, v1, n in shard_edge_steps(
                     self.g, self.chunk, self._shards, symmetric,
                     self.feed_partition):
                 for s in range(self._shards):
-                    items[s] += int(n[s])
+                    feed[s].inc(int(n[s]))
                 yield (cap, jax.device_put(v0, sh), jax.device_put(v1, sh),
                        v1, n)
         return self._double_buffered(gen(), frozenset())
@@ -264,7 +273,8 @@ class ShardedWaveRunner(WaveRunner):
         self._bump(op)
         fn = self._plan_expand_fn(op, caps_sig, cap_base, out_cap, out_items,
                                   want_count)
-        rows2, src, verts2, meta = fn(self.g, vals, carry_in, n)
+        rows2, src, verts2, meta = self._dispatch(
+            op, fn, (self.g, vals, carry_in, n), items=n, caps_sig=caps_sig)
         meta = np.asarray(meta).astype(np.int64)        # (shards, m)
         if want_count:
             meta, rpart = meta[:, :-2], meta[:, -2:].sum(axis=0)
@@ -274,9 +284,10 @@ class ShardedWaveRunner(WaveRunner):
         totals = meta[:, 0]
         maxc = int(meta[:, 1].max())
         dmaxs = meta[:, 2:].max(axis=0)
-        self.stats["host_syncs"] += 1
-        self.stats["device_compactions"] += 1
-        self.stats["items"] += int(totals.sum())
+        self._ct["host_syncs"].inc()
+        self._ct["device_compactions"].inc()
+        self._ct["items"].inc(int(totals.sum()))
+        self._h_wave_items.observe(int(totals.sum()))
         if int(totals.max()) == 0:
             return None
         caps2 = {c: _pow2cap(max(int(d), 1))
@@ -312,10 +323,12 @@ class ShardedWaveRunner(WaveRunner):
         blocks sliced to each shard's live total."""
         self._bump(op)
         fn = self._plan_emit_fn(op, caps_sig, cap_base, out_cap, out_items)
-        emb, totals = fn(self.g, vals, carry_in, n)
+        emb, totals = self._dispatch(op, fn, (self.g, vals, carry_in, n),
+                                     items=n, caps_sig=caps_sig)
         totals = np.asarray(totals, dtype=np.int64).reshape(-1)
-        self.stats["device_compactions"] += 1
-        self.stats["items"] += int(totals.sum())
+        self._ct["device_compactions"].inc()
+        self._ct["items"].inc(int(totals.sum()))
+        self._h_wave_items.observe(int(totals.sum()))
         if int(totals.max()) == 0:
             return []
         emb = np.asarray(emb)
