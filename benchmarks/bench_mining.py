@@ -18,7 +18,9 @@ from __future__ import annotations
 
 from repro.graph import get_dataset
 from repro.graph.datasets import dataset_stats
-from repro.mining import apps, baseline, exhaustive
+from repro.mining import baseline, exhaustive
+from repro.mining.apps import shared_session
+from repro.mining.plan import clique_pattern
 from repro.obs import Telemetry
 
 # bench-local telemetry: outer stopwatch spans only (runners untraced)
@@ -37,14 +39,19 @@ BENCH_SETS = [
 ]
 EXHAUSTIVE_SETS = {"citeseer", "gnutella"}   # exponential baseline: small only
 
+# engine side: the stable session API (one shared Miner per graph — same
+# warm-cache semantics the deprecated one-shot shims had)
 APPS = [
-    ("T", lambda g: apps.triangle_count(g), lambda g: baseline.triangle_count(g)),
-    ("TC", lambda g: apps.three_chain_count(g, induced=True),
+    ("T", lambda g: shared_session(g).count("triangle"),
+     lambda g: baseline.triangle_count(g)),
+    ("TC", lambda g: shared_session(g).count("three-chain"),
      lambda g: baseline.three_chain_count(g, induced=True)),
-    ("TT", lambda g: apps.tailed_triangle_count(g),
+    ("TT", lambda g: shared_session(g).count("tailed-triangle"),
      lambda g: baseline.tailed_triangle_count(g)),
-    ("4C", lambda g: apps.clique_count(g, 4), lambda g: baseline.clique_count(g, 4)),
-    ("5C", lambda g: apps.clique_count(g, 5), lambda g: baseline.clique_count(g, 5)),
+    ("4C", lambda g: shared_session(g).count(clique_pattern(4)),
+     lambda g: baseline.clique_count(g, 4)),
+    ("5C", lambda g: shared_session(g).count(clique_pattern(5)),
+     lambda g: baseline.clique_count(g, 5)),
 ]
 
 

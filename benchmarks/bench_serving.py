@@ -1,0 +1,211 @@
+"""Serving benchmark: the concurrent mining service under mixed traffic.
+
+Three phases, each feeding benchmarks/ci_gate.py --serving:
+
+1. **Deterministic batching** (exact facts): the heterogeneous request mix
+   is submitted concurrently with the result cache OFF, so every tick
+   merges the requests into one ``PlanForest`` schedule per traffic class.
+   The gated facts are the per-tick feed passes — fused must be strictly
+   below the sum of the requests' independent schedules (``sharing_ok``,
+   the cross-request sharing acceptance) — and ``steady_retraces == 0``
+   (warmed ticks rebuild no executables).
+2. **Result cache** (exact facts): a cached service serves the same mix
+   twice — the second submission must complete entirely from cache
+   (``cached_tick_executed == 0``), and a ``set_graph`` version bump must
+   invalidate every entry.
+3. **Load** (gated ratios): the threaded ``LoadGenerator`` bursts the mix
+   at the service (queue depth > clients guarantees merged ticks) and the
+   resulting qps/p50/p99 are normalised against a sequential warmed
+   ``Miner`` serving the identical request stream one at a time —
+   ``qps_vs_sequential`` is the concurrency acceptance ratio.
+
+Wall-clock rides ``repro.obs`` spans on the service telemetry; the trace
+JSON written by ``main()``/ci_gate is the Perfetto artifact showing the
+tick/execute span tree under load.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.mining import FOUR_MOTIF_SHAPES, Miner, MinerConfig
+from repro.obs import Telemetry
+from repro.serving import LoadGenerator, MiningService, WorkerSpec, \
+    percentile
+
+# the heterogeneous request mix: four single-pattern requests + the
+# 4-motif batch ("4-clique" rides in two different requests on purpose —
+# the union dedup must still schedule it once per tick)
+MIX_LABELS = ["T", "TC", "TT", "4C"] + list(FOUR_MOTIF_SHAPES)
+MIXES = [("triangle",), ("three-chain",), ("tailed-triangle",),
+         ("4-clique",), tuple(FOUR_MOTIF_SHAPES)]
+
+
+def _specs(shards: int) -> tuple[list[WorkerSpec], list[str]]:
+    """Worker pool + per-request routing for the mix: ``shards > 1`` adds
+    a mesh-sharded class serving the heavy motif batch (mixed pool)."""
+    specs = [WorkerSpec("default", MinerConfig())]
+    classes = ["default"] * len(MIXES)
+    if shards > 1:
+        specs.append(WorkerSpec("bulk", MinerConfig(mesh=shards)))
+        classes[-1] = "bulk"
+    return specs, classes
+
+
+def _submit_mix(svc: MiningService, classes: list[str]) -> list:
+    return [svc.submit(qs, traffic_class=tc)
+            for qs, tc in zip(MIXES, classes)]
+
+
+def batching_report(g, shards: int = 0, rounds: int = 3,
+                    telemetry: Telemetry | None = None) -> dict:
+    """Phase 1: cross-request forest batching + steady-state retraces."""
+    specs, classes = _specs(shards)
+    svc = MiningService(g, workers=tuple(specs), cache_results=False,
+                        telemetry=telemetry)
+    first = None
+    warm_retraces = steady_retraces = 0
+    tick = {}
+    for _ in range(max(rounds, 2)):
+        before = svc.stats["retraces"]
+        handles = _submit_mix(svc, classes)
+        tick = svc.tick()
+        flat = [v for h in handles for v in h.result(0)]
+        res = dict(zip(MIX_LABELS, flat))
+        if first is None:
+            first, warm_retraces = res, svc.stats["retraces"] - before
+        else:
+            assert res == first, (res, first)
+            steady_retraces += svc.stats["retraces"] - before
+    fp = tick["feed_passes"]
+    return {
+        "counts": first,
+        "batch_requests": len(MIXES),
+        "feed_passes_independent": fp["independent"],
+        "feed_passes_fused": fp["fused"],
+        "sharing_ok": bool(fp["fused"] < fp["independent"]),
+        "warm_retraces": warm_retraces,
+        "steady_retraces": steady_retraces,
+        "workers": sorted(svc.stats["workers"]),
+    }
+
+
+def cache_report(g) -> dict:
+    """Phase 2: result-cache hit path + version-bump invalidation."""
+    svc = MiningService(g, cache_results=True)
+    _, classes = _specs(0)
+    _submit_mix(svc, classes)
+    svc.run_until_idle()
+    warm = svc.cache.snapshot()
+    handles = _submit_mix(svc, classes)
+    tick = svc.tick()
+    assert all(h.from_cache for h in handles)
+    snap = svc.cache.snapshot()
+    svc.set_graph(g)                       # version bump: drops every entry
+    after = svc.cache.snapshot()
+    return {
+        "first_pass_misses": warm["misses"],
+        "entries": snap["entries"],
+        "second_pass_hits": snap["hits"] - warm["hits"],
+        "cached_tick_executed": tick["executed"],
+        "invalidations": after["invalidations"],
+        "entries_after_bump": after["entries"],
+    }
+
+
+def load_report(g, requests: int = 24, clients: int = 4,
+                telemetry: Telemetry | None = None) -> dict:
+    """Phase 3: burst load through the service vs a sequential session.
+
+    Both sides run warmed (executables traced before timing) and serve the
+    identical request stream (``MIXES`` cycled ``requests`` times); burst
+    submission keeps the queue deeper than one request so ticks merge."""
+    # sequential baseline: one warmed Miner, one request at a time
+    miner = Miner(g)
+    for qs in MIXES:
+        miner.count_many(list(qs))
+    lat = []
+    t0 = time.perf_counter()
+    for i in range(requests):
+        t1 = time.perf_counter()
+        miner.count_many(list(MIXES[i % len(MIXES)]))
+        lat.append(time.perf_counter() - t1)
+    seq_wall = time.perf_counter() - t0
+    seq = {"qps": requests / max(seq_wall, 1e-9),
+           "p50_s": percentile(lat, 50), "p99_s": percentile(lat, 99)}
+
+    # service under burst: warm every executable first, then load
+    specs, classes = _specs(0)
+    svc = MiningService(g, workers=tuple(specs), cache_results=False,
+                        telemetry=telemetry)
+    _submit_mix(svc, classes)
+    svc.run_until_idle()
+    before = svc.stats["retraces"]
+    lg = LoadGenerator(svc, list(zip(MIXES, classes)), requests=requests,
+                       clients=clients, qps=None)
+    res = lg.run()
+    assert res["completed"] == requests, res
+    return {
+        "sequential": {k: round(v, 4) for k, v in seq.items()},
+        "service": {"qps": round(res["qps"], 4),
+                    "p50_s": round(res["p50_s"], 4),
+                    "p99_s": round(res["p99_s"], 4),
+                    "feed_passes": res["feed_passes"]},
+        "load_retraces": svc.stats["retraces"] - before,
+        "load_sharing_ok": bool(res["feed_passes"]["fused"]
+                                < res["feed_passes"]["independent"]),
+        "qps_vs_sequential": round(res["qps"] / max(seq["qps"], 1e-9), 4),
+        "p50_vs_sequential": round(res["p50_s"] / max(seq["p50_s"], 1e-9), 4),
+        "p99_vs_sequential": round(res["p99_s"] / max(seq["p99_s"], 1e-9), 4),
+    }
+
+
+def serving_report(g, shards: int = 0, requests: int = 24, clients: int = 4,
+                   telemetry: Telemetry | None = None) -> dict:
+    """All three phases; ``shards > 1`` adds the mixed sharded pool to the
+    batching phase (the load phase stays single-device — thread-per-client
+    timing over a mesh is a wall-clock fact, not a determinism fact)."""
+    out = {"batching": batching_report(g, shards=shards, telemetry=telemetry)}
+    out["cache"] = cache_report(g)
+    out["load"] = load_report(g, requests=requests, clients=clients,
+                              telemetry=telemetry)
+    return out
+
+
+def main(argv=None):
+    import argparse
+    import json
+
+    from repro.graph import get_dataset
+    from repro.graph.datasets import dataset_stats
+    from repro.launch.cli import add_graph_args, add_service_args, \
+        add_session_args
+
+    ap = argparse.ArgumentParser()
+    add_graph_args(ap)
+    add_session_args(ap)
+    add_service_args(ap)
+    args = ap.parse_args(argv)
+    g = get_dataset(args.dataset, scale=args.scale)
+    print(f"[serving] {args.dataset} x{args.scale}: {dataset_stats(g)}")
+    telemetry = Telemetry(enabled=bool(args.trace))
+    rep = serving_report(g, shards=args.shards, requests=args.requests,
+                         clients=args.clients, telemetry=telemetry)
+    b, c, ld = rep["batching"], rep["cache"], rep["load"]
+    print(f"[serving] batching: feed passes "
+          f"{b['feed_passes_independent']} -> {b['feed_passes_fused']} "
+          f"(sharing {'OK' if b['sharing_ok'] else 'FAIL'}), "
+          f"steady retraces {b['steady_retraces']}")
+    print(f"[serving] cache: {c['second_pass_hits']} hits / "
+          f"{c['first_pass_misses']} misses, bump dropped "
+          f"{c['invalidations']} entries")
+    print(f"[serving] load: service {ld['service']['qps']:.1f} qps vs "
+          f"sequential {ld['sequential']['qps']:.1f} qps "
+          f"(x{ld['qps_vs_sequential']:.2f}), p50 x{ld['p50_vs_sequential']}"
+          f", p99 x{ld['p99_vs_sequential']}")
+    if args.trace:
+        print(f"[serving] trace -> {telemetry.write_trace(args.trace)}")
+    print(json.dumps(rep, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -65,9 +65,18 @@ SHARDED_WIDTHS = (1, 8)
 # telemetry leg (--telemetry): registry-derived stats view must equal the
 # legacy counters bit-for-bit, and enabling tracing must not change them
 TELEMETRY_SET = ("email-eu-core", 0.25)
+# serving leg (--serving): concurrent MiningService facts — cross-request
+# feed-pass sharing, steady/load retraces, result-cache counters (exact)
+# plus the qps/p99 ratios vs a sequential session (tolerance-gated)
+SERVING_SET = ("email-eu-core", 0.25)
 # wall-clock ratios + structural counters: dense enough that the timed
 # region is hundreds of ms, not noise (see stability note in tolerances)
 PERF_SET = ("email-eu-core", 1.0)
+
+# optional gate sections: each key prefix only exists in a run that passed
+# the matching flag; compare()/--update-baseline treat absent sections as
+# "not run this leg", never as regressions
+SECTION_PREFIXES = ("sharded.", "telemetry.", "serving.")
 
 # ratio tolerances (fractional, see module docstring) — generous because CI
 # wall clock is shared-runner noisy; the exact counters carry the precise
@@ -78,6 +87,10 @@ DEFAULT_TOLERANCES = {
     "fusion_speedup": 0.5,
     "fused_level_speedup": 0.5,
     "wave_speedup": 0.6,
+    # service vs sequential: thread scheduling + queueing make these the
+    # noisiest gated ratios (p50 is artifact-only for the same reason)
+    "qps_vs_sequential": 0.6,
+    "p99_vs_sequential": 2.0,
 }
 DIRECTIONS = {
     "plan_overhead_4C": "lower_better",
@@ -85,6 +98,8 @@ DIRECTIONS = {
     "fusion_speedup": "higher_better",
     "fused_level_speedup": "higher_better",
     "wave_speedup": "higher_better",
+    "qps_vs_sequential": "higher_better",
+    "p99_vs_sequential": "lower_better",
 }
 
 
@@ -226,20 +241,77 @@ def measure_telemetry(exact: dict, sharded: bool = False) -> dict:
     return spans_doc
 
 
-def measure(sharded: bool = False, telemetry: bool = False) -> dict:
+def measure_serving(exact: dict, ratios: dict, sharded: bool = False,
+                    trace_telemetry=None) -> dict:
+    """Serving gate section (``--serving``): the concurrent MiningService
+    on the small deterministic set.
+
+    Exact keys: the batched counts, the cross-request feed-pass sharing
+    facts (``fused < independent`` is the batching acceptance), zero
+    steady-state retraces — including under threaded burst load — and the
+    result-cache hit/invalidation counters. With ``--sharded`` too, the
+    mixed sharded/unsharded pool repeats the batching phase on a mesh=8
+    bulk worker and must reproduce the same counts. Gated ratios:
+    qps/p99 of the loaded service vs a sequential warmed session.
+    Returns the artifact-only wall-clock details (absolute latencies)."""
+    from benchmarks.bench_serving import batching_report, cache_report, \
+        load_report
     from repro.graph import get_dataset
-    from repro.mining import apps
+
+    name, scale = SERVING_SET
+    g = get_dataset(name, scale=scale)
+    tag = f"{name}@{scale}"
+    print(f"[gate] {tag}: serving (batching + cache) ...", flush=True)
+    b = batching_report(g, telemetry=trace_telemetry)
+    exact[f"serving.{tag}.counts"] = b["counts"]
+    exact[f"serving.{tag}.batch_requests"] = b["batch_requests"]
+    exact[f"serving.{tag}.feed_passes"] = [
+        b["feed_passes_independent"], b["feed_passes_fused"]]
+    exact[f"serving.{tag}.sharing_ok"] = b["sharing_ok"]
+    exact[f"serving.{tag}.steady_retraces"] = b["steady_retraces"]
+    c = cache_report(g)
+    exact[f"serving.{tag}.cache"] = c
+    if sharded:
+        print(f"[gate] {tag}: serving mixed sharded pool ...", flush=True)
+        bm = batching_report(g, shards=8)
+        exact[f"serving.{tag}.mesh8.counts_parity"] = \
+            bool(bm["counts"] == b["counts"])
+        exact[f"serving.{tag}.mesh8.workers"] = bm["workers"]
+        exact[f"serving.{tag}.mesh8.sharing_ok"] = bm["sharing_ok"]
+        exact[f"serving.{tag}.mesh8.steady_retraces"] = bm["steady_retraces"]
+    print(f"[gate] {tag}: serving load ...", flush=True)
+    ld = load_report(g, telemetry=trace_telemetry)
+    exact[f"serving.{tag}.load_sharing_ok"] = ld["load_sharing_ok"]
+    exact[f"serving.{tag}.load_retraces"] = ld["load_retraces"]
+    ratios[f"serving.{tag}.qps_vs_sequential"] = ld["qps_vs_sequential"]
+    ratios[f"serving.{tag}.p99_vs_sequential"] = ld["p99_vs_sequential"]
+    print(f"[gate] serving: feed passes "
+          f"{exact[f'serving.{tag}.feed_passes']}, "
+          f"load retraces {ld['load_retraces']}, qps x"
+          f"{ld['qps_vs_sequential']}, p99 x{ld['p99_vs_sequential']}",
+          flush=True)
+    return {"sequential": ld["sequential"], "service": ld["service"],
+            "p50_vs_sequential": ld["p50_vs_sequential"]}
+
+
+def measure(sharded: bool = False, telemetry: bool = False,
+            serving: bool = False, serving_trace: str = "") -> dict:
+    from repro.graph import get_dataset
+    from repro.mining import Miner
+    from repro.mining.plan import FOUR_MOTIF_SHAPES
     exact: dict = {}
     ratios: dict = {}
     for name, scale in COUNT_SETS:
         g = get_dataset(name, scale=scale)
         tag = f"{name}@{scale}"
         print(f"[gate] {tag}: counting ...", flush=True)
-        exact[f"{tag}.T"] = apps.triangle_count(g)
-        exact[f"{tag}.TC"] = apps.three_chain_count(g, induced=True)
-        exact[f"{tag}.TT"] = apps.tailed_triangle_count(g)
-        exact[f"{tag}.4C"] = apps.clique_count(g, 4)
-        exact[f"{tag}.4M"] = apps.four_motif(g)
+        m = Miner(g)
+        exact[f"{tag}.T"] = m.count("triangle")
+        exact[f"{tag}.TC"] = m.count("three-chain")
+        exact[f"{tag}.TT"] = m.count("tailed-triangle")
+        exact[f"{tag}.4C"] = m.count("4-clique")
+        exact[f"{tag}.4M"] = dict(zip(
+            FOUR_MOTIF_SHAPES, m.count_many(list(FOUR_MOTIF_SHAPES))))
 
     # session-API smoke leg: one Miner serving the full app mix twice —
     # exact counts, the zero-retrace reuse contract and the auto-scheduled
@@ -298,6 +370,15 @@ def measure(sharded: bool = False, telemetry: bool = False) -> dict:
     if telemetry:
         # spans carry wall-clock seconds: artifact-only, never baselined
         out["telemetry_spans"] = measure_telemetry(exact, sharded=sharded)
+    if serving:
+        from repro.obs import Telemetry
+        trace_tel = Telemetry(enabled=bool(serving_trace))
+        # absolute latencies are wall clock: artifact-only, never baselined
+        out["serving_latency"] = measure_serving(
+            exact, ratios, sharded=sharded, trace_telemetry=trace_tel)
+        if serving_trace:
+            path = trace_tel.write_trace(serving_trace)
+            print(f"[gate] serving trace -> {path}", flush=True)
     return out
 
 
@@ -311,27 +392,40 @@ def _tolerance_for(metric: str, baseline: dict) -> tuple[float, str]:
             baseline.get("directions", DIRECTIONS).get(stem, "lower_better"))
 
 
+def _section_of(key: str) -> str | None:
+    """The optional-section prefix a metric key belongs to, if any."""
+    return next((p for p in SECTION_PREFIXES if key.startswith(p)), None)
+
+
+def _skip_key(key: str, ran: dict) -> bool:
+    """True when a baseline key belongs to a section this invocation did
+    not run (``sharded.*`` without --sharded, etc.). ``*.mesh*`` keys in
+    the telemetry/serving sections additionally need --sharded."""
+    sect = _section_of(key)
+    if sect is None:
+        return False
+    if not ran[sect]:
+        return True
+    return ".mesh" in key and not ran["sharded."]
+
+
 def compare(got: dict, baseline: dict) -> list[str]:
     """Return a list of regression messages (empty = gate passes).
 
-    The ``sharded.*`` exact keys only exist when the gate ran with
-    ``--sharded`` (the multi-device CI leg), and ``telemetry.*`` keys only
-    with ``--telemetry``. A run without those flags skips the matching
-    baseline keys instead of failing, so a partial invocation stays green
-    against the full baseline."""
+    The ``sharded.*`` keys only exist when the gate ran with ``--sharded``
+    (the multi-device CI leg), ``telemetry.*`` only with ``--telemetry``
+    and ``serving.*`` only with ``--serving``. A run without those flags
+    skips the matching baseline keys (exact AND ratios) instead of
+    failing, so a partial invocation stays green against the full
+    baseline."""
     failures = []
     base_exact = baseline.get("exact", {})
-    ran_sharded = any(k.startswith("sharded.") for k in got["exact"])
-    ran_telemetry = any(k.startswith("telemetry.") for k in got["exact"])
+    ran = {p: any(k.startswith(p) for d in (got["exact"], got["ratios"])
+                  for k in d)
+           for p in SECTION_PREFIXES}
     for key, want in base_exact.items():
-        if key.startswith("sharded.") and not ran_sharded:
+        if _skip_key(key, ran):
             continue
-        if key.startswith("telemetry."):
-            if not ran_telemetry:
-                continue
-            if ".mesh" in key and not ran_sharded:
-                # the mesh-N telemetry leg needs --sharded too
-                continue
         have = got["exact"].get(key, "<missing>")
         if have != want:
             failures.append(f"EXACT {key}: baseline {want!r} != got {have!r}")
@@ -347,6 +441,8 @@ def compare(got: dict, baseline: dict) -> list[str]:
     for key, base_val in base_ratios.items():
         have = got["ratios"].get(key)
         if have is None:
+            if _skip_key(key, ran):
+                continue
             failures.append(f"RATIO {key}: not measured")
             continue
         tol, direction = _tolerance_for(key, baseline)
@@ -359,6 +455,15 @@ def compare(got: dict, baseline: dict) -> list[str]:
                 f"RATIO {key}: {have} vs baseline {base_val} "
                 f"({direction}, tol {tol:.0%}) — REGRESSION")
     return failures
+
+
+def _merge_kept(new: dict, old: dict, ran: dict) -> dict:
+    """Baseline update for one of the exact/ratios dicts: keep every old
+    key whose optional section this invocation did not run (including the
+    ``*.mesh*`` keys when --sharded was absent) so a partial
+    ``--update-baseline`` never silently drops another leg's baseline."""
+    keep = {k: v for k, v in old.items() if _skip_key(k, ran)}
+    return {**keep, **new}
 
 
 def main(argv=None) -> int:
@@ -374,26 +479,39 @@ def main(argv=None) -> int:
                     help="also run the telemetry parity section: registry-"
                          "derived stats must equal the legacy counters "
                          "bit-for-bit, with tracing on and off")
+    ap.add_argument("--serving", action="store_true",
+                    help="also run the concurrent-service section: cross-"
+                         "request feed-pass sharing, steady/load retraces "
+                         "and cache counters (exact) + qps/p99 vs a "
+                         "sequential session (ratios); writes the loaded "
+                         "service's Perfetto trace next to --out")
     args = ap.parse_args(argv)
 
-    got = measure(sharded=args.sharded, telemetry=args.telemetry)
+    serving_trace = ""
+    if args.serving:
+        serving_trace = str(Path(args.out).with_name(
+            Path(args.out).stem + "_serving_trace.json"))
+    got = measure(sharded=args.sharded, telemetry=args.telemetry,
+                  serving=args.serving, serving_trace=serving_trace)
     Path(args.out).write_text(json.dumps(got, indent=2, sort_keys=True))
     print(f"[gate] wrote {args.out}")
 
     if args.update_baseline:
-        exact = got["exact"]
-        kept = tuple(p for p in ("sharded.", "telemetry.")
-                     if not any(k.startswith(p) for k in exact))
-        if kept:
+        ran = {p: any(k.startswith(p)
+                      for d in (got["exact"], got["ratios"]) for k in d)
+               for p in SECTION_PREFIXES}
+        if not all(ran.values()) or not args.sharded:
             # keep the sections recorded by a previous --sharded /
-            # --telemetry update rather than silently dropping them
+            # --telemetry / --serving update instead of dropping them
             try:
                 old = json.loads(Path(args.baseline).read_text())
             except (FileNotFoundError, json.JSONDecodeError):
                 old = {}
-            exact = {**{k: v for k, v in old.get("exact", {}).items()
-                        if k.startswith(kept)}, **exact}
-            got = {**got, "exact": exact}
+            got = {**got,
+                   "exact": _merge_kept(got["exact"],
+                                        old.get("exact", {}), ran),
+                   "ratios": _merge_kept(got["ratios"],
+                                         old.get("ratios", {}), ran)}
         doc = {
             "_doc": ("CI perf-regression baseline (benchmarks/ci_gate.py). "
                      "'exact' must match bit-for-bit; 'ratios' fail when "

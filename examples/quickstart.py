@@ -10,7 +10,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.core import isa, make_stream, to_host, s_nestinter
 from repro.graph import build_csr, neighbors_stream
 from repro.graph.generators import erdos_renyi
-from repro.mining.session import Miner
+from repro.mining import Miner       # the stable public surface
 
 # --- streams are first-class: Table I instructions as library calls -------
 a = make_stream([1, 3, 5, 7, 9], values=[1., 2., 3., 4., 5.])
@@ -68,6 +68,24 @@ print("traced query       :", f"{q.seconds * 1e3:.1f}ms,",
 top = sorted(tel.tracer.level_seconds().items(),
              key=lambda kv: -kv[1])[:3]
 print("hottest spans      :", {k: f"{v * 1e3:.1f}ms" for k, v in top})
+
+# --- concurrent traffic: a MiningService over a pool of sessions ----------
+# submit() is thread-safe and non-blocking; each tick() merges the queued
+# requests into ONE forest schedule per traffic class (cross-request
+# sharing), serves repeats from a graph-version-keyed result cache, and
+# applies admission control (max_in_flight, per-request deadlines).
+from repro.serving import MiningService
+
+svc = MiningService(g)
+r1 = svc.submit(("triangle", "paw"))      # two concurrent requests ...
+r2 = svc.submit(("triangle", "4-cycle"))  # ... sharing the triangle prefix
+tick = svc.tick()
+print("service tick       :", tick["requests"], "requests merged,",
+      "feed passes", tick["feed_passes"]["independent"], "->",
+      tick["feed_passes"]["fused"])
+print("request results    :", r1.result(), r2.result())
+print("cached repeat      :", svc.query("triangle"),
+      f"(hits={svc.cache.snapshot()['hits']})")
 
 # multi-device? the same session mines data-parallel over a mesh — counts
 # are bit-identical (on CPU: XLA_FLAGS=--xla_force_host_platform_device_count=8)

@@ -299,10 +299,9 @@ def main():
     ap.add_argument("--mesh", choices=["single", "multi", "both"],
                     default="single")
     ap.add_argument("--all", action="store_true")
-    ap.add_argument("--out", default=OUT_DIR)
     ap.add_argument("--no-calibrate", action="store_true")
-    ap.add_argument("--force", action="store_true",
-                    help="re-run cells whose artifact already exists")
+    from repro.launch.cli import add_out_args
+    add_out_args(ap, default_out=OUT_DIR)
     args = ap.parse_args()
     meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
     cells = []

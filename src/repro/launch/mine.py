@@ -29,8 +29,7 @@ from repro.mining import baseline, exhaustive
 from repro.mining.fsm import fsm, random_labels, sfsm
 from repro.mining.plan import FOUR_MOTIF_SHAPES, TRIANGLE, \
     THREE_CHAIN_INDUCED
-from repro.mining.session import Miner
-from repro.obs import Telemetry
+from repro.mining.session import Miner, MinerConfig
 
 # per-pattern 4-motif codes (auto-scheduled Motif queries, zero engine code)
 PATTERN_APPS = {"DM": "diamond", "CY": "4-cycle", "PW": "paw",
@@ -107,10 +106,11 @@ def run_baseline(app: str, g):
 
 
 def main(argv=None):
+    from repro.launch.cli import add_graph_args, add_session_args
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--app", choices=APPS, default="T")
-    ap.add_argument("--dataset", choices=list(DATASETS), default="email-eu-core")
-    ap.add_argument("--scale", type=float, default=1.0)
+    add_graph_args(ap, choices=list(DATASETS))
     ap.add_argument("--support", type=int, default=100)
     ap.add_argument("--labels", type=int, default=4)
     ap.add_argument("--baseline", action="store_true",
@@ -126,16 +126,7 @@ def main(argv=None):
                     help="also run GRAMER-style exhaustive check for PATTERN")
     ap.add_argument("--partitions", type=int, default=0,
                     help="print degree-balanced partition stats (straggler)")
-    ap.add_argument("--session-stats", action="store_true",
-                    help="print the session's cache/retrace counters and "
-                         "the Prometheus-style metrics snapshot")
-    ap.add_argument("--shards", type=int, default=0,
-                    help="mine data-parallel over an N-way device mesh "
-                         "(on CPU set XLA_FLAGS="
-                         "--xla_force_host_platform_device_count=N)")
-    ap.add_argument("--trace", default="", metavar="OUT.json",
-                    help="enable span tracing and write a Chrome-trace "
-                         "(Perfetto) JSON of the run's span tree")
+    add_session_args(ap)
     ap.add_argument("--jax-profile", default="", metavar="LOGDIR",
                     help="wrap the query in jax.profiler start/stop "
                          "(XLA-level trace written to LOGDIR)")
@@ -143,9 +134,8 @@ def main(argv=None):
 
     g = get_dataset(args.dataset, scale=args.scale)
     print(f"[mine] {args.dataset} x{args.scale}: {dataset_stats(g)}")
-    telemetry = Telemetry(enabled=bool(args.trace))
-    miner = Miner(g, mesh=args.shards if args.shards > 1 else None,
-                  telemetry=telemetry)
+    miner = Miner(g, MinerConfig.from_args(args))
+    telemetry = miner.telemetry
     if miner.mesh is not None:
         print(f"[mine] mesh: {args.shards}-way "
               f"({dict(miner.mesh.shape)})")

@@ -1,34 +1,64 @@
-from .apps import (
-    clique_count,
-    four_motif,
-    pattern_count,
-    pattern_embeddings,
-    pattern_set_count,
-    pattern_set_run,
-    shared_session,
-    tailed_triangle_count,
-    three_chain_count,
-    three_motif,
-    triangle_count,
-    triangle_count_nested,
-    triangle_list,
-)
-from .plan import (FOUR_MOTIF_SHAPES, FOUR_MOTIFS, Motif, Pattern, WavePlan,
-                   compile_pattern, motif, pattern)
-from .forest import PlanForest, build_forest, schedule_patterns
-from .session import ExecutableCache, Miner, MinerConfig
-from .fsm import fsm, sfsm
-from .exhaustive import exhaustive_count
+"""Public mining API — the stable surface.
+
+``repro.mining`` is the package boundary user code imports from; the
+names in ``__all__`` are the supported query API:
+
+* ``Miner`` / ``MinerConfig`` — the graph-resident session (compile ->
+  schedule -> execute, every stage cached; ``MinerConfig`` is the one
+  place construction knobs live).
+* ``MiningService`` — the concurrent service over a pool of sessions
+  (``repro.serving``): thread-safe submit, cross-request forest batching
+  per tick, result cache, admission control.
+* ``Pattern`` / ``Motif`` / ``compile_pattern`` (+ the ``pattern`` /
+  ``motif`` builders) — the declarative query language the session
+  resolves.
+* ``PlanForest`` / ``build_forest`` / ``schedule_patterns`` — the
+  multi-pattern fusion layer (power users; the session calls these).
+
+The historical one-shot helpers (``apps.triangle_count`` and friends)
+are deprecated shims over ``Miner`` — importable, but each call emits a
+``DeprecationWarning``. ``apps.shared_session`` (the per-graph session
+pool behind them) remains supported.
+"""
 from . import reference
+from .exhaustive import exhaustive_count
+from .forest import PlanForest, build_forest, schedule_patterns
+from .fsm import fsm, sfsm
+from .plan import (FOUR_MOTIF_SHAPES, FOUR_MOTIFS, Motif, Pattern, WavePlan,
+                   compile_pattern, motif, pattern, resolve_query)
+from .session import ExecutableCache, Miner, MinerConfig
 
 __all__ = [
-    "triangle_count", "triangle_count_nested", "three_chain_count",
-    "tailed_triangle_count", "three_motif", "clique_count", "four_motif",
-    "pattern_count", "pattern_embeddings", "pattern_set_count",
-    "pattern_set_run", "triangle_list", "shared_session",
-    "Motif", "Pattern", "WavePlan", "compile_pattern", "motif", "pattern",
-    "FOUR_MOTIFS", "FOUR_MOTIF_SHAPES",
-    "PlanForest", "build_forest", "schedule_patterns",
-    "ExecutableCache", "Miner", "MinerConfig",
+    # the session + service query API (the stable core)
+    "Miner", "MinerConfig", "MiningService",
+    # the query language
+    "Pattern", "Motif", "WavePlan", "compile_pattern", "motif", "pattern",
+    "resolve_query", "FOUR_MOTIFS", "FOUR_MOTIF_SHAPES",
+    # fusion layer (power users)
+    "PlanForest", "build_forest", "schedule_patterns", "ExecutableCache",
+    # workloads over the session
     "fsm", "sfsm", "exhaustive_count", "reference",
 ]
+
+# legacy names re-exported for source compatibility; the one-shot helpers
+# among them warn on each CALL (importing does not). shared_session stays
+# supported — it is the session pool, not a one-shot shim.
+_APPS_REEXPORTS = (
+    "clique_count", "four_motif", "pattern_count", "pattern_embeddings",
+    "pattern_set_count", "pattern_set_run", "shared_session",
+    "tailed_triangle_count", "three_chain_count", "three_motif",
+    "triangle_count", "triangle_count_nested", "triangle_list",
+)
+
+
+def __getattr__(name: str):
+    if name == "MiningService":
+        # lazy: repro.serving imports this package (sessions, patterns) —
+        # resolving the service on first touch keeps the surface flat
+        # without an import cycle
+        from repro.serving import MiningService
+        return MiningService
+    if name in _APPS_REEXPORTS or name == "apps":
+        from . import apps
+        return apps if name == "apps" else getattr(apps, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -34,6 +34,7 @@ Definitions (verified against brute-force oracles in tests):
 """
 from __future__ import annotations
 
+import warnings
 import weakref
 from collections import OrderedDict
 
@@ -47,6 +48,17 @@ from .plan import FOUR_MOTIF_SHAPES, Pattern, TAILED_TRIANGLE, \
     THREE_CHAIN_INDUCED, TRIANGLE, TRIANGLE_NESTED, WavePlan, \
     clique_pattern, compile_pattern
 from .session import Miner
+
+def _deprecated(name: str) -> None:
+    """One-shot shim warning: every call on the legacy surface points at
+    the stable API (``repro.mining.Miner`` / ``MiningService``). Emitted
+    per call, not per import, so merely importing this module (the FSM
+    feed lives here) stays silent."""
+    warnings.warn(
+        f"repro.mining.apps.{name} is deprecated; hold a session instead: "
+        "repro.mining.Miner(g).count(...) (or MiningService for "
+        "concurrent traffic)", DeprecationWarning, stacklevel=3)
+
 
 # ---------------------------------------------------------------------------
 # the module-level session pool backing the deprecated one-shot surface
@@ -83,12 +95,14 @@ def shared_session(g: CSRGraph, chunk: int | None = None,
 def pattern_count(g: CSRGraph, pat: Pattern, chunk: int | None = None,
                   device_compact: bool = True) -> int:
     """Deprecated shim: ``Miner.count`` on the shared session."""
+    _deprecated("pattern_count")
     return shared_session(g, chunk, device_compact).count(pat)
 
 
 def pattern_embeddings(g: CSRGraph, pat: Pattern, chunk: int | None = None,
                        device_compact: bool = True) -> np.ndarray:
     """Deprecated shim: ``Miner.embeddings`` on the shared session."""
+    _deprecated("pattern_embeddings")
     return shared_session(g, chunk, device_compact).embeddings(pat)
 
 
@@ -99,6 +113,7 @@ def pattern_set_run(g: CSRGraph, plans: list[WavePlan] | PlanForest,
     ``PlanForest``) as one fused pass on the shared session. Results come
     back per plan, in order — ints for counting plans, (N, k) matrices for
     emit plans — bit-identical to independent ``Miner.count`` runs."""
+    _deprecated("pattern_set_run")
     miner = shared_session(g, chunk, device_compact)
     if isinstance(plans, PlanForest):
         return miner.runner.run_set(plans)
@@ -109,6 +124,7 @@ def pattern_set_count(g: CSRGraph, pats: list[Pattern],
                       chunk: int | None = None,
                       device_compact: bool = True) -> list[int]:
     """Deprecated shim: ``Miner.count_many`` on the shared session."""
+    _deprecated("pattern_set_count")
     return shared_session(g, chunk, device_compact).count_many(pats)
 
 
@@ -116,6 +132,7 @@ def triangle_count(g: CSRGraph, chunk: int | None = None,
                    device_compact: bool = True) -> int:
     """Symmetry-broken triangle counting: one bounded intersection per half
     edge (v0 > v1), bound v1 => each triangle v0 > v1 > v2 counted once."""
+    _deprecated("triangle_count")
     return shared_session(g, chunk, device_compact).count(TRIANGLE)
 
 
@@ -125,6 +142,7 @@ def triangle_count_nested(g: CSRGraph, chunk: int | None = None) -> int:
     The per-vertex nested instruction flattens to one unbounded intersection
     per *directed* edge — exactly the µop stream §IV-F's translator emits —
     and ``TRIANGLE_NESTED.div`` divides the automorphisms out at retire."""
+    _deprecated("triangle_count_nested")
     return shared_session(g, chunk).count(TRIANGLE_NESTED)
 
 
@@ -136,6 +154,7 @@ def three_chain_count(g: CSRGraph, induced: bool = False,
     stream engine is exercised by the induced variant).
     induced: the compiled SUB + lower-bound plan (b ∈ N(m), b ∉ N(a), b > a).
     """
+    _deprecated("three_chain_count")
     deg = np.asarray(g.degrees, dtype=np.int64)
     non_induced = int((deg * (deg - 1) // 2).sum())
     if not induced:
@@ -147,6 +166,7 @@ def tailed_triangle_count(g: CSRGraph, chunk: int | None = None) -> int:
     """Fig. 2b dataflow: per directed edge (v0,v1), BoundedIntersect(N0,N1,v0)
     yields the v2 < v0 candidates; the tail level folds into the closed-form
     deg(v1) - 2 multiplier at compile time."""
+    _deprecated("tailed_triangle_count")
     return shared_session(g, chunk).count(TAILED_TRIANGLE)
 
 
@@ -156,6 +176,7 @@ def three_motif(g: CSRGraph, fused: bool = True) -> dict[str, int]:
     ``fused`` routes both patterns through one session batch (a fused
     ``PlanForest``); ``fused=False`` keeps the independent per-plan path
     (the baseline the forest is benchmarked and property-tested against)."""
+    _deprecated("three_motif")
     if fused:
         t, chains = shared_session(g).count_many(
             [TRIANGLE, THREE_CHAIN_INDUCED])
@@ -172,6 +193,7 @@ def clique_count(g: CSRGraph, k: int, chunk: int | None = None,
     analysis), so the interpreter issues the exact executable sequence the
     old hand-coded engine did. ``device_compact=False`` routes the same plan
     through the host np.nonzero oracle."""
+    _deprecated("clique_count")
     if k < 3:
         raise ValueError("clique_count needs k >= 3")
     return shared_session(g, chunk, device_compact).count(clique_pattern(k))
@@ -186,6 +208,7 @@ def four_motif(g: CSRGraph, chunk: int | None = None,
     so the batch collapses to three shared level-2 expands over two
     edge-feed passes. ``fused=False`` runs the same auto-scheduled patterns
     independently — same counts, kept as the comparison baseline."""
+    _deprecated("four_motif")
     miner = shared_session(g, chunk)
     if fused:
         counts = miner.count_many(list(FOUR_MOTIF_SHAPES))
@@ -219,6 +242,7 @@ def triangle_list(g: CSRGraph, chunk: int | None = None) -> np.ndarray:
     triangle *emit* plan through the session: compaction happens on device
     via ``ops.xinter_compact``'s src output, and only the compacted
     embedding matrix crosses to the host."""
+    _deprecated("triangle_list")
     return fsm_pattern_feed(g, chunk)[0]
 
 

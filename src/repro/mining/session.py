@@ -39,20 +39,36 @@ worker its own session — per-worker warm-up, zero retraces after it.
 Executable-cache key
 --------------------
 
-``ExecutableCache`` keys are::
+This section is THE definition of the executable-cache key — every other
+docstring (``MinerConfig``, ``ExecutableCache``, ``mining.shard``) points
+here instead of restating it. ``ExecutableCache`` keys are::
 
     (mesh/shape signature) + (chunk, backend, device_compact, fused_level)
         + (kind, LevelOp, capacity signature, ...)
 
-The mesh/shape signature (platform + device count, plus the actual mesh
-axes for a sharded session — see below) isolates executables compiled for
-different device topologies; the runner-config segment isolates chunk
-shapes and kernel-path flags; the trailing segment is the runner's
-per-executable key (LevelOps hash by value, so structurally equal levels
-of different patterns share one trace). A cache *miss* is a retrace —
-``Miner.stats`` exposes hit/miss counters, and the session-reuse contract
-(tested in tests/test_session.py, gated in benchmarks/ci_gate.py) is that
-a repeated query produces **zero** new traces.
+segment by segment:
+
+* **mesh/shape signature** — ``mesh_signature(mesh)``: platform + device
+  count, extended with the actual mesh axes ``((name, size), ...)`` for a
+  sharded session (see the mesh contract below). Isolates executables
+  compiled for different device topologies; the sharded runner
+  additionally prefixes its per-executable keys with
+  ``("mesh", axis, shards)`` so sharded and unsharded traces can never
+  collide.
+* **runner config** — the ``MinerConfig`` execution knobs that change
+  compiled shapes or kernel paths: ``chunk``, ``backend``,
+  ``device_compact``, ``fused_level``. ``mesh``/``mesh_axis``/
+  ``feed_partition`` enter through the mesh segment and the feed
+  partitioner instead; ``telemetry`` is deliberately NOT part of any key
+  (tracing must never force a retrace — gated in ci_gate ``--telemetry``).
+* **per-executable key** — the runner's trailing segment:
+  ``(kind, LevelOp, capacity signature, ...)``. LevelOps hash by value,
+  so structurally equal levels of different patterns share one trace.
+
+A cache *miss* is a retrace — ``Miner.stats`` exposes hit/miss counters,
+and the session-reuse contract (tested in tests/test_session.py, gated in
+benchmarks/ci_gate.py) is that a repeated query produces **zero** new
+traces.
 
 Mesh contract (sharded sessions)
 --------------------------------
@@ -172,8 +188,15 @@ class ExecutableCache:
 
 @dataclasses.dataclass(frozen=True)
 class MinerConfig:
-    """Execution knobs for a session (fixed for its lifetime — they are
-    part of every executable's cache key)."""
+    """The ONE way to configure a session — every construction knob lives
+    here (``Miner(g, **kwargs)`` is sugar that builds/extends a config).
+
+    The execution knobs are fixed for the session's lifetime because they
+    are part of every executable's cache key — see the module docstring's
+    "Executable-cache key" section for the full key and which fields land
+    in which segment. ``telemetry`` is observability wiring, not an
+    execution knob: it is excluded from equality and never enters a cache
+    key (tracing must not retrace)."""
 
     chunk: int | None = None          # wave chunk; None = auto-sized
     backend: str = "auto"             # kernel backend (pallas/xla/auto)
@@ -182,6 +205,26 @@ class MinerConfig:
     mesh: int | None = None           # >1: shard over that many devices
     mesh_axis: str = "mine"           # mesh axis name (cache-key relevant)
     feed_partition: str = "round_robin"  # edge-feed dealing (shard.py)
+    # session observability (repro.obs); None = fresh disabled Telemetry
+    telemetry: Telemetry | None = dataclasses.field(
+        default=None, compare=False, repr=False)
+
+    @classmethod
+    def from_args(cls, args, **overrides) -> "MinerConfig":
+        """Build a config from a parsed launcher namespace
+        (``launch.cli`` flag names, shared by mine.py / serve.py):
+        ``--shards N`` → ``mesh`` (``N > 1``), ``--trace OUT`` → a
+        tracing-enabled ``Telemetry``. Missing attributes fall back to
+        the field defaults, so any ``argparse.Namespace`` that carries a
+        subset of the flags works. ``overrides`` win over flags."""
+        shards = int(getattr(args, "shards", 0) or 0)
+        cfg = cls(
+            chunk=getattr(args, "chunk", None),
+            mesh=shards if shards > 1 else None,
+            telemetry=Telemetry(
+                enabled=bool(getattr(args, "trace", ""))),
+        )
+        return dataclasses.replace(cfg, **overrides) if overrides else cfg
 
 
 class Miner:
@@ -198,6 +241,11 @@ class Miner:
 
     def __init__(self, graph: CSRGraph, config: MinerConfig | None = None,
                  telemetry: Telemetry | None = None, **overrides):
+        # every knob lives in MinerConfig; bare kwargs (including the
+        # historical ``telemetry=`` / ``mesh=`` arguments) are sugar that
+        # builds or extends one
+        if telemetry is not None:
+            overrides["telemetry"] = telemetry
         if config is None:
             config = MinerConfig(**overrides)
         elif overrides:
@@ -206,7 +254,8 @@ class Miner:
         # one Telemetry per session, shared with the runner: every counter
         # (session pipeline + runner dispatch/sync) lands in one registry
         # and every span of a traced query lands in one tracer
-        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self.telemetry = (config.telemetry if config.telemetry is not None
+                          else Telemetry())
         if config.mesh is not None and int(config.mesh) > 1:
             from repro.distributed.sharding import make_mining_mesh
             from .shard import ShardedWaveRunner

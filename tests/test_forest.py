@@ -22,7 +22,7 @@ from _hypothesis_compat import given, settings, st
 
 from repro.graph import build_csr
 from repro.graph.generators import clique_planted, erdos_renyi, powerlaw_cluster
-from repro.mining import apps, exhaustive, reference
+from repro.mining import exhaustive, reference
 from repro.mining.engine import WaveRunner
 from repro.mining.forest import build_forest
 from repro.mining import plan as P
@@ -177,12 +177,17 @@ def test_forest_tiny_chunks_agree():
         WaveRunner(g).run_set(forest)
 
 
-def test_apps_route_through_forest():
+def test_session_batches_route_through_forest():
+    from repro.mining.apps import shared_session
     g = GRAPHS["er"]
-    assert apps.four_motif(g) == apps.four_motif(g, fused=False)
-    assert apps.three_motif(g) == apps.three_motif(g, fused=False)
-    assert apps.three_motif(g) == reference.motif3(g)
-    counts = apps.pattern_set_count(g, [P.TRIANGLE, P.clique_pattern(4)])
+    m = shared_session(g)
+    motifs = list(P.FOUR_MOTIF_SHAPES)
+    # fused batch == the same queries run independently
+    assert m.count_many(motifs) == [m.count(q) for q in motifs]
+    t, chain = m.count_many(["triangle", "three-chain"])
+    assert [t, chain] == [m.count("triangle"), m.count("three-chain")]
+    assert {"triangle": t, "chain": chain} == reference.motif3(g)
+    counts = m.count_many([P.TRIANGLE, P.clique_pattern(4)])
     assert counts == [reference.triangle_count(g), reference.clique_count(g, 4)]
 
 
@@ -192,9 +197,10 @@ def test_apps_route_through_forest():
 
 
 def test_triangle_emit_through_forest_matches_host_oracle():
+    from repro.mining.apps import fsm_pattern_feed, triangle_list_host
     g = GRAPHS["plc"]
-    tris = apps.triangle_list(g)                 # forest-scheduled emit plan
-    host = apps.triangle_list_host(g)
+    tris = fsm_pattern_feed(g)[0]                # forest-scheduled emit plan
+    host = triangle_list_host(g)
     assert tris.shape == host.shape == (reference.triangle_count(g), 3)
 
     def key(t):

@@ -14,7 +14,8 @@ from _hypothesis_compat import given, settings, st
 
 from repro.graph import build_csr
 from repro.graph.generators import clique_planted, erdos_renyi, powerlaw_cluster
-from repro.mining import apps, reference
+from repro.mining import reference
+from repro.mining.apps import triangle_list_host
 from repro.mining.engine import WaveRunner
 from repro.mining.forest import build_forest
 from repro.mining import plan as P
@@ -92,7 +93,7 @@ def test_three_motif_and_fsm_feed_fused_on_off():
     emit = P.compile_pattern(P.TRIANGLE, emit=True)
     e_on, e_off, *_ = _runs(g, emit)
     np.testing.assert_array_equal(e_on, e_off)
-    np.testing.assert_array_equal(e_on, apps.triangle_list_host(g))
+    np.testing.assert_array_equal(e_on, triangle_list_host(g))
 
 
 def test_tiny_chunks_fused_on_off():

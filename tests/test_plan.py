@@ -20,7 +20,9 @@ from _hypothesis_compat import given, settings, st
 
 from repro.graph import build_csr
 from repro.graph.generators import clique_planted, erdos_renyi, powerlaw_cluster
-from repro.mining import apps, exhaustive, reference
+from repro.mining import exhaustive, reference
+from repro.mining.apps import fsm_pattern_feed, shared_session, \
+    triangle_list_host
 from repro.mining.engine import WaveRunner
 from repro.mining import plan as P
 
@@ -30,6 +32,11 @@ GRAPHS = {
     "cliq": build_csr(clique_planted(45, 120, (6, 5), seed=1), 45),
 }
 TINY = build_csr(erdos_renyi(18, 48, seed=7), 18)
+
+
+def _four_motif(g):
+    names = list(P.FOUR_MOTIF_SHAPES)
+    return dict(zip(names, shared_session(g).count_many(names)))
 
 
 # ---------------------------------------------------------------------------
@@ -100,12 +107,12 @@ def test_pattern_validation_errors():
 @pytest.mark.parametrize("name", list(GRAPHS))
 def test_four_motif_matches_bruteforce_census(name):
     g = GRAPHS[name]
-    assert apps.four_motif(g) == reference.four_motif_counts(g)
+    assert _four_motif(g) == reference.four_motif_counts(g)
 
 
 def test_four_motif_matches_exhaustive_esu():
     g = GRAPHS["plc"]
-    got = apps.four_motif(g)
+    got = _four_motif(g)
     for pat in ("diamond", "4-cycle", "4-path", "4-star"):
         assert got[pat] == exhaustive.exhaustive_count(g, pat)
     assert got["paw"] == exhaustive.exhaustive_count(g, "tailed-triangle")
@@ -115,8 +122,8 @@ def test_four_motif_matches_exhaustive_esu():
 def test_four_motif_device_host_compaction_agree(name):
     g = GRAPHS[name]
     for pat in P.FOUR_MOTIFS.values():
-        dev = apps.pattern_count(g, pat)
-        host = apps.pattern_count(g, pat, device_compact=False)
+        dev = shared_session(g).count(pat)
+        host = shared_session(g, device_compact=False).count(pat)
         assert dev == host, pat.name
 
 
@@ -129,7 +136,7 @@ def test_tail_count_sum_exact_past_int32():
     n = 450
     g = build_csr(np.array(list(itertools.combinations(range(n), 2))), n)
     want = (n - 3) * (n - 2) * n * (n - 1) // 2
-    assert apps.tailed_triangle_count(g, chunk=16384) == want
+    assert shared_session(g, chunk=16384).count("tailed-triangle") == want
 
 
 def test_pattern_oracle_consistent_with_references():
@@ -150,8 +157,8 @@ def test_pattern_oracle_consistent_with_references():
 @pytest.mark.parametrize("name", list(GRAPHS))
 def test_triangle_list_device_matches_host_oracle(name):
     g = GRAPHS[name]
-    dev = apps.triangle_list(g)
-    host = apps.triangle_list_host(g)
+    dev = fsm_pattern_feed(g)[0]
+    host = triangle_list_host(g)
     assert dev.shape == host.shape == (reference.triangle_count(g), 3)
     # same triangles (chunk orders differ): compare as sorted row sets
     def key(t):
@@ -203,8 +210,8 @@ def test_random_plans_agree_with_oracle_both_modes(data):
     pat = _draw_pattern(data)
     g = TINY
     want = reference.pattern_count_oracle(g, pat)
-    dev = apps.pattern_count(g, pat)
-    host = apps.pattern_count(g, pat, device_compact=False)
+    dev = shared_session(g).count(pat)
+    host = shared_session(g, device_compact=False).count(pat)
     assert dev == host == want, (pat, dev, host, want)
 
 
@@ -215,7 +222,7 @@ def test_random_plans_tiny_chunks_agree(data):
     pat = _draw_pattern(data)
     g = TINY
     want = reference.pattern_count_oracle(g, pat)
-    assert apps.pattern_count(g, pat, chunk=128) == want, pat
+    assert shared_session(g, chunk=128).count(pat) == want, pat
 
 
 def _seeded_pattern(seed: int) -> P.Pattern:
@@ -256,6 +263,6 @@ def test_seeded_random_plans_agree_with_oracle(seed):
     pat = _seeded_pattern(seed)
     g = TINY
     want = reference.pattern_count_oracle(g, pat)
-    dev = apps.pattern_count(g, pat)
-    host = apps.pattern_count(g, pat, device_compact=False)
+    dev = shared_session(g).count(pat)
+    host = shared_session(g, device_compact=False).count(pat)
     assert dev == host == want, (pat, dev, host, want)

@@ -1,0 +1,227 @@
+"""MiningService: the concurrent query service over a pool of sessions.
+
+The service contracts from the api_redesign:
+  * **cross-request batching** — heterogeneous requests submitted before
+    one tick are merged into a single ``PlanForest`` schedule per traffic
+    class: results are bit-identical to independent ``Miner`` runs and
+    the fused feed passes are strictly below the sum of the requests'
+    independent schedules;
+  * **result cache** — repeated queries complete from cache without
+    executing, and a ``set_graph`` version bump invalidates every entry;
+  * **admission control** — a full queue rejects with the typed error at
+    submit time, an expired deadline completes the request with the typed
+    timeout;
+  * **steady state** — under threaded concurrent submission, a warmed
+    service rebuilds zero executables;
+  * **mixed pool** — sharded and unsharded workers coexist in one pool
+    and agree on counts (mesh leg, needs 8 devices);
+  * **stable surface** — ``repro.mining`` exports the supported API and
+    the legacy ``apps`` one-shots warn ``DeprecationWarning`` per call.
+"""
+import threading
+import time
+import warnings
+
+import jax
+import pytest
+
+from repro.graph import build_csr
+from repro.graph.generators import erdos_renyi, powerlaw_cluster
+from repro.mining import Miner, MinerConfig
+from repro.serving import MiningService, RequestRejected, RequestTimeout, \
+    ServiceConfig, WorkerSpec
+
+needs8 = pytest.mark.skipif(jax.device_count() < 8,
+                            reason="needs 8 devices (XLA_FLAGS="
+                            "--xla_force_host_platform_device_count=8)")
+
+G = build_csr(erdos_renyi(60, 240, seed=3), 60)
+G2 = build_csr(powerlaw_cluster(50, 4, seed=5), 50)
+
+MIXES = [("triangle",), ("three-chain",), ("tailed-triangle",),
+         ("4-clique",), ("paw", "diamond", "4-cycle")]
+
+
+# ---------------------------------------------------------------------------
+# cross-request batching: merged schedule, bit-identical results
+# ---------------------------------------------------------------------------
+
+
+def test_tick_merges_requests_bit_identical():
+    svc = MiningService(G, cache_results=False)
+    handles = [svc.submit(qs) for qs in MIXES]
+    tick = svc.tick()
+    assert tick["requests"] == len(MIXES)
+    assert tick["executed"] == len(MIXES)
+    fp = tick["feed_passes"]
+    # the sharing acceptance: merging beats per-request schedules
+    assert fp["fused"] < fp["independent"]
+    ref = Miner(G)
+    for h, qs in zip(handles, MIXES):
+        assert h.done and not h.from_cache
+        assert h.result() == ref.count_many(list(qs))
+
+
+def test_single_query_convenience():
+    svc = MiningService(G)
+    assert svc.query("triangle") == Miner(G).count("triangle")
+
+
+def test_tick_on_empty_queue_is_noop():
+    svc = MiningService(G)
+    tick = svc.tick()
+    assert tick["requests"] == 0 and tick["executed"] == 0
+
+
+# ---------------------------------------------------------------------------
+# result cache: hits, and invalidation on graph-version bump
+# ---------------------------------------------------------------------------
+
+
+def test_cache_hit_and_version_invalidation():
+    svc = MiningService(G, cache_results=True)
+    first = svc.query(("triangle", "paw"))
+    warm = svc.cache.snapshot()
+    assert warm["hits"] == 0 and warm["misses"] == 2
+
+    h = svc.submit(("triangle", "paw"))
+    tick = svc.tick()
+    assert tick["executed"] == 0            # fully served from cache
+    assert h.from_cache and h.result() == first
+    assert svc.cache.snapshot()["hits"] == 2
+
+    svc.set_graph(G2)                       # version bump: all entries stale
+    snap = svc.cache.snapshot()
+    assert snap["entries"] == 0 and snap["invalidations"] == warm["entries"]
+    assert svc.query("triangle") == Miner(G2).count("triangle")
+
+
+def test_partial_cache_hit_shrinks_batch():
+    svc = MiningService(G, cache_results=True)
+    svc.query(("triangle",))
+    h = svc.submit(("triangle", "4-cycle"))   # one cached, one not
+    before = svc.cache.snapshot()["hits"]
+    svc.tick()
+    ref = Miner(G)
+    assert h.result() == [ref.count("triangle"), ref.count("4-cycle")]
+    assert svc.cache.snapshot()["hits"] == before + 1
+
+
+# ---------------------------------------------------------------------------
+# admission control: queue-full rejection, deadline timeout
+# ---------------------------------------------------------------------------
+
+
+def test_queue_full_rejects_at_submit():
+    svc = MiningService(G, max_in_flight=1)
+    admitted = svc.submit(("triangle",))
+    rejected = svc.submit(("paw",))
+    assert rejected.done                    # completed immediately, no wait
+    with pytest.raises(RequestRejected):
+        rejected.result()
+    assert svc.stats["service_rejected"] == 1
+    svc.run_until_idle()                    # the admitted one still serves
+    assert admitted.result() == [Miner(G).count("triangle")]
+
+
+def test_deadline_timeout_completes_with_typed_error():
+    svc = MiningService(G, timeout_s=0.01)
+    h = svc.submit(("triangle",))
+    time.sleep(0.05)                        # deadline passes before the tick
+    tick = svc.tick()
+    assert tick["timeouts"] == 1 and tick["executed"] == 0
+    assert h.done
+    with pytest.raises(RequestTimeout):
+        h.result()
+    # a fresh submit with a roomy per-request deadline still serves
+    assert svc.submit(("triangle",), timeout_s=60.0).result is not None
+    svc.run_until_idle()
+
+
+# ---------------------------------------------------------------------------
+# steady state: zero retraces under threaded concurrent load
+# ---------------------------------------------------------------------------
+
+
+def test_steady_state_zero_retraces_under_concurrent_load():
+    svc = MiningService(G, cache_results=False)
+    [svc.submit(qs) for qs in MIXES]
+    svc.run_until_idle()                    # warm-up: schedules + traces
+    before = svc.stats["retraces"]
+
+    results: list = []
+
+    def client(i):
+        h = svc.submit(MIXES[i % len(MIXES)])
+        results.append((i, h.result(timeout=60.0)))
+
+    threads = [threading.Thread(target=client, args=(i,)) for i in range(10)]
+    for t in threads:
+        t.start()
+    while svc.pending or any(t.is_alive() for t in threads):
+        if not svc.tick()["requests"]:
+            time.sleep(0.001)
+    for t in threads:
+        t.join()
+    assert len(results) == 10
+    ref = Miner(G)
+    for i, res in results:
+        assert res == ref.count_many(list(MIXES[i % len(MIXES)]))
+    assert svc.stats["retraces"] == before  # steady state: 0 new traces
+
+
+# ---------------------------------------------------------------------------
+# mixed sharded/unsharded worker pool (mesh leg)
+# ---------------------------------------------------------------------------
+
+
+@needs8
+def test_mixed_pool_routes_by_class_and_counts_agree():
+    svc = MiningService(G, workers=(
+        WorkerSpec("default", MinerConfig()),
+        WorkerSpec("bulk", MinerConfig(mesh=8))))
+    assert svc.pool.worker("bulk").mesh is not None
+    assert svc.pool.worker("default").mesh is None
+    a = svc.submit(("triangle", "paw"))
+    b = svc.submit(("triangle", "paw"), traffic_class="bulk")
+    svc.tick()
+    assert a.result() == b.result() == Miner(G).count_many(
+        ["triangle", "paw"])
+    # unknown class falls back to the first worker instead of failing
+    c = svc.submit(("triangle",), traffic_class="nope")
+    svc.run_until_idle()
+    assert c.result() == [Miner(G).count("triangle")]
+
+
+# ---------------------------------------------------------------------------
+# stable public surface + deprecated shims
+# ---------------------------------------------------------------------------
+
+
+def test_public_surface_exports():
+    import repro.mining as mining
+    for name in ("Miner", "MinerConfig", "MiningService", "Pattern",
+                 "Motif", "compile_pattern"):
+        assert name in mining.__all__
+        assert getattr(mining, name) is not None
+    assert mining.MiningService is MiningService
+
+
+def test_service_config_sugar_matches_explicit_config():
+    explicit = MiningService(G, ServiceConfig(max_in_flight=2))
+    sugar = MiningService(G, max_in_flight=2)
+    assert explicit.config == sugar.config
+
+
+def test_apps_one_shots_warn_deprecation():
+    from repro.mining import apps
+    with pytest.warns(DeprecationWarning, match="triangle_count is "
+                      "deprecated"):
+        n = apps.triangle_count(G)
+    assert n == Miner(G).count("triangle")
+    with pytest.warns(DeprecationWarning, match="four_motif"):
+        apps.four_motif(G)
+    # the session pool itself is supported API: no warning
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        assert apps.shared_session(G).count("triangle") == n

@@ -14,7 +14,7 @@ from repro.core.stream import SENTINEL, round_capacity
 from repro.graph import build_csr
 from repro.graph.generators import clique_planted, erdos_renyi, powerlaw_cluster
 from repro.kernels.ops import xinter_compact
-from repro.mining import apps, reference
+from repro.mining import reference
 from repro.mining.engine import WaveRunner, compact
 
 RNG = np.random.default_rng(11)
@@ -137,18 +137,23 @@ def test_clique_waves_identical_with_tiny_chunks(name):
 
 def test_all_seven_apps_agree_with_reference():
     """The seven mining apps on the device-resident runner vs reference."""
+    from repro.mining.apps import shared_session
+    from repro.mining.plan import clique_pattern
     g = GRAPHS["er"]
-    assert apps.triangle_count(g) == reference.triangle_count(g)
-    assert apps.triangle_count_nested(g) == reference.triangle_count(g)
-    assert apps.three_chain_count(g) == reference.three_chain_count(g)
-    assert (apps.three_chain_count(g, induced=True)
+    m = shared_session(g)
+    assert m.count("triangle") == reference.triangle_count(g)
+    assert m.count("triangle-nested") == reference.triangle_count(g)
+    deg = np.asarray(g.degrees, dtype=np.int64)
+    assert int((deg * (deg - 1) // 2).sum()) == reference.three_chain_count(g)
+    assert (m.count("three-chain")
             == reference.three_chain_count(g, induced=True))
-    assert apps.tailed_triangle_count(g) == reference.tailed_triangle_count(g)
-    assert apps.three_motif(g) == reference.motif3(g)
+    assert m.count("tailed-triangle") == reference.tailed_triangle_count(g)
+    t, chain = m.count_many(["triangle", "three-chain"])
+    assert {"triangle": t, "chain": chain} == reference.motif3(g)
     for k in (4, 5):
-        assert apps.clique_count(g, k) == reference.clique_count(g, k)
-        assert (apps.clique_count(g, k, device_compact=False)
-                == reference.clique_count(g, k))
+        assert m.count(clique_pattern(k)) == reference.clique_count(g, k)
+        assert (shared_session(g, device_compact=False)
+                .count(clique_pattern(k)) == reference.clique_count(g, k))
 
 
 def test_executable_cache_reuses_across_levels_and_graphs():
