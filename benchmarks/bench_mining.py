@@ -271,6 +271,79 @@ def session_serving_report(g) -> dict:
     }
 
 
+def svpu_report(g) -> dict:
+    """SVPU value plane: weighted aggregates vs their unweighted twins.
+
+    One session on the weight-attached graph runs {T, 4C} as counts and
+    as SUM aggregates, fully warmed, and reports per-pass kernel
+    dispatches / feed chunks for both paths — the zero-overhead contract
+    is that the value lanes RIDE the membership dispatches
+    (``dispatch_parity_ok`` / ``feed_parity_ok``), weighted wall clock
+    stays within a small ratio of unweighted (``weighted_overhead``) and
+    the second pass retraces nothing. ``oracle_check`` cross-checks
+    sum/max/min against the host-float64 permutation oracle on a tiny
+    fixed graph — exact equality, the dyadic-weight guarantee."""
+    from repro.graph import build_csr, edge_weights, with_edge_values
+    from repro.graph.csr import edge_list
+    from repro.graph.generators import erdos_renyi
+    from repro.mining import reference
+    from repro.mining.plan import TRIANGLE, clique_pattern
+    from repro.mining.session import Miner
+
+    gw = with_edge_values(g, edge_weights(edge_list(g), seed=0))
+    m = Miner(gw)
+    queries = [("T", "triangle"), ("4C", "4-clique")]
+    for _, q in queries:                     # warm both paths: traces, plans
+        m.count(q)
+        m.aggregate(q, op="sum")
+    warm_retraces = m.stats["retraces"]
+    lanes0 = m.runner.metrics.value("value_lane_dispatches")
+    out: dict = {"queries": {}}
+    for app, q in queries:
+        row: dict = {}
+        for mode, fn in (("count", lambda q=q: m.count(q)),
+                         ("aggregate", lambda q=q: m.aggregate(q, op="sum"))):
+            rs = m.runner.stats
+            d0 = rs["level_kernel_dispatches"]
+            f0 = m.runner.metrics.value("feed_chunks")
+            res, dt = _stopwatch(f"svpu:{app}:{mode}", fn)
+            row[mode] = {
+                "result": res, "seconds": round(dt, 4),
+                "dispatches": rs["level_kernel_dispatches"] - d0,
+                "feed_chunks": m.runner.metrics.value("feed_chunks") - f0,
+            }
+        row["dispatch_parity_ok"] = (row["aggregate"]["dispatches"]
+                                     == row["count"]["dispatches"])
+        row["feed_parity_ok"] = (row["aggregate"]["feed_chunks"]
+                                 == row["count"]["feed_chunks"])
+        row["weighted_overhead"] = round(
+            row["aggregate"]["seconds"]
+            / max(row["count"]["seconds"], 1e-9), 3)
+        out["queries"][app] = row
+    out["retraces_second_pass"] = m.stats["retraces"] - warm_retraces
+    out["value_lane_dispatches"] = (
+        m.runner.metrics.value("value_lane_dispatches") - lanes0)
+    out["weighted_overhead"] = round(
+        sum(r["aggregate"]["seconds"] for r in out["queries"].values())
+        / max(sum(r["count"]["seconds"] for r in out["queries"].values()),
+              1e-9), 3)
+
+    tg = build_csr(erdos_renyi(22, 80, seed=5), 22)
+    tgw = with_edge_values(tg, edge_weights(edge_list(tg), seed=3))
+    mt = Miner(tgw)
+    checks: dict = {}
+    exact = True
+    for name, pat in (("triangle", TRIANGLE), ("4-clique", clique_pattern(4))):
+        checks[name] = {}
+        for op in ("sum", "max", "min"):
+            got = mt.aggregate(pat, op=op)
+            checks[name][op] = got
+            exact = exact and (
+                got == reference.weighted_pattern_oracle(tgw, pat, op))
+    out["oracle_check"] = {"values": checks, "exact_match": exact}
+    return out
+
+
 def sharded_scaling_report(g, shard_counts=(1, 2, 4, 8)) -> dict:
     """Mesh-sharded session vs single device: the full app mix {T, TC, TT,
     4C, fused 4M} on 1/2/4/8(-fake-CPU)-device meshes from one ``Miner``
@@ -478,6 +551,22 @@ def run(quick: bool = True):
                       f"{_jax.device_count()} device(s) visible — set "
                       "XLA_FLAGS=--xla_force_host_platform_device_count=8 "
                       "for the full scaling sweep", flush=True)
+        sv = svpu_report(g)
+        qT, q4 = sv["queries"]["T"], sv["queries"]["4C"]
+        print(f"[mining] {name:14s} SVPU weighted: overhead "
+              f"T {qT['weighted_overhead']}x / 4C {q4['weighted_overhead']}x"
+              f" | dispatch parity "
+              + ("OK" if qT["dispatch_parity_ok"] and q4["dispatch_parity_ok"]
+                 else "FAIL")
+              + f" | oracle "
+              + ("exact" if sv["oracle_check"]["exact_match"] else "MISMATCH")
+              + f" | retraces {sv['retraces_second_pass']}", flush=True)
+        rows.append(dict(dataset=name, app="SVPU", **{
+            "weighted_overhead": sv["weighted_overhead"],
+            "dispatch_parity_ok": qT["dispatch_parity_ok"]
+            and q4["dispatch_parity_ok"],
+            "oracle_exact": sv["oracle_check"]["exact_match"],
+            "retraces_second_pass": sv["retraces_second_pass"]}))
         ff = forest_fusion_report(g)
         print(f"[mining] {name:14s} 4M forest fusion: "
               f"fused {ff['fused_s']:.3f}s vs independent "

@@ -34,6 +34,13 @@ bit-for-bit on the full app mix, tracing on must change nothing (zero
 extra dispatches), and span counts per category are recorded as schedule
 facts. The traced span timings land in the output JSON (artifact) under
 ``telemetry_spans`` but are never baselined — they are wall clock.
+
+``--values`` adds the SVPU value-plane section: weighted sum/max/min
+aggregates must equal the host-float64 permutation oracle EXACTLY (dyadic
+weights make every aggregate representable in f32), the weighted query's
+kernel-dispatch and feed-chunk counters must equal the unweighted twin's
+(value lanes ride, never add), repeats retrace nothing, and the
+weighted-vs-unweighted wall-clock ratio is tolerance-gated.
 """
 from __future__ import annotations
 
@@ -51,6 +58,7 @@ from benchmarks.bench_mining import (fused_level_report,   # noqa: E402
                                      plan_overhead_report,
                                      session_serving_report,
                                      sharded_scaling_report,
+                                     svpu_report,
                                      wave_throughput_report)
 
 # exact app counts: small + cheap (deterministic synthetic graphs)
@@ -69,6 +77,10 @@ TELEMETRY_SET = ("email-eu-core", 0.25)
 # feed-pass sharing, steady/load retraces, result-cache counters (exact)
 # plus the qps/p99 ratios vs a sequential session (tolerance-gated)
 SERVING_SET = ("email-eu-core", 0.25)
+# values leg (--values): SVPU weighted aggregates — exact oracle equality,
+# dispatch/feed parity vs the unweighted twin, zero repeat retraces (exact)
+# plus the weighted-overhead wall-clock ratio (tolerance-gated)
+VALUES_SET = ("email-eu-core", 0.25)
 # wall-clock ratios + structural counters: dense enough that the timed
 # region is hundreds of ms, not noise (see stability note in tolerances)
 PERF_SET = ("email-eu-core", 1.0)
@@ -76,7 +88,7 @@ PERF_SET = ("email-eu-core", 1.0)
 # optional gate sections: each key prefix only exists in a run that passed
 # the matching flag; compare()/--update-baseline treat absent sections as
 # "not run this leg", never as regressions
-SECTION_PREFIXES = ("sharded.", "telemetry.", "serving.")
+SECTION_PREFIXES = ("sharded.", "telemetry.", "serving.", "values.")
 
 # ratio tolerances (fractional, see module docstring) — generous because CI
 # wall clock is shared-runner noisy; the exact counters carry the precise
@@ -91,6 +103,10 @@ DEFAULT_TOLERANCES = {
     # noisiest gated ratios (p50 is artifact-only for the same reason)
     "qps_vs_sequential": 0.6,
     "p99_vs_sequential": 2.0,
+    # weighted vs unweighted wall clock: both sides are warmed identical
+    # dispatch sequences, but the value lanes add per-dispatch work inside
+    # the kernel, so gate only order-of-magnitude slumps
+    "weighted_overhead": 0.8,
 }
 DIRECTIONS = {
     "plan_overhead_4C": "lower_better",
@@ -100,6 +116,7 @@ DIRECTIONS = {
     "wave_speedup": "higher_better",
     "qps_vs_sequential": "higher_better",
     "p99_vs_sequential": "lower_better",
+    "weighted_overhead": "lower_better",
 }
 
 
@@ -294,8 +311,56 @@ def measure_serving(exact: dict, ratios: dict, sharded: bool = False,
             "p50_vs_sequential": ld["p50_vs_sequential"]}
 
 
+def measure_values(exact: dict, ratios: dict) -> None:
+    """SVPU value-plane gate section (``--values``): every key but the
+    overhead ratio is an exact fact.
+
+    * weighted aggregates on the gate set AND the tiny-oracle graph —
+      dyadic weights make sum/max/min exactly representable in f32, so
+      the values baseline bit-for-bit and ``oracle_exact`` asserts
+      engine == host-float64 permutation oracle;
+    * dispatch/feed parity — the weighted query's per-pass
+      ``level_kernel_dispatches`` and ``feed_chunks`` equal the
+      unweighted twin's: value lanes ride existing membership dispatches
+      and add ZERO feed passes;
+    * retraces — a repeated weighted query builds 0 new executables;
+    * ``weighted_overhead`` — warmed weighted/unweighted wall-clock
+      ratio, tolerance-gated.
+    """
+    from repro.graph import get_dataset
+
+    name, scale = VALUES_SET
+    g = get_dataset(name, scale=scale)
+    tag = f"{name}@{scale}"
+    print(f"[gate] {tag}: SVPU value plane ...", flush=True)
+    sv = svpu_report(g)
+    for app in ("T", "4C"):
+        row = sv["queries"][app]
+        exact[f"values.{tag}.{app}.aggregate"] = row["aggregate"]["result"]
+        exact[f"values.{tag}.{app}.count"] = row["count"]["result"]
+        exact[f"values.{tag}.{app}.dispatches"] = [
+            row["count"]["dispatches"], row["aggregate"]["dispatches"]]
+        exact[f"values.{tag}.{app}.feed_chunks"] = [
+            row["count"]["feed_chunks"], row["aggregate"]["feed_chunks"]]
+        exact[f"values.{tag}.{app}.dispatch_parity_ok"] = \
+            bool(row["dispatch_parity_ok"] and row["feed_parity_ok"])
+    exact[f"values.{tag}.retraces_second_pass"] = sv["retraces_second_pass"]
+    exact[f"values.{tag}.value_lane_dispatches"] = \
+        sv["value_lane_dispatches"]
+    exact[f"values.{tag}.oracle_exact"] = \
+        bool(sv["oracle_check"]["exact_match"])
+    exact[f"values.{tag}.oracle_values"] = sv["oracle_check"]["values"]
+    ratios[f"values.{tag}.weighted_overhead"] = sv["weighted_overhead"]
+    print(f"[gate] values: oracle exact {sv['oracle_check']['exact_match']}"
+          f", dispatch parity "
+          f"{[sv['queries'][a]['dispatch_parity_ok'] for a in ('T', '4C')]}"
+          f", overhead x{sv['weighted_overhead']}, retraces "
+          f"{sv['retraces_second_pass']}", flush=True)
+
+
 def measure(sharded: bool = False, telemetry: bool = False,
-            serving: bool = False, serving_trace: str = "") -> dict:
+            serving: bool = False, serving_trace: str = "",
+            values: bool = False) -> dict:
     from repro.graph import get_dataset
     from repro.mining import Miner
     from repro.mining.plan import FOUR_MOTIF_SHAPES
@@ -358,6 +423,8 @@ def measure(sharded: bool = False, telemetry: bool = False,
 
     if sharded:
         measure_sharded(exact)
+    if values:
+        measure_values(exact, ratios)
     out = {
         "meta": {
             "python": platform.python_version(),
@@ -485,6 +552,12 @@ def main(argv=None) -> int:
                          "and cache counters (exact) + qps/p99 vs a "
                          "sequential session (ratios); writes the loaded "
                          "service's Perfetto trace next to --out")
+    ap.add_argument("--values", action="store_true",
+                    help="also run the SVPU value-plane section: weighted "
+                         "sum/max/min aggregates vs the host-f64 oracle "
+                         "(exact), dispatch/feed parity vs the unweighted "
+                         "twin, zero repeat retraces + the weighted-"
+                         "overhead wall-clock ratio")
     args = ap.parse_args(argv)
 
     serving_trace = ""
@@ -492,7 +565,8 @@ def main(argv=None) -> int:
         serving_trace = str(Path(args.out).with_name(
             Path(args.out).stem + "_serving_trace.json"))
     got = measure(sharded=args.sharded, telemetry=args.telemetry,
-                  serving=args.serving, serving_trace=serving_trace)
+                  serving=args.serving, serving_trace=serving_trace,
+                  values=args.values)
     Path(args.out).write_text(json.dumps(got, indent=2, sort_keys=True))
     print(f"[gate] wrote {args.out}")
 

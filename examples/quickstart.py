@@ -50,6 +50,24 @@ m.count("triangle")
 m.count_many(names)
 print("retraces on repeat :", m.stats["retraces"] - before)
 
+# --- weighted mining: the SVPU value plane (paper §IV-E) ------------------
+# attach one f32 weight per edge (aligned with the CSR keys, staged once
+# per session) and the same fused plans aggregate embedding weights —
+# SUM/MAX/MIN of the per-embedding products of pattern-edge weights — at
+# the unweighted query's dispatch cost: value lanes ride the membership
+# kernels, never add feed passes, and repeat with 0 retraces.
+from repro.graph import edge_weights, with_edge_values
+from repro.graph.csr import edge_list
+
+gw = with_edge_values(g, edge_weights(edge_list(g), seed=1))
+mw = Miner(gw)
+print("weighted triangles :", mw.aggregate("triangle", op="sum"))
+print("heaviest triangle  :", mw.aggregate("triangle", op="max"))
+print("weighted (batched) :", mw.aggregate_many(["triangle", "4-clique"]))
+before = mw.stats["retraces"]
+mw.aggregate("triangle", op="sum")
+print("retraces on repeat :", mw.stats["retraces"] - before)
+
 # --- observability: trace a query, see where its time went ----------------
 # a Telemetry(enabled=True) session records a span tree per query (query ->
 # compile/schedule/execute -> per-level -> per-dispatch, perf_counter wall

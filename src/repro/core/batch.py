@@ -185,6 +185,46 @@ def batch_level_compact(rows_a, bs, pol, bounds, lbounds, excludes,
     return batch_compact_scan(rows_a, keep, out_cap, out_items)
 
 
+def _row_matched_vals(a_row, b_row, bv_row):
+    """Per A-slot matched value in (B_r, V_r): bv at the matching key, 0.0
+    on a miss — the searchsorted twin of the Pallas mask-MAC lane."""
+    idx = jnp.clip(jnp.searchsorted(b_row, a_row), 0, b_row.shape[0] - 1)
+    found = (b_row[idx] == a_row) & (a_row != SENTINEL)
+    return jnp.where(found, bv_row[idx], 0.0)
+
+
+_matched_vals = jax.vmap(_row_matched_vals)
+
+
+@partial(jax.jit, static_argnames=("pol", "op"))
+def batch_level_agg(rows_a, bs, pol, a_vals, b_vals, scale, op: str = "sum",
+                    bounds=None, lbounds=None, excludes=None):
+    """XLA twin of ``intersect_multi_agg_pallas`` -> (counts, vals).
+
+    Same keep mask as ``batch_level_count``; each kept slot carries
+    ``a_vals * Π_{INTER r} matched_val_r * scale[row]`` and ``vals`` reduces
+    the kept slots per row with ``op`` (sum / max / min; op identity — 0.0 /
+    -3.4e38 / +3.4e38 — for empty rows, same contract as the kernel)."""
+    ub, lb = _bounds(rows_a, bounds), _lbounds(rows_a, lbounds)
+    keep = _level_keep(rows_a, bs, pol, ub, lb, excludes)
+    contrib = a_vals.astype(jnp.float32)
+    for r, p in enumerate(pol):
+        if p:
+            contrib = contrib * _matched_vals(rows_a, bs[r], b_vals[r])
+    contrib = contrib * jnp.asarray(scale, jnp.float32)[:, None]
+    counts = jnp.sum(keep, axis=1, dtype=jnp.int32)
+    if op == "sum":
+        vals = jnp.sum(jnp.where(keep, contrib, 0.0), axis=1,
+                       dtype=jnp.float32)
+    elif op == "max":
+        vals = jnp.max(jnp.where(keep, contrib, -3.4e38), axis=1)
+    elif op == "min":
+        vals = jnp.min(jnp.where(keep, contrib, 3.4e38), axis=1)
+    else:
+        raise ValueError(f"unknown SVPU aggregate {op!r}")
+    return counts, vals
+
+
 @jax.jit
 def batch_inter_count(rows_a: jax.Array, rows_b: jax.Array, bounds=None,
                       lbounds=None) -> jax.Array:

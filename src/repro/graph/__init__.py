@@ -1,8 +1,10 @@
-from .csr import CSRGraph, build_csr, neighbors_stream, padded_rows, degree_buckets
-from .generators import erdos_renyi, powerlaw_cluster, rmat
+from .csr import (CSRGraph, build_csr, degree_buckets, neighbors_stream,
+                  padded_rows, padded_value_rows, with_edge_values)
+from .generators import edge_weights, erdos_renyi, powerlaw_cluster, rmat
 from .datasets import get_dataset, DATASETS
 
 __all__ = [
     "CSRGraph", "build_csr", "neighbors_stream", "padded_rows", "degree_buckets",
+    "padded_value_rows", "with_edge_values", "edge_weights",
     "erdos_renyi", "powerlaw_cluster", "rmat", "get_dataset", "DATASETS",
 ]

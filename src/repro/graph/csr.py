@@ -13,6 +13,15 @@ TPU adaptations:
   * ``degree_buckets`` groups vertices by padded-degree capacity so batched
     kernels waste bounded work on padding (the S_NESTINTER translation buffer
     becomes a static schedule over buckets — see core/nested.py).
+
+Value plane (the paper's SVPU, §IV-E): ``edge_values`` is an optional f32
+array aligned index-for-index with ``indices`` — entry i is the weight of
+the directed edge whose destination is ``indices[i]``. ``build_csr``
+threads caller weights through the exact same self-loop-drop / mirror /
+dedup / lexsort permutation the keys take, so a (key, value) pair never
+separates; ``padded_value_rows`` is the value twin of ``padded_rows``
+(0.0 where keys are SENTINEL). Weighted graphs are staged once per
+session like keys — the value plane adds no per-query uploads.
 """
 from __future__ import annotations
 
@@ -34,6 +43,8 @@ class CSRGraph:
     indices: jax.Array   # (E_pad,) int32, sentinel-padded to LANE multiple
     offsets: jax.Array   # (V,)   int32: first idx in N(v) with neighbor > v
     degrees: jax.Array   # (V,)   int32
+    # optional value plane: (E_pad,) f32 aligned with ``indices`` (0.0 pad)
+    edge_values: jax.Array | None = None
     num_vertices: int = dataclasses.field(metadata=dict(static=True), default=0)
     num_edges: int = dataclasses.field(metadata=dict(static=True), default=0)
     max_degree: int = dataclasses.field(metadata=dict(static=True), default=0)
@@ -42,27 +53,51 @@ class CSRGraph:
     def padded_max_degree(self) -> int:
         return round_capacity(self.max_degree)
 
+    @property
+    def weighted(self) -> bool:
+        return self.edge_values is not None
+
 
 def build_csr(edges: np.ndarray, num_vertices: int | None = None,
-              undirected: bool = True) -> CSRGraph:
+              undirected: bool = True,
+              edge_values: np.ndarray | None = None) -> CSRGraph:
     """Build a CSRGraph from an (M, 2) int edge array (host side).
 
     Self-loops and duplicate edges are removed; for ``undirected`` graphs both
     directions are materialised (the paper's datasets are undirected simple
     graphs for mining purposes).
+
+    ``edge_values`` (optional, (M,) float) rides the exact same permutation
+    the keys take — self-loop drop, mirroring (both directions inherit the
+    undirected weight), dedup and the final lexsort — so value i always
+    belongs to the directed edge ``edges[i]`` of the finished CSR.
     """
     edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    values = None
+    if edge_values is not None:
+        values = np.asarray(edge_values, dtype=np.float32).reshape(-1)
+        if values.shape[0] != edges.shape[0]:
+            raise ValueError(
+                f"edge_values has {values.shape[0]} entries for "
+                f"{edges.shape[0]} edges")
     if num_vertices is None:
         num_vertices = int(edges.max()) + 1 if edges.size else 0
-    edges = edges[edges[:, 0] != edges[:, 1]]                  # drop self loops
+    keep = edges[:, 0] != edges[:, 1]                          # drop self loops
+    edges = edges[keep]
+    if values is not None:
+        values = values[keep]
     if undirected:
         edges = np.concatenate([edges, edges[:, ::-1]], axis=0)
+        if values is not None:
+            values = np.concatenate([values, values], axis=0)
     # dedup
     key = edges[:, 0] * np.int64(num_vertices) + edges[:, 1]
     _, uniq = np.unique(key, return_index=True)
     edges = edges[uniq]
     order = np.lexsort((edges[:, 1], edges[:, 0]))
     edges = edges[order]
+    if values is not None:
+        values = values[uniq][order]
 
     src, dst = edges[:, 0], edges[:, 1]
     degrees = np.bincount(src, minlength=num_vertices).astype(np.int32)
@@ -73,6 +108,10 @@ def build_csr(edges: np.ndarray, num_vertices: int | None = None,
     e_pad = round_capacity(num_edges + 1)  # +1: a window starting at E stays in-bounds
     indices = np.full(e_pad, SENTINEL, dtype=np.int32)
     indices[:num_edges] = dst.astype(np.int32)
+    vals_pad = None
+    if values is not None:
+        vals_pad = np.zeros(e_pad, dtype=np.float32)
+        vals_pad[:num_edges] = values
 
     # CSR offset register: first index in N(v) strictly greater than v.
     # With no self-loops this equals |{w in N(v): w < v}| — one bincount.
@@ -82,8 +121,25 @@ def build_csr(edges: np.ndarray, num_vertices: int | None = None,
     return CSRGraph(
         indptr=jnp.asarray(indptr), indices=jnp.asarray(indices),
         offsets=jnp.asarray(offsets), degrees=jnp.asarray(degrees),
+        edge_values=None if vals_pad is None else jnp.asarray(vals_pad),
         num_vertices=int(num_vertices), num_edges=num_edges,
         max_degree=max_degree)
+
+
+def with_edge_values(g: CSRGraph, values: np.ndarray) -> CSRGraph:
+    """Attach a value plane to an existing graph.
+
+    ``values`` is (num_edges,) float, aligned with ``edge_list(g)`` — i.e.
+    value i belongs to the i-th directed edge in CSR order. Returns a new
+    graph sharing every key array with ``g``.
+    """
+    values = np.asarray(values, dtype=np.float32).reshape(-1)
+    if values.shape[0] != g.num_edges:
+        raise ValueError(
+            f"need {g.num_edges} edge values, got {values.shape[0]}")
+    vals_pad = np.zeros(g.indices.shape[0], dtype=np.float32)
+    vals_pad[: g.num_edges] = values
+    return dataclasses.replace(g, edge_values=jnp.asarray(vals_pad))
 
 
 def neighbors_stream(g: CSRGraph, v, cap: int | None = None) -> Stream:
@@ -111,6 +167,23 @@ def padded_rows(g: CSRGraph, vs: jax.Array, cap: int):
     rows = g.indices[idx]
     rows = jnp.where(col[None, :] < lens[:, None], rows, SENTINEL)
     return rows, jnp.minimum(lens, cap).astype(jnp.int32)
+
+
+def padded_value_rows(g: CSRGraph, vs: jax.Array, cap: int) -> jax.Array:
+    """Value twin of ``padded_rows``: gather each vertex's edge values into
+    a (B, cap) f32 matrix, 0.0 where the key row holds SENTINEL padding.
+    Row i column k is the weight of edge (vs[i], padded_rows(...)[0][i, k]).
+    """
+    if g.edge_values is None:
+        raise ValueError("graph has no edge_values (see with_edge_values)")
+    vs = jnp.asarray(vs, jnp.int32)
+    starts = g.indptr[vs]
+    lens = g.indptr[vs + 1] - starts
+    col = jnp.arange(cap, dtype=jnp.int32)
+    idx = starts[:, None] + col[None, :]
+    idx = jnp.clip(idx, 0, g.edge_values.shape[0] - 1)
+    vals = g.edge_values[idx]
+    return jnp.where(col[None, :] < lens[:, None], vals, 0.0)
 
 
 def degree_buckets(g: CSRGraph, base: int = LANE) -> list[tuple[int, np.ndarray]]:

@@ -10,6 +10,25 @@ from __future__ import annotations
 import numpy as np
 
 
+def edge_weights(edges: np.ndarray, seed: int = 0) -> np.ndarray:
+    """Deterministic symmetric edge weights for a host edge array.
+
+    Weight of {u, v} is a pure function of (min(u,v), max(u,v), seed) —
+    identical no matter which direction or duplicate of the edge is asked,
+    so weights survive ``build_csr``'s mirror/dedup untouched. Values are
+    dyadic rationals in {0.25, 0.5, 0.75, 1.0}: products over a pattern's
+    edges and small-graph sums stay exactly representable in f32, which is
+    what lets the CI gate demand engine == oracle bit-for-bit.
+    """
+    e = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    lo = np.minimum(e[:, 0], e[:, 1])
+    hi = np.maximum(e[:, 0], e[:, 1])
+    h = (lo * np.int64(0x9E3779B1) + hi * np.int64(0x85EBCA77)
+         + np.int64(seed) * np.int64(0xC2B2AE3D)) & np.int64(0x7FFFFFFF)
+    h ^= h >> 15
+    return ((1 + (h & 3)).astype(np.float32)) * np.float32(0.25)
+
+
 def erdos_renyi(n: int, m: int, seed: int = 0) -> np.ndarray:
     """~m undirected edges sampled uniformly (G(n, m) without replacement)."""
     rng = np.random.default_rng(seed)

@@ -396,3 +396,170 @@ def intersect_multi_pallas(a, bs, pol, bounds=None, max_visits=None,
     )(lo_t, nv, a, bs, bounds.reshape(-1, 1), lbounds.reshape(-1, 1),
       excludes)
     return mark, cnt[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# value-carrying multi-operand level kernel (the SVPU lane, §IV-E)
+# ---------------------------------------------------------------------------
+
+AGG_IDS = {"sum": 0, "max": 1, "min": 2}
+F32_MAX = 3.4e38      # masked-reduce identities (finite: inf trips asserts)
+
+
+def _multi_agg_kernel(n_refs: int, n_inter: int, max_visits: int, op_id: int,
+                      lo_ref, nv_ref, a_ref, b_ref, bound_ref, lbound_ref,
+                      excl_ref, aval_ref, bval_ref, scale_ref,
+                      mark_ref, cnt_ref, vsum_ref, vprod_ref, val_ref):
+    """``_multi_kernel`` with a value lane riding the SAME tile schedule.
+
+    The membership side is byte-identical to ``_multi_kernel`` (same score
+    accumulator, same finalize). The value side is svinter's mask-MAC
+    (§IV-E): per visited tile, ``m @ bv`` recovers each A-slot's matched
+    value for the current ref (sorted sets: at most one match, so the MAC
+    *is* the matched value). ``vsum`` accumulates that per ref across its
+    visits; at each INTER ref's last visit it folds into the running
+    product ``vprod``. The finalize step multiplies in the slot's own feed
+    value and the per-row prefix scale, masks by keep, and reduces into the
+    per-row aggregate with the op's identity — zero extra B-tile DMA, one
+    extra VPU MAC per visit."""
+    bi, i, r, j = (pl.program_id(0), pl.program_id(1), pl.program_id(2),
+                   pl.program_id(3))
+    a = a_ref[0, :]
+    bt = b_ref[0, 0, :]
+    m = (a[:, None] == bt[None, :])
+    hit = jnp.sum(m.astype(jnp.int32), axis=1) > 0
+    weight = jnp.where(r < n_inter, 1, -(n_refs + 1))
+    bv = bval_ref[0, 0, :]
+    mv = jnp.dot(m.astype(jnp.float32), bv[:, None],
+                 preferred_element_type=jnp.float32)[:, 0]
+
+    @pl.when((r == 0) & (j == 0))
+    def _init_mark():
+        mark_ref[0, :] = jnp.zeros_like(mark_ref[0, :])
+        vprod_ref[0, :] = jnp.ones_like(vprod_ref[0, :])
+
+    @pl.when(j == 0)
+    def _init_vsum():
+        vsum_ref[0, :] = jnp.zeros_like(vsum_ref[0, :])
+
+    @pl.when((i == 0) & (r == 0) & (j == 0))
+    def _init_cnt():
+        cnt_ref[0, 0] = 0
+        val_ref[0, 0] = jnp.float32(
+            0.0 if op_id == 0 else (-F32_MAX if op_id == 1 else F32_MAX))
+
+    @pl.when(j < nv_ref[r, bi, i])
+    def _acc():
+        mark_ref[0, :] += hit.astype(jnp.int32) * weight
+        vsum_ref[0, :] += mv
+
+    @pl.when((r < n_inter) & (j == max_visits - 1))
+    def _fold():
+        vprod_ref[0, :] *= vsum_ref[0, :]
+
+    @pl.when((r == n_refs - 1) & (j == max_visits - 1))
+    def _finalize():
+        bound = bound_ref[0, 0]
+        valid = (a != SENTINEL) & (a < bound) & (a > lbound_ref[0, 0])
+        ex = excl_ref[0, :]
+        valid = valid & jnp.all(a[:, None] != ex[None, :], axis=1)
+        keep = valid & (mark_ref[0, :] == n_inter)
+        mark_ref[0, :] = keep.astype(jnp.int32)
+        cnt_ref[0, 0] += jnp.sum(keep.astype(jnp.int32))
+        contrib = aval_ref[0, :] * vprod_ref[0, :] * scale_ref[0, 0]
+        if op_id == 0:
+            val_ref[0, 0] += jnp.sum(jnp.where(keep, contrib, 0.0))
+        elif op_id == 1:
+            val_ref[0, 0] = jnp.maximum(
+                val_ref[0, 0], jnp.max(jnp.where(keep, contrib, -F32_MAX)))
+        else:
+            val_ref[0, 0] = jnp.minimum(
+                val_ref[0, 0], jnp.min(jnp.where(keep, contrib, F32_MAX)))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("pol", "op", "max_visits", "interpret"))
+def intersect_multi_agg_pallas(a, bs, pol, a_vals, b_vals, scale, op="sum",
+                               bounds=None, max_visits=None, interpret=True,
+                               lbounds=None, excludes=None):
+    """``intersect_multi_pallas`` + SVPU value lane -> (mark, counts, vals).
+
+    Same k-operand membership contract (see ``intersect_multi_pallas``);
+    additionally each kept slot s of row i carries the value
+
+        a_vals[i, s] * Π_{INTER refs r} matched_val_r(i, s) * scale[i]
+
+    and ``vals[i]`` reduces the kept slots' values with ``op`` (``sum`` /
+    ``max`` / ``min``; empty rows yield the op identity — 0.0 / -3.4e38 /
+    +3.4e38 — callers mask with ``counts``). ``b_vals`` is the (k, B,
+    cap_b) value stack aligned with ``bs`` (SUB refs' values are ignored);
+    ``scale`` is the per-row (B,) prefix product the caller folded outside
+    the kernel. One dispatch, the same B-tile DMA schedule as the
+    unweighted kernel — the value lane is pure VPU work on tiles already
+    resident."""
+    assert bs.ndim == 3 and bs.shape[0] == len(pol) >= 1, \
+        "bs must be (k, B, cap_b) matching pol"
+    assert all(p == 1 for p in pol[:sum(pol)]) \
+        and all(p == 0 for p in pol[sum(pol):]), "pol must be INTER-first"
+    assert b_vals.shape == bs.shape and a_vals.shape == a.shape
+    B, cap_a = a.shape
+    cap_b = bs.shape[2]
+    assert cap_a % TA == 0 and cap_b % TB == 0, "streams are LANE-padded"
+    if bounds is None:
+        bounds = jnp.full((B,), SENTINEL, jnp.int32)
+    bounds = jnp.asarray(bounds, jnp.int32)
+    if lbounds is None:
+        lbounds = jnp.full((B,), -1, jnp.int32)
+    lbounds = jnp.asarray(lbounds, jnp.int32)
+    if excludes is None:
+        excludes = jnp.full((B, 1), -1, jnp.int32)
+    excludes = jnp.asarray(excludes, jnp.int32)
+    scale = jnp.asarray(scale, jnp.float32)
+    lo_t, nv = jax.vmap(tile_schedule, in_axes=(None, 0, None, None))(
+        a, bs, bounds, lbounds)
+    if max_visits is None:
+        max_visits = cap_b // TB
+    k = len(pol)
+    grid = (B, cap_a // TA, k, int(max_visits))
+    n_excl = excludes.shape[1]
+    kernel = functools.partial(_multi_agg_kernel, k, int(sum(pol)),
+                               int(max_visits), AGG_IDS[op])
+
+    def _b_spec(bi, i, r, j, lo, nv):
+        return (r, bi, jnp.minimum(lo[r, bi, i] + j, cap_b // TB - 1))
+
+    mark, cnt, _vs, _vp, val = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, TA), lambda bi, i, r, j, lo, nv: (bi, i)),
+                pl.BlockSpec((1, 1, TB), _b_spec),
+                pl.BlockSpec((1, 1), lambda bi, i, r, j, lo, nv: (bi, 0)),
+                pl.BlockSpec((1, 1), lambda bi, i, r, j, lo, nv: (bi, 0)),
+                pl.BlockSpec((1, n_excl),
+                             lambda bi, i, r, j, lo, nv: (bi, 0)),
+                pl.BlockSpec((1, TA), lambda bi, i, r, j, lo, nv: (bi, i)),
+                pl.BlockSpec((1, 1, TB), _b_spec),
+                pl.BlockSpec((1, 1), lambda bi, i, r, j, lo, nv: (bi, 0)),
+            ],
+            out_specs=(
+                pl.BlockSpec((1, TA), lambda bi, i, r, j, lo, nv: (bi, i)),
+                pl.BlockSpec((1, 1), lambda bi, i, r, j, lo, nv: (bi, 0)),
+                pl.BlockSpec((1, TA), lambda bi, i, r, j, lo, nv: (bi, i)),
+                pl.BlockSpec((1, TA), lambda bi, i, r, j, lo, nv: (bi, i)),
+                pl.BlockSpec((1, 1), lambda bi, i, r, j, lo, nv: (bi, 0)),
+            ),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct(a.shape, jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct(a.shape, jnp.float32),
+            jax.ShapeDtypeStruct(a.shape, jnp.float32),
+            jax.ShapeDtypeStruct((B, 1), jnp.float32),
+        ),
+        interpret=interpret,
+    )(lo_t, nv, a, bs, bounds.reshape(-1, 1), lbounds.reshape(-1, 1),
+      excludes, a_vals, b_vals, scale.reshape(-1, 1))
+    return mark, cnt[:, 0], val[:, 0]

@@ -15,14 +15,15 @@ import jax.numpy as jnp
 
 from repro.core.batch import (batch_compact_rows, batch_compact_scan,
                               batch_inter, batch_inter_compact,
-                              batch_inter_count, batch_level_compact,
-                              batch_level_count, batch_member_mark,
-                              batch_sub_compact, batch_sub_count,
-                              batch_vinter)
+                              batch_inter_count, batch_level_agg,
+                              batch_level_compact, batch_level_count,
+                              batch_member_mark, batch_sub_compact,
+                              batch_sub_count, batch_vinter)
 from repro.core.stream import SENTINEL
 from .bitmap import bitmap_and_count_pallas, bitmap_and_count_ref, keys_to_bitmap
 from .intersect import (intersect_count_pallas, intersect_expand_pallas,
-                        intersect_mark_pallas, intersect_multi_pallas)
+                        intersect_mark_pallas, intersect_multi_agg_pallas,
+                        intersect_multi_pallas)
 from .svinter import vinter_pallas
 
 
@@ -221,14 +222,56 @@ def xlevel_compact(a, bs, pol, bounds=None, out_cap: int | None = None,
                                   cap, items, interpret=not _on_tpu())
 
 
-def xvinter_mac(a_keys, a_vals, b_keys, b_vals, op: str = "mac",
-                backend: str = "auto"):
-    """Batched S_VINTER (SVPU): reduce over value pairs of intersected keys."""
+def xlevel_agg(a, bs, pol, a_vals, b_vals, scale, op: str = "sum",
+               bounds=None, backend: str = "auto", lbounds=None,
+               excludes=None):
+    """Fused multi-operand level count + SVPU value aggregate (§IV-E) —
+    (counts, vals) in ONE dispatch on the SAME tile schedule as
+    ``xlevel_count``.
+
+    Membership contract is ``xlevel_count``'s; additionally each kept slot
+    carries ``a_vals * Π_{INTER r} matched_val_r * scale[row]`` and
+    ``vals[i]`` reduces row i's kept slots with ``op`` ('sum'/'max'/'min';
+    op identity for empty rows — callers mask with counts). ``b_vals`` is
+    the (k, B, cap_b) value stack aligned with ``bs`` (0.0 where keys are
+    SENTINEL; SUB refs' values ignored). ``pol = ()`` levels are served by
+    the XLA form on every backend, like ``xlevel_count``.
+
+    The point of the shared entry: the value lane rides the membership
+    dispatch — a weighted query issues exactly the kernel dispatches and
+    feed passes of its unweighted twin (gated in ci_gate.py --values)."""
+    backend = _resolve(backend)
+    if backend == "xla" or not pol:
+        return batch_level_agg(a, bs, pol, a_vals, b_vals, scale, op=op,
+                               bounds=bounds, lbounds=lbounds,
+                               excludes=excludes)
+    _, cnt, val = intersect_multi_agg_pallas(
+        a, bs, pol, a_vals, b_vals, scale, op=op, bounds=bounds,
+        interpret=not _on_tpu(), lbounds=lbounds, excludes=excludes)
+    return cnt, val
+
+
+def xvinter(a_keys, a_vals, b_keys, b_vals, op: str = "mac",
+            backend: str = "auto"):
+    """Batched S_VINTER (SVPU, §IV-E): per-row reduce over value pairs of
+    intersected keys — the shared value-intersect entry the sparse layer
+    (``sparse.spmm`` / ``sparse.ttv``) routes through.
+
+    ``op``: 'mac' (Σ va·vb — sparse dot), 'max'/'min' (Σ of per-pair
+    max/min over matches). Backend dispatch like every other entry here:
+    'xla' is ``core.batch.batch_vinter``, 'pallas' is the mask-MAC kernel
+    (``kernels.svinter``), parity-tested in tests/test_sparse.py."""
     backend = _resolve(backend)
     if backend == "xla":
         return batch_vinter(a_keys, a_vals, b_keys, b_vals, op=op)
     return vinter_pallas(a_keys, a_vals, b_keys, b_vals, op=op,
                          interpret=not _on_tpu())
+
+
+def xvinter_mac(a_keys, a_vals, b_keys, b_vals, op: str = "mac",
+                backend: str = "auto"):
+    """Deprecated alias of ``xvinter`` (kept for source compatibility)."""
+    return xvinter(a_keys, a_vals, b_keys, b_vals, op=op, backend=backend)
 
 
 def xbitmap_count(a_words, b_words, backend: str = "auto"):
@@ -240,5 +283,5 @@ def xbitmap_count(a_words, b_words, backend: str = "auto"):
 
 
 __all__ = ["xinter", "xinter_count", "xinter_compact", "xmark", "xsub_count",
-           "xsub_compact", "xlevel_count", "xlevel_compact", "xvinter_mac",
-           "xbitmap_count", "keys_to_bitmap"]
+           "xsub_compact", "xlevel_count", "xlevel_compact", "xlevel_agg",
+           "xvinter", "xvinter_mac", "xbitmap_count", "keys_to_bitmap"]

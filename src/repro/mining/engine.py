@@ -48,9 +48,11 @@ from repro.core.batch import (batch_compact_scan, batch_inter,
                               batch_inter_count, compact_indices_scan)
 from repro.obs import LegacyStatsView, Telemetry
 from repro.core.stream import LANE, SENTINEL, round_capacity
-from repro.graph.csr import CSRGraph, padded_rows
-from repro.kernels.ops import (xinter_compact, xinter_count, xlevel_compact,
-                               xlevel_count, xmark, xsub_compact, xsub_count)
+from repro.graph.csr import CSRGraph, padded_rows, padded_value_rows
+from repro.kernels.ops import (xinter_compact, xinter_count, xlevel_agg,
+                               xlevel_compact, xlevel_count, xmark,
+                               xsub_compact, xsub_count)
+from repro.values import edge_value_lookup, prefix_scale
 from .plan import LevelOp, WavePlan, clique_pattern, compile_pattern, pattern
 
 
@@ -382,6 +384,10 @@ class WaveRunner:
         # registry-only extras (not part of the legacy view)
         self._h_wave_items = self.metrics.histogram("wave_items")
         self._ct_feed_chunks = self.metrics.counter("feed_chunks")
+        # SVPU value plane: aggregate-leaf executions (each rides an
+        # existing membership dispatch — value_lane_dispatches counts leaves
+        # whose dispatch carried a value lane, NOT extra kernel launches)
+        self._ct_value_lanes = self.metrics.counter("value_lane_dispatches")
         self._exec_fresh = False
         # per-(kind, level) executable dispatch counts — the fusion metric:
         # a PlanForest run dispatches each shared level once where the
@@ -443,6 +449,8 @@ class WaveRunner:
         attrs = {"kind": op.kind, "level": op.level,
                  "dispatches": self._level_dispatches(op, host),
                  "exec_cached": not self._exec_fresh}
+        if op.agg is not None:
+            attrs["agg"] = op.agg
         if items is not None:
             attrs["items"] = int(np.asarray(items).sum())
         if caps_sig:
@@ -569,6 +577,20 @@ class WaveRunner:
         return jnp.stack(rows)
 
     @staticmethod
+    def _stack_val_refs(g, get, caps: dict, refs: tuple[int, ...]):
+        """Value twin of ``_stack_refs``: (k, B, cap) f32 stack aligned with
+        the key stack, 0.0 where keys are SENTINEL padding (the pad columns
+        never match, so their value is irrelevant but must exist)."""
+        capmax = max(caps[j] for j in refs)
+        rows = []
+        for j in refs:
+            v = padded_value_rows(g, get[j], caps[j])
+            if caps[j] < capmax:
+                v = jnp.pad(v, ((0, 0), (0, capmax - caps[j])))
+            rows.append(v)
+        return jnp.stack(rows)
+
+    @staticmethod
     def _excl_vals(op: LevelOp, get):
         """Per-row injectivity values for the fused kernels' excludes
         operand (None when the level declares none)."""
@@ -664,11 +686,77 @@ class WaveRunner:
                               jnp.sum(counts & 0xFFFF, dtype=jnp.int32)])
         return fn
 
+    def _plan_agg_fn(self, op: LevelOp, caps_sig: tuple, cap_base: int):
+        """Terminal SVPU aggregate level (``op.agg``): one (value, live)
+        f32 pair per chunk, riding the same dispatch budget as the count
+        leaf (``xlevel_agg`` shares ``xlevel_count``'s tile schedule)."""
+        def build():
+            return self._jit_agg(op, self._agg_body(op, caps_sig, cap_base))
+        return self._executable(
+            ("pagg", op, caps_sig, cap_base, self.fused_level), build)
+
+    def _agg_body(self, op: LevelOp, caps_sig: tuple, cap_base: int):
+        """Unjitted aggregate-leaf body; ``_jit_agg`` wraps it for dispatch.
+
+        Per kept slot the embedding's value is the product over ALL pattern
+        edges of the edge weight, assembled from three sources: prefix-
+        prefix edges fold into the per-row ``scale`` (``prefix_scale``),
+        candidate-edge weights the kernel's own INTER refs observe ride the
+        mask-MAC value lane (``b_vals``), and candidate edges covered at an
+        ancestor level (carry reuse / the fresh base's own gather) land in
+        ``a_vals`` (value-row gather + ``edge_value_lookup``). The per-chunk
+        partial is [op-reduced value, live embedding count] — live gates
+        the op identity out at finalize (zero embeddings -> 0.0)."""
+        backend = self.backend
+        in_cols = self._in_cols(op)
+        caps = dict(caps_sig)
+        refs = op.inter + op.sub
+        pol = (1,) * len(op.inter) + (0,) * len(op.sub)
+
+        def fn(g, vals, carry, n):
+            get = dict(zip(in_cols, vals))
+            if op.use_carry:
+                base = carry
+                a_vals = jnp.ones(base.shape, jnp.float32)
+            else:
+                base = padded_rows(g, get[op.base], caps[op.base])[0]
+                a_vals = padded_value_rows(g, get[op.base], caps[op.base])
+            for c in op.agg_cand_cols:
+                a_vals = a_vals * edge_value_lookup(g, get[c], base)
+            scale = prefix_scale(g, get, op.agg_scale_edges) \
+                if op.agg_scale_edges \
+                else jnp.ones((base.shape[0],), jnp.float32)
+            ub = self._ub_vec(op, get, n, base.shape[0])
+            lb = self._max_lb(op, get) if op.lb else None
+            if refs:
+                bs = self._stack_refs(g, get, caps, refs)
+                bv = self._stack_val_refs(g, get, caps, refs)
+            else:
+                bs = bv = None
+            counts, rvals = xlevel_agg(
+                base, bs, pol, a_vals, bv, scale, op=op.agg, bounds=ub,
+                backend=backend, lbounds=lb,
+                excludes=self._excl_vals(op, get))
+            # dead rows carry the op identity, so the plain row reduce is
+            # correct; ``live`` is only read as a zero test at finalize
+            if op.agg == "sum":
+                value = jnp.sum(rvals, dtype=jnp.float32)
+            elif op.agg == "max":
+                value = jnp.max(rvals)
+            else:
+                value = jnp.min(rvals)
+            live = jnp.sum(counts, dtype=jnp.int32).astype(jnp.float32)
+            return jnp.stack([value, live])
+        return fn
+
     # -------------------------------------------------------- jit hooks
     # Single-device dispatch is a plain jit of each body; the sharded
     # runner overrides these to wrap the same bodies in shard_map (psum
     # reductions for count partials, per-shard meta/total rows otherwise).
     def _jit_count(self, op: LevelOp, body: Callable) -> Callable:
+        return jax.jit(body)
+
+    def _jit_agg(self, op: LevelOp, body: Callable) -> Callable:
         return jax.jit(body)
 
     def _jit_expand(self, op: LevelOp, body: Callable,
@@ -884,6 +972,24 @@ class WaveRunner:
             if not parts:
                 return np.zeros((0, plan.k), dtype=np.int32)
             return np.concatenate(parts, axis=0).astype(np.int32)
+        agg = plan.ops[-1].agg
+        if agg is not None:
+            # f32 (value, live) pairs; live > 0 gates the op identity out
+            # (a weighted query over zero embeddings aggregates to 0.0)
+            value, live = None, 0.0
+            for p in parts:
+                v = np.asarray(p, dtype=np.float64)
+                live += float(v[1])
+                x = float(v[0])
+                if value is None:
+                    value = x
+                elif agg == "sum":
+                    value += x
+                elif agg == "max":
+                    value = max(value, x)
+                else:
+                    value = min(value, x)
+            return float(value) if (value is not None and live > 0) else 0.0
         total = 0
         for p in parts:
             v = np.asarray(p)
@@ -982,7 +1088,11 @@ class WaveRunner:
         with self._level_span(op, n):
             if op.kind == "count":
                 self._bump(op)
-                fn = self._plan_count_fn(op, caps_sig, cap_base)
+                if op.agg is not None:
+                    self._ct_value_lanes.inc()
+                    fn = self._plan_agg_fn(op, caps_sig, cap_base)
+                else:
+                    fn = self._plan_count_fn(op, caps_sig, cap_base)
                 part = self._dispatch(op, fn, (self.g, vals, carry_in, n),
                                       items=n, caps_sig=caps_sig)
                 for i in node.plans:
@@ -1080,7 +1190,11 @@ class WaveRunner:
         with self._level_span(op, n):
             if op.kind == "count":
                 self._bump(op)
-                fn = self._plan_count_fn(op, caps_sig, cap_base)
+                if op.agg is not None:
+                    self._ct_value_lanes.inc()
+                    fn = self._plan_agg_fn(op, caps_sig, cap_base)
+                else:
+                    fn = self._plan_count_fn(op, caps_sig, cap_base)
                 return [self._dispatch(op, fn, (self.g, vals, carry_in, n),
                                        items=n, caps_sig=caps_sig)]
             b = (int(carry.shape[0]) if op.use_carry

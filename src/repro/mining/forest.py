@@ -187,9 +187,11 @@ def _merge(branches: list[tuple[int, list[LevelOp]]]) -> tuple[ForestNode, ...]:
     for op, idxs in leaves.items():
         # count-rides-expand: a tail-free count leaf matching a sibling
         # expand's stream AND relaxed constraints reads that expand's
-        # survivor-count vector instead of dispatching its own kernel
+        # survivor-count vector instead of dispatching its own kernel.
+        # Aggregate leaves never ride: an expand yields counts, not values.
         tgt = merged.get(op.stream_key()) \
-            if op.kind == "count" and op.tail is None else None
+            if op.kind == "count" and op.tail is None and op.agg is None \
+            else None
         if tgt is not None and (op.ub, op.lb, op.exclude, op.residual) == \
                 (tgt[0].ub, tgt[0].lb, tgt[0].exclude, tgt[0].residual):
             tgt[2].extend(idxs)

@@ -261,6 +261,19 @@ class LevelOp:
     out_cols: tuple[int, ...]     # prefix columns forwarded to deeper levels
     gather_refs: tuple[int, ...]  # columns deeper levels gather rows for
     carry_out: bool               # next level starts from our survivors
+    # SVPU value disposition (count leaves only; compile_pattern(...,
+    # aggregate=...)). ``agg`` names the reduction over embedding values —
+    # 'sum' | 'max' | 'min' — where an embedding's value is the product of
+    # its pattern-edge weights. The leaf computes that product locally:
+    # ``agg_scale_edges`` are the prefix-prefix pattern edges (both
+    # endpoints < level, incl. the (0,1) feed edge) folded into a per-item
+    # scale via CSR weight lookups; ``agg_cand_cols`` are candidate-adjacent
+    # prefix columns no INTER ref of THIS op covers (carry-reuse hides
+    # them), looked up per (item, slot). A count leaf has agg None and both
+    # tuples empty — its LevelOp hash/eq is what it always was.
+    agg: str | None = None
+    agg_scale_edges: tuple[tuple[int, int], ...] = ()
+    agg_cand_cols: tuple[int, ...] = ()
     # deferred per-item constraints, installed by the forest scheduler when a
     # shared ancestor was *relaxed* (its bound/injectivity surplus dropped so
     # several patterns could share one expand). Entries ('lt', i, j) ≡ require
@@ -285,6 +298,10 @@ class LevelOp:
         for _, i, j in self.residual:
             refs.add(i)
             refs.add(j)
+        for i, j in self.agg_scale_edges:
+            refs.add(i)
+            refs.add(j)
+        refs |= set(self.agg_cand_cols)
         return tuple(sorted(refs))
 
     def stream_key(self) -> tuple:
@@ -300,7 +317,8 @@ class LevelOp:
         with equal semantic keys are interchangeable work."""
         return (self.level, self.use_carry, self.base, self.inter, self.sub,
                 self.ub, self.lb, self.exclude, self.kind, self.tail,
-                tuple(sorted(self.residual)))
+                tuple(sorted(self.residual)), self.agg,
+                self.agg_scale_edges, self.agg_cand_cols)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -376,17 +394,37 @@ def _validate(p: Pattern) -> None:
 
 # compiled-plan memo: the schedule search and the session compile stage both
 # revisit patterns; Pattern/WavePlan are immutable so sharing is free
-_PLAN_CACHE: dict[tuple[Pattern, bool], WavePlan] = {}
+_PLAN_CACHE: dict[tuple[Pattern, bool, str | None], WavePlan] = {}
+
+AGG_OPS = ("sum", "max", "min")
 
 
-def compile_pattern(p: Pattern, emit: bool = False) -> WavePlan:
+def compile_pattern(p: Pattern, emit: bool = False,
+                    aggregate: str | None = None) -> WavePlan:
     """Lower a ``Pattern`` to a ``WavePlan`` (§IV-F translation, on host).
 
     ``emit=True`` compiles an enumeration program: the final level
     materialises embeddings instead of counting (FSM's triangle feed).
+    ``aggregate`` ('sum'/'max'/'min') compiles a *weighted* program: the
+    count leaf becomes an SVPU aggregate leaf reducing per-embedding edge-
+    weight products (tail folding is disabled — a folded closed-form count
+    cannot carry per-edge values — and earlier ops forward whatever prefix
+    columns the leaf's weight lookups reference). The plan's *stream* structure
+    is otherwise identical to the unweighted plan's, which is what lets a
+    forest fuse weighted and unweighted queries onto shared expands.
     Compilation is memoised (host-pure, immutable output).
     """
-    cached = _PLAN_CACHE.get((p, emit))
+    if aggregate is not None and aggregate not in AGG_OPS:
+        raise ValueError(f"unknown aggregate {aggregate!r}; use one of "
+                         f"{AGG_OPS}")
+    if aggregate is not None and emit:
+        raise ValueError("aggregate plans are count programs (emit=False)")
+    if aggregate is not None and p.div != 1:
+        raise ValueError(
+            f"{p.name}: aggregate needs fully symmetry-broken schedules "
+            "(div == 1) — a residual automorphism factor divides counts but "
+            "not max/min aggregates")
+    cached = _PLAN_CACHE.get((p, emit, aggregate))
     if cached is not None:
         return cached
     _validate(p)
@@ -442,7 +480,8 @@ def compile_pattern(p: Pattern, emit: bool = False) -> WavePlan:
             tail=None))
     # ---- tail folding: closed-form final level -> degree multiplier ----
     last = raw_ops[-1]
-    if (not emit and len(raw_ops) >= 2 and last["kind"] == "count"
+    if (not emit and aggregate is None and len(raw_ops) >= 2
+            and last["kind"] == "count"
             and not last["sub"] and not last["ub"] and not last["lb"]
             and last["use_carry"] is False and not last["inter"]):
         lvl, b = last["level"], last["base"]
@@ -453,6 +492,23 @@ def compile_pattern(p: Pattern, emit: bool = False) -> WavePlan:
             raw_ops.pop()
             raw_ops[-1]["kind"] = "count"
             raw_ops[-1]["tail"] = (b, lvl - 1)
+    # ---- value disposition: stamp the count leaf with SVPU agg fields ----
+    if aggregate is not None:
+        leaf = raw_ops[-1]
+        lvl = leaf["level"]
+        leaf["agg"] = aggregate
+        # pattern edges wholly inside the prefix (incl. the (0,1) feed edge):
+        # folded into a per-item scale via CSR weight lookups at the leaf
+        leaf["agg_scale_edges"] = tuple(
+            (i, j) for i in range(lvl) for j in range(i + 1, lvl)
+            if p.adj[i][j])
+        # candidate-adjacent prefix columns whose matched value the leaf's
+        # own kernel refs do NOT observe (carry reuse: the membership test
+        # happened at an ancestor level) — looked up per (item, slot)
+        covered = set(leaf["inter"]) \
+            | (set() if leaf["use_carry"] else {leaf["base"]})
+        leaf["agg_cand_cols"] = tuple(sorted(
+            {j for j in range(lvl) if p.adj[lvl][j]} - covered))
     # ---- liveness: which columns do deeper levels still touch? ----
     ops: list[LevelOp] = []
     for idx, ro in enumerate(raw_ops):
@@ -465,6 +521,10 @@ def compile_pattern(p: Pattern, emit: bool = False) -> WavePlan:
             dvals = drows | set(d["ub"]) | set(d["lb"]) | set(d["exclude"])
             if d["tail"] is not None:
                 dvals.add(d["tail"][0])
+            for a, b in d.get("agg_scale_edges", ()):
+                dvals.add(a)
+                dvals.add(b)
+            dvals |= set(d.get("agg_cand_cols", ()))
             needed |= {c for c in dvals if c <= ro["level"]}
             rows_needed |= {c for c in drows if c <= ro["level"]}
         if emit:
@@ -473,13 +533,16 @@ def compile_pattern(p: Pattern, emit: bool = False) -> WavePlan:
             level=ro["level"], use_carry=ro["use_carry"], base=ro["base"],
             inter=ro["inter"], sub=ro["sub"], ub=ro["ub"], lb=ro["lb"],
             exclude=ro["exclude"], kind=ro["kind"], tail=ro["tail"],
+            agg=ro.get("agg"),
+            agg_scale_edges=ro.get("agg_scale_edges", ()),
+            agg_cand_cols=ro.get("agg_cand_cols", ()),
             out_cols=tuple(sorted(needed)),
             gather_refs=tuple(sorted(rows_needed)),
             carry_out=(idx + 1 < len(raw_ops)
                        and raw_ops[idx + 1]["use_carry"])))
     plan = WavePlan(pattern=p, symmetric=symmetric, ops=tuple(ops),
                     div=1 if emit else p.div)
-    _PLAN_CACHE[(p, emit)] = plan
+    _PLAN_CACHE[(p, emit, aggregate)] = plan
     return plan
 
 

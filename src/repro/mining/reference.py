@@ -115,6 +115,52 @@ def pattern_count_oracle(g: CSRGraph, pat) -> int:
     return total // pat.div
 
 
+def weighted_pattern_oracle(g: CSRGraph, pat, op: str = "sum") -> float:
+    """SVPU value-plane oracle: aggregate embedding weights by brute force.
+
+    An embedding's value is the product over ALL pattern edges of the
+    matched graph edge's weight (``g.edge_values``); the query result is
+    the ``op`` ('sum' | 'max' | 'min') reduction over every embedding
+    ``pattern_count_oracle`` would count. Mirrors ``Miner.aggregate``:
+    requires a fully symmetry-broken schedule (``pat.div == 1``) and
+    returns 0.0 when no embedding exists. Host float64 enumeration —
+    exponential, tiny graphs only.
+    """
+    if g.edge_values is None:
+        raise ValueError("graph has no edge_values (see with_edge_values)")
+    if pat.div != 1:
+        raise ValueError("weighted oracle needs div == 1 schedules")
+    n = g.num_vertices
+    e = edge_list(g)
+    vals = np.asarray(g.edge_values, dtype=np.float64)[: g.num_edges]
+    A = np.zeros((n, n), dtype=bool)
+    W = np.zeros((n, n), dtype=np.float64)
+    A[e[:, 0], e[:, 1]] = True
+    W[e[:, 0], e[:, 1]] = vals
+    k = pat.k
+    pairs = [(i, j, pat.adj[i][j]) for i in range(k) for j in range(i + 1, k)]
+    acc: list[float] = []
+    for vs in itertools.permutations(range(n), k):
+        ok = all(A[vs[i], vs[j]] == want if pat.induced
+                 else (not want or A[vs[i], vs[j]])
+                 for i, j, want in pairs)
+        if ok and all(vs[i] < vs[j] for i, j in pat.restrictions):
+            value = 1.0
+            for i, j, want in pairs:
+                if want:
+                    value *= W[vs[i], vs[j]]
+            acc.append(value)
+    if not acc:
+        return 0.0
+    if op == "sum":
+        return float(sum(acc))
+    if op == "max":
+        return float(max(acc))
+    if op == "min":
+        return float(min(acc))
+    raise ValueError(f"op must be 'sum' | 'max' | 'min', got {op!r}")
+
+
 def fsm_oracle(g: CSRGraph, labels: np.ndarray, min_support: int,
                metric: str = "mni") -> dict:
     """Brute-force FSM oracle (tiny labelled graphs only).

@@ -121,6 +121,39 @@ Every session carries a ``repro.obs.Telemetry``: ``miner.telemetry``.
   extra synchronization, no extra kernel dispatches.
 * **jax profiler** — ``with miner.telemetry.jax_profile(logdir): ...``
   wraps a query in ``jax.profiler`` start/stop for an XLA-level trace.
+
+Value streams (SVPU, §IV-E)
+---------------------------
+
+A session over a *weighted* graph — one built with per-edge f32 values
+(``graph.build_csr(..., edge_values=...)`` or ``graph.with_edge_values``)
+— additionally serves **aggregate queries**::
+
+    m = Miner(with_edge_values(g, weights))
+    m.aggregate("triangle")                  # Σ over triangles of Π edge w
+    m.aggregate("4-clique", op="max")        # heaviest clique's weight
+    m.aggregate_many(["triangle", "4-clique"], op="min")
+
+The contract, stage by stage:
+
+* **semantics** — an embedding's value is the product of its pattern-edge
+  weights; ``aggregate`` reduces embedding values with ``op`` (``'sum'`` /
+  ``'max'`` / ``'min'``). Zero embeddings aggregate to ``0.0`` for every
+  op. Queries must resolve to fully symmetry-broken schedules (``div ==
+  1``; ``Motif`` queries always are, ``triangle-nested`` is not).
+* **value alignment** — edge values live in a CSR-aligned plane: the
+  session stages them with the keys, once (``padded_value_rows`` gathers
+  value rows under the SAME permutation as the sorted key rows, tested in
+  tests/test_values.py).
+* **zero extra feed passes** — the aggregate leaf rides the unweighted
+  plan's dispatches: same stream structure (``LevelOp.stream_key()``
+  ignores the value disposition), same membership kernels
+  (``kernels.ops.xlevel_agg`` shares ``xlevel_count``'s tile schedule), so
+  ``stats["runner"]["feed_chunks"]`` and ``level_kernel_dispatches`` for a
+  weighted query equal its unweighted twin's (gated in ci_gate --values).
+* **0 retraces on repeat** — aggregate executables are exec-cache keyed
+  like every other level (the LevelOp's ``agg`` fields are part of its
+  value hash), so a repeated ``aggregate`` call traces nothing new.
 """
 from __future__ import annotations
 
@@ -290,17 +323,20 @@ class Miner:
                      for k in self._SESSION_KEYS}
 
     # ------------------------------------------------------------ compile
-    def compile(self, query, emit: bool = False) -> WavePlan:
+    def compile(self, query, emit: bool = False,
+                aggregate: str | None = None) -> WavePlan:
         """Stage 1: lower one query to a ``WavePlan`` (cached).
 
         ``Motif`` queries are scheduled standalone (batch-aware order
         choice happens in ``schedule``); explicit ``Pattern``s and named
-        paper patterns keep their declared matching order."""
+        paper patterns keep their declared matching order. ``aggregate``
+        compiles the weighted (SVPU value) program — see the module
+        docstring's "Value streams" section."""
         tr = self.telemetry.tracer
         with (tr.span("compile", query=str(query), emit=emit)
               if tr.enabled else nullcontext()):
             resolved = resolve_query(query)
-            key = (resolved, emit)
+            key = (resolved, emit, aggregate)
             plan = self._plans.get(key)
             if plan is not None:
                 self._sct["plan_hits"].inc()
@@ -308,12 +344,13 @@ class Miner:
             self._sct["plan_misses"].inc()
             if isinstance(resolved, Motif):
                 resolved = schedule_patterns([resolved])[0]
-            plan = compile_pattern(resolved, emit=emit)
+            plan = compile_pattern(resolved, emit=emit, aggregate=aggregate)
             self._plans[key] = plan
             return plan
 
     # ----------------------------------------------------------- schedule
-    def schedule(self, queries: Sequence, emit: bool = False) -> PlanForest:
+    def schedule(self, queries: Sequence, emit: bool = False,
+                 aggregate: str | None = None) -> PlanForest:
         """Stage 2: batch matching-order search + forest merge (cached).
 
         Returns the ``PlanForest`` for the batch: ``Motif`` members get
@@ -326,7 +363,7 @@ class Miner:
         with (tr.span("schedule", queries=len(queries), emit=emit)
               if tr.enabled else nullcontext()):
             resolved = tuple(resolve_query(q) for q in queries)
-            key = (resolved, emit)
+            key = (resolved, emit, aggregate)
             forest = self._forests.get(key)
             if forest is not None:
                 self._sct["schedule_hits"].inc()
@@ -334,12 +371,13 @@ class Miner:
             self._sct["schedule_misses"].inc()
             # Motifs are searched jointly; Pattern members are fixed points
             # of the search but still shape its score (they sit in the
-            # trial trie)
+            # trial trie). The order search ignores the value disposition —
+            # agg plans share the unweighted plans' stream structure.
             pats = schedule_patterns(resolved)
             plans = []
             for r, p in zip(resolved, pats):
-                plan = compile_pattern(p, emit=emit)
-                self._plans.setdefault((r, emit), plan)
+                plan = compile_pattern(p, emit=emit, aggregate=aggregate)
+                self._plans.setdefault((r, emit, aggregate), plan)
                 plans.append(plan)
             forest = build_forest(plans)
             self._forests[key] = forest
@@ -367,6 +405,31 @@ class Miner:
         self._sct["queries"].inc()
         with self._query_span("count_many", queries=len(queries)):
             return self._runner.run_set(self.schedule(queries))
+
+    def _require_values(self) -> None:
+        if self.graph.edge_values is None:
+            raise ValueError(
+                "aggregate queries need a weighted graph — build with "
+                "edge_values (graph.build_csr(..., edge_values=...) or "
+                "graph.with_edge_values)")
+
+    def aggregate(self, query, op: str = "sum") -> float:
+        """Reduce embedding values of one query with ``op`` ('sum' / 'max' /
+        'min'); an embedding's value is the product of its pattern-edge
+        weights. See the module docstring's "Value streams" section."""
+        self._require_values()
+        self._sct["queries"].inc()
+        with self._query_span("aggregate", query=str(query), op=op):
+            return self._runner.run(self.compile(query, aggregate=op))
+
+    def aggregate_many(self, queries: Sequence, op: str = "sum") -> list:
+        """Aggregate a batch of queries in one fused forest pass (same
+        sharing as ``count_many``: aggregate leaves ride the shared
+        expands, results positional)."""
+        self._require_values()
+        self._sct["queries"].inc()
+        with self._query_span("aggregate_many", queries=len(queries), op=op):
+            return self._runner.run_set(self.schedule(queries, aggregate=op))
 
     def embeddings(self, query) -> np.ndarray:
         """Enumerate embeddings of one query as an (N, k) int32 matrix."""

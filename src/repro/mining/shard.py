@@ -203,6 +203,20 @@ class ShardedWaveRunner(WaveRunner):
             return jax.lax.psum(limbs, axis)
         return self._shmap(wrapped, self._level_in_specs(op), self._prp)
 
+    def _jit_agg(self, op, body):
+        axis = self.axis
+        red = {"sum": jax.lax.psum, "max": jax.lax.pmax,
+               "min": jax.lax.pmin}[op.agg]
+
+        def wrapped(g, vals, carry, n):
+            part = body(g, vals, carry, n)      # (2,) f32 [value, live]
+            # value reduces with the leaf's own op (a dead shard carries the
+            # op identity, so pmax/pmin absorb it); live always psums —
+            # finalize gates the identity out when the whole mesh is dead
+            return jnp.stack([red(part[0], axis),
+                              jax.lax.psum(part[1], axis)])
+        return self._shmap(wrapped, self._level_in_specs(op), self._prp)
+
     def _jit_expand(self, op, body, want_count):
         def wrapped(g, vals, carry, n):
             rows2, src, verts, meta = body(g, vals, carry, n)

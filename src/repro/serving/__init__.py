@@ -32,6 +32,11 @@ Tick / batching / admission contract
 * **result cache** — per-(graph-version, query) LRU in front of the
   pool: repeated queries at one graph version are served without
   touching a session; ``set_graph`` bumps the version and invalidates.
+* **value traffic** — ``submit(queries, aggregate="sum"|"max"|"min")``
+  serves weighted-value queries (``Miner.aggregate_many``) on the
+  ``values`` traffic class by default. Aggregate groups batch and cache
+  exactly like count groups, under op-tagged cache keys, and never mix
+  into a count group's forest.
 * **worker pool** — one resident ``Miner`` per traffic class
   (``WorkerSpec``), mixing unsharded and mesh-sharded sessions
   (``MinerConfig(mesh=S)``); executable caches are topology-keyed, so
@@ -51,10 +56,10 @@ from .loadgen import LoadGenerator, percentile
 from .pool import WorkerPool, WorkerSpec
 from .request import (RequestFailed, RequestRejected, RequestTimeout,
                       ServiceRequest)
-from .service import MiningService, ServiceConfig
+from .service import MiningService, ServiceConfig, VALUES_CLASS
 
 __all__ = [
     "LoadGenerator", "MiningService", "RequestFailed", "RequestRejected",
     "RequestTimeout", "ResultCache", "ServiceConfig", "ServiceRequest",
-    "WorkerPool", "WorkerSpec", "percentile",
+    "VALUES_CLASS", "WorkerPool", "WorkerSpec", "percentile",
 ]

@@ -45,15 +45,17 @@ class ServiceRequest:
     any number of client threads may block in ``result()``/``wait()``.
     """
 
-    __slots__ = ("id", "queries", "traffic_class", "submitted_at",
-                 "deadline", "state", "results", "error", "latency_s",
-                 "from_cache", "_done")
+    __slots__ = ("id", "queries", "traffic_class", "aggregate",
+                 "submitted_at", "deadline", "state", "results", "error",
+                 "latency_s", "from_cache", "_done")
 
     def __init__(self, rid: int, queries: tuple, traffic_class: str,
-                 timeout_s: float | None = None):
+                 timeout_s: float | None = None,
+                 aggregate: str | None = None):
         self.id = rid
         self.queries = queries                  # resolved, hashable
         self.traffic_class = traffic_class
+        self.aggregate = aggregate              # None => count query
         self.submitted_at = time.monotonic()
         self.deadline = (None if timeout_s is None
                          else self.submitted_at + float(timeout_s))

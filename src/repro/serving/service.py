@@ -21,6 +21,14 @@ Cross-request sharing accounting (the gate metric): per executed batch,
 fused < independent whenever a tick merged two or more requests — the
 "cross-REQUEST sharing, not just cross-pattern" fact ``ci_gate.py
 --serving`` gates exactly.
+
+Value traffic (SVPU, §IV-E): ``submit(..., aggregate="sum"|"max"|"min")``
+routes the request onto the ``values`` traffic class (unless the caller
+pins one explicitly) and executes via ``Miner.aggregate_many``. Aggregate
+requests batch exactly like count requests — one merged forest per
+(traffic class, op) group — and their results live in the same
+graph-version-keyed cache under op-tagged keys, so a weighted SUM and an
+unweighted count over the same pattern never collide.
 """
 from __future__ import annotations
 
@@ -33,13 +41,18 @@ from contextlib import nullcontext
 from typing import Sequence
 
 from repro.graph.csr import CSRGraph
-from repro.mining.plan import Motif, Pattern, resolve_query
+from repro.mining.plan import AGG_OPS, Motif, Pattern, resolve_query
 from repro.obs import Telemetry
 from .cache import ResultCache
 from .pool import DEFAULT_CLASS, WorkerPool, WorkerSpec
 from .request import ServiceRequest
 
-__all__ = ["MiningService", "ServiceConfig"]
+__all__ = ["MiningService", "ServiceConfig", "VALUES_CLASS"]
+
+# Traffic class aggregate submissions default onto. The pool falls back
+# to its first spec for classes without a dedicated worker, so services
+# configured before the value plane existed serve it unchanged.
+VALUES_CLASS = "values"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,23 +116,33 @@ class MiningService:
                       if config.cache_results else None)
 
     # ------------------------------------------------------------- submit
-    def submit(self, queries, traffic_class: str = DEFAULT_CLASS,
-               timeout_s: float | None = None) -> ServiceRequest:
+    def submit(self, queries, traffic_class: str | None = None,
+               timeout_s: float | None = None,
+               aggregate: str | None = None) -> ServiceRequest:
         """Enqueue one request (any thread, non-blocking).
 
         ``queries`` is one query (name / ``Pattern`` / ``Motif``) or a
         sequence; resolution happens here so the queue, the cache and the
-        batcher all speak hashable resolved queries. Admission control:
-        with ``max_in_flight`` requests already queued the request is
-        REJECTED immediately (completed handle, ``result()`` raises) —
-        the clean back-pressure path, never an unbounded queue."""
+        batcher all speak hashable resolved queries. ``aggregate`` turns
+        the request into a weighted-value query (``Miner.aggregate_many``
+        semantics) and defaults its traffic class to ``values``.
+        Admission control: with ``max_in_flight`` requests already queued
+        the request is REJECTED immediately (completed handle,
+        ``result()`` raises) — the clean back-pressure path, never an
+        unbounded queue."""
+        if aggregate is not None and aggregate not in AGG_OPS:
+            raise ValueError(
+                f"aggregate must be one of {AGG_OPS}, got {aggregate!r}")
+        if traffic_class is None:
+            traffic_class = (VALUES_CLASS if aggregate is not None
+                             else DEFAULT_CLASS)
         if isinstance(queries, (str, Pattern, Motif)):
             queries = (queries,)
         resolved = tuple(resolve_query(q) for q in queries)
         if timeout_s is None:
             timeout_s = self.config.timeout_s
         req = ServiceRequest(next(self._ids), resolved, traffic_class,
-                             timeout_s)
+                             timeout_s, aggregate=aggregate)
         self._submitted.inc()
         self._queries.inc(len(resolved))
         with self._lock:
@@ -156,7 +179,7 @@ class MiningService:
         with (tr.span("tick", cat="serve", requests=len(batch))
               if tr.enabled else nullcontext()):
             now = time.monotonic()
-            groups: dict[str, list] = {}
+            groups: dict[tuple, list] = {}
             for req in batch:
                 if req.expired(now):
                     self._timeouts.inc()
@@ -168,7 +191,8 @@ class MiningService:
                 found = {}
                 if self.cache is not None:
                     for q in req.queries:
-                        hit, v = self.cache.get(self.version, q)
+                        hit, v = self.cache.get(
+                            self.version, self._cache_key(req.aggregate, q))
                         if hit:
                             found[q] = v
                 missing = [q for q in req.queries if q not in found]
@@ -176,14 +200,23 @@ class MiningService:
                     self._complete(req, found, from_cache=True)
                     summary["cached"] += 1
                     continue
-                groups.setdefault(req.traffic_class, []).append(
-                    (req, found, missing))
-            for tc, group in groups.items():
-                self._execute_group(tc, group, summary)
+                # counts and aggregates never share a forest: the group
+                # key carries the op so each merged schedule is homogeneous
+                groups.setdefault((req.traffic_class, req.aggregate),
+                                  []).append((req, found, missing))
+            for (tc, agg), group in groups.items():
+                self._execute_group(tc, agg, group, summary)
         return summary
 
-    def _execute_group(self, tc: str, group: list, summary: dict) -> None:
-        """Merge one traffic class's requests into one forest and run it."""
+    @staticmethod
+    def _cache_key(aggregate: str | None, q):
+        """Result-cache key: op-tagged for aggregates so a weighted SUM
+        and a count of the same pattern occupy distinct entries."""
+        return q if aggregate is None else (aggregate, q)
+
+    def _execute_group(self, tc: str, agg: str | None, group: list,
+                       summary: dict) -> None:
+        """Merge one (traffic class, op) group into one forest and run it."""
         tr = self.telemetry.tracer
         worker = self.pool.worker(tc)
         union = list(dict.fromkeys(
@@ -191,9 +224,11 @@ class MiningService:
         # sharing accounting: each request alone vs the merged batch —
         # schedule() is forest-cached, so repeated mixes re-derive nothing
         indep = sum(
-            worker.schedule(missing).sharing_stats()["feed_passes"]["fused"]
+            worker.schedule(missing, aggregate=agg)
+            .sharing_stats()["feed_passes"]["fused"]
             for _req, _found, missing in group)
-        fused = worker.schedule(union).sharing_stats()["feed_passes"]["fused"]
+        fused = (worker.schedule(union, aggregate=agg)
+                 .sharing_stats()["feed_passes"]["fused"])
         self._feed_indep.inc(indep)
         self._feed_fused.inc(fused)
         summary["feed_passes"]["independent"] += indep
@@ -202,7 +237,8 @@ class MiningService:
             with (tr.span(f"execute:{tc}", cat="serve",
                           requests=len(group), queries=len(union))
                   if tr.enabled else nullcontext()):
-                counts = worker.count_many(union)
+                counts = (worker.count_many(union) if agg is None
+                          else worker.aggregate_many(union, op=agg))
         except Exception as e:           # noqa: BLE001 — routed per request
             for req, _found, _missing in group:
                 self._failed.inc()
@@ -212,7 +248,7 @@ class MiningService:
         by_query = dict(zip(union, counts))
         if self.cache is not None:
             for q, v in by_query.items():
-                self.cache.put(self.version, q, v)
+                self.cache.put(self.version, self._cache_key(agg, q), v)
         for req, found, _missing in group:
             self._complete(req, {**found, **by_query})
             summary["executed"] += 1
@@ -227,13 +263,15 @@ class MiningService:
                     from_cache=from_cache)
 
     # -------------------------------------------------------- conveniences
-    def query(self, queries, traffic_class: str = DEFAULT_CLASS,
-              timeout_s: float | None = None):
+    def query(self, queries, traffic_class: str | None = None,
+              timeout_s: float | None = None,
+              aggregate: str | None = None):
         """Synchronous submit + tick + result (single-threaded callers —
         e.g. ``launch/serve.py --mine`` round mode). Returns the result
         list for a sequence, the bare value for a single query."""
         single = isinstance(queries, (str, Pattern, Motif))
-        req = self.submit(queries, traffic_class, timeout_s)
+        req = self.submit(queries, traffic_class, timeout_s,
+                          aggregate=aggregate)
         if not req.done:
             self.tick()
         res = req.result(0)

@@ -14,7 +14,7 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from repro.kernels.ops import xvinter_mac
+from repro.kernels.ops import xvinter
 from .matrix import SparseCSC, SparseCSR
 
 
@@ -43,6 +43,6 @@ def spmsp_matmul(a: SparseCSR, b: SparseCSC, row_block: int = 64,
             AV = jnp.asarray(np.repeat(av, nc, axis=0))
             BK = jnp.asarray(np.tile(bk, (nr, 1)))
             BV = jnp.asarray(np.tile(bv, (nr, 1)))
-            vals = np.asarray(xvinter_mac(AK, AV, BK, BV, backend=backend))
+            vals = np.asarray(xvinter(AK, AV, BK, BV, backend=backend))
             out[np.repeat(rsel, nc), np.tile(csel, nr)] = vals
     return out

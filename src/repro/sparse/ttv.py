@@ -14,7 +14,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core.stream import SENTINEL, round_capacity
-from repro.kernels.ops import xvinter_mac
+from repro.kernels.ops import xvinter
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,6 +85,6 @@ def ttv(t: CSFTensor, vec_keys: np.ndarray, vec_vals: np.ndarray,
         VK = jnp.asarray(np.broadcast_to(vk, (nb, cap_v)))
         VV = jnp.asarray(np.broadcast_to(vv, (nb, cap_v)))
         out[f0:f1] = np.asarray(
-            xvinter_mac(jnp.asarray(fk), jnp.asarray(fv), VK, VV,
-                        backend=backend))
+            xvinter(jnp.asarray(fk), jnp.asarray(fv), VK, VV,
+                    backend=backend))
     return t.i_ids, t.j_ids, out

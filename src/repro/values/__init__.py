@@ -1,0 +1,17 @@
+"""SVPU value plane (paper §IV-E, §VI-I): weighted pattern mining.
+
+The value plane threads (key, value) stream pairs through the existing
+mining stack without adding dispatches: a weighted CSR carries one f32 per
+directed edge aligned with ``graph.csr`` key storage
+(``graph.with_edge_values`` / ``padded_value_rows``), aggregate plans stamp
+the count leaf with a value disposition (``mining.plan.compile_pattern``'s
+``aggregate=``), and the engine's aggregate leaf rides the same membership
+kernels as the unweighted leaf (``kernels.ops.xlevel_agg``) — the value
+lane is pure VPU work on tiles the count already visits.
+
+This package holds the parts that belong to neither the graph nor the
+kernels: per-(row, key) weight lookup against CSR storage (``plane``).
+"""
+from .plane import edge_value_lookup, prefix_scale
+
+__all__ = ["edge_value_lookup", "prefix_scale"]

@@ -1,0 +1,77 @@
+"""Value-plane lookups: per-(vertex, key) edge weights out of weighted CSR.
+
+The aggregate leaf (``mining.engine.WaveRunner._agg_body``) needs two weight
+sources the membership kernels cannot provide:
+
+* **prefix-prefix edges** — pattern edges wholly inside the matched prefix
+  (incl. the (0,1) feed edge). Their endpoints are per-item scalars, so the
+  weight is one lookup per item, folded into the kernel's per-row ``scale``
+  operand (``prefix_scale``).
+* **carry-covered candidate edges** — when a leaf reuses the parent's
+  survivor stream (``use_carry``) or has candidate-adjacent columns beyond
+  its own INTER refs, the membership test that proved candidate ∈ N(v_c)
+  happened at an *ancestor* level and its matched value was never captured.
+  ``edge_value_lookup`` recovers it per (item, slot).
+
+Both are the same primitive: a broadcast binary search of keys into each
+source vertex's CSR window [indptr[u], indptr[u+1]) — O(log max_degree)
+steps, branch-free, jit-safe (static step count from the graph's padded max
+degree). A miss (key not adjacent, or SENTINEL padding) yields 0.0, which
+downstream masking discards.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.csr import CSRGraph
+
+__all__ = ["edge_value_lookup", "prefix_scale"]
+
+
+def edge_value_lookup(g: CSRGraph, us, keys) -> jax.Array:
+    """Weight of edge (us[i], keys[i, ...]) per element; 0.0 on a miss.
+
+    ``us`` is (N,) int32 source vertices; ``keys`` is (N,) or (N, K) int32
+    target keys (SENTINEL padding allowed). Returns f32 of ``keys``' shape.
+    Lower-bound binary search into ``g.indices`` restricted to each source
+    vertex's neighbor window; step count is static (log2 of the padded max
+    degree), so the whole lookup traces into one fused XLA loop nest.
+    """
+    if g.edge_values is None:
+        raise ValueError("graph has no edge_values (see with_edge_values)")
+    us = jnp.asarray(us, jnp.int32)
+    keys = jnp.asarray(keys, jnp.int32)
+    kk = keys if keys.ndim == 2 else keys[:, None]
+    win_lo = g.indptr[us].astype(jnp.int32)
+    win_hi = g.indptr[us + 1].astype(jnp.int32)
+    lo = jnp.broadcast_to(win_lo[:, None], kk.shape)
+    hi = jnp.broadcast_to(win_hi[:, None], kk.shape)
+    last = g.indices.shape[0] - 1
+    # lower_bound: invariant indices[win_lo:lo] < key <= indices[hi:win_hi];
+    # once lo == hi the update is a no-op, so a static over-count of steps
+    # is safe
+    for _ in range(max(int(g.padded_max_degree).bit_length(), 1) + 1):
+        active = lo < hi
+        mid = (lo + hi) >> 1
+        go_right = active & (g.indices[jnp.clip(mid, 0, last)] < kk)
+        lo = jnp.where(go_right, mid + 1, lo)
+        hi = jnp.where(active & ~go_right, mid, hi)
+    idx = jnp.clip(lo, 0, last)
+    found = (lo < jnp.broadcast_to(win_hi[:, None], kk.shape)) \
+        & (g.indices[idx] == kk)
+    out = jnp.where(found, g.edge_values[idx], 0.0)
+    return out if keys.ndim == 2 else out[:, 0]
+
+
+def prefix_scale(g: CSRGraph, get: dict, edges) -> jax.Array:
+    """Per-item product of prefix-prefix pattern-edge weights.
+
+    ``get`` maps prefix column -> (N,) matched-vertex vector; ``edges`` is
+    the leaf's ``agg_scale_edges``. Empty ``edges`` yields ones — the
+    neutral scale operand."""
+    cols = next(iter(get.values()))
+    scale = jnp.ones((cols.shape[0],), jnp.float32)
+    for i, j in edges:
+        scale = scale * edge_value_lookup(g, get[i], get[j])
+    return scale

@@ -225,3 +225,69 @@ def test_apps_one_shots_warn_deprecation():
     with warnings.catch_warnings():
         warnings.simplefilter("error", DeprecationWarning)
         assert apps.shared_session(G).count("triangle") == n
+
+
+# ---------------------------------------------------------------------------
+# value traffic: aggregate requests on the ``values`` class
+# ---------------------------------------------------------------------------
+
+
+def _weighted_g():
+    from repro.graph import edge_weights, with_edge_values
+    from repro.graph.csr import edge_list
+    return with_edge_values(G, edge_weights(edge_list(G), seed=7))
+
+
+def test_aggregate_requests_route_and_match_sessions():
+    from repro.serving import VALUES_CLASS
+    gw = _weighted_g()
+    svc = MiningService(gw)
+    counts = svc.submit(["triangle", "4-clique"])
+    sums = svc.submit(["triangle", "4-clique"], aggregate="sum")
+    maxes = svc.submit("triangle", aggregate="max")
+    tick = svc.tick()
+    assert tick["executed"] == 3
+    assert sums.traffic_class == VALUES_CLASS
+    assert counts.traffic_class != VALUES_CLASS
+    ref = Miner(gw)
+    assert counts.result(0) == [ref.count("triangle"), ref.count("4-clique")]
+    assert sums.result(0) == [ref.aggregate("triangle", op="sum"),
+                              ref.aggregate("4-clique", op="sum")]
+    assert maxes.result(0)[0] == ref.aggregate("triangle", op="max")
+
+
+def test_aggregate_cache_keys_never_collide_with_counts():
+    gw = _weighted_g()
+    svc = MiningService(gw)
+    count = svc.query("triangle")
+    total = svc.query("triangle", aggregate="sum")
+    assert count != total          # int count vs f32 dyadic aggregate
+    # both repeats come from cache, each under its own key
+    c2 = svc.submit("triangle")
+    s2 = svc.submit("triangle", aggregate="sum")
+    tick = svc.tick()
+    assert tick["cached"] == 2 and tick["executed"] == 0
+    assert c2.result(0)[0] == count and c2.from_cache
+    assert s2.result(0)[0] == total and s2.from_cache
+    # a different op is a different key: it executes
+    r_min = svc.submit("triangle", aggregate="min")
+    assert svc.tick()["executed"] == 1
+    assert r_min.result(0)[0] == Miner(gw).aggregate("triangle", op="min")
+
+
+def test_aggregate_groups_batch_like_count_groups():
+    gw = _weighted_g()
+    svc = MiningService(gw, cache_results=False)
+    handles = [svc.submit(qs, aggregate="sum") for qs in MIXES]
+    tick = svc.tick()
+    assert tick["executed"] == len(MIXES)
+    fp = tick["feed_passes"]
+    assert fp["fused"] < fp["independent"]   # cross-request sharing holds
+    ref = Miner(gw)
+    for h, qs in zip(handles, MIXES):
+        assert h.result(0) == [ref.aggregate(q, op="sum") for q in qs]
+
+
+def test_aggregate_submit_rejects_unknown_op():
+    with pytest.raises(ValueError, match="aggregate must be one of"):
+        MiningService(_weighted_g()).submit("triangle", aggregate="avg")

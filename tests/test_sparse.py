@@ -51,3 +51,36 @@ def test_ttv_matches_dense(sparse_vec):
     got = np.zeros((12, 9), np.float32)
     got[ii, jj] = vv
     np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# pallas <-> XLA backend parity through the shared ops.xvinter entry
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.floats(0.05, 0.3), st.integers(0, 50))
+def test_spmm_backend_parity(density, seed):
+    a_d = _rand_sparse_dense(35, 25, density, seed)
+    b_d = _rand_sparse_dense(25, 20, density, seed + 1)
+    a, b = from_dense(a_d), from_dense(b_d, "csc")
+    cx = spmsp_matmul(a, b, backend="xla")
+    cp = spmsp_matmul(a, b, row_block=8, col_block=8, backend="pallas")
+    np.testing.assert_allclose(cp, cx, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 50))
+def test_ttv_backend_parity(seed):
+    t = random_csf((10, 8, 24), 160, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    keys = np.sort(rng.choice(24, size=9, replace=False)).astype(np.int32)
+    vals = rng.normal(size=9).astype(np.float32)
+    outs = {}
+    for backend in ("xla", "pallas"):
+        ii, jj, vv = ttv(t, keys, vals, fiber_block=64, backend=backend)
+        dense = np.zeros((10, 8), np.float32)
+        dense[np.asarray(ii), np.asarray(jj)] = np.asarray(vv)
+        outs[backend] = dense
+    np.testing.assert_allclose(outs["pallas"], outs["xla"],
+                               rtol=1e-5, atol=1e-6)
